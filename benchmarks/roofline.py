@@ -1,0 +1,133 @@
+"""Roofline analysis from the dry-run artifacts.
+
+Reads experiments/dryrun/*.json (full-config compile: memory proof,
+collective counts) and *.probe.json (scan-corrected FLOPs/bytes/
+collective bytes — XLA cost analysis counts while-loop bodies once, so
+per-layer costs are extrapolated from 1-/2-layer probe compiles).
+
+Per (arch x shape x mesh) cell:
+  compute_term    = FLOPs_total   / (chips * 197e12  bf16 FLOP/s)
+  memory_term     = bytes_total   / (chips * 819e9   B/s HBM)
+  collective_term = coll_bytes    / (chips * 50e9    B/s ICI per link)
+  dominant        = argmax of the three
+  model_flops     = 6 * N_active * tokens   (x3 for the backward pass is
+                    included in HLO flops; the ratio uses train fwd+bwd)
+  efficiency      = model_flops / FLOPs_total
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+from typing import Dict, Optional
+
+CHIP_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+# N_active parameters (backbone, approx) for MODEL_FLOPS = 6*N_active*D
+ACTIVE_PARAMS = {
+    "whisper-large-v3": 1.54e9,
+    "olmoe-1b-7b": 1.3e9,
+    "deepseek-v3-671b": 37e9,
+    "granite-34b": 33.7e9,
+    "gemma2-27b": 27.2e9,
+    "starcoder2-3b": 3.0e9,
+    "gemma2-9b": 9.2e9,
+    "mamba2-370m": 0.37e9,
+    "pixtral-12b": 12.2e9,
+    "zamba2-7b": 6.7e9,
+}
+
+
+def load_cells(root: Path, mesh: str = "single") -> Dict[str, Dict]:
+    cells = {}
+    for f in sorted(root.glob(f"*_{mesh}.json")):
+        r = json.loads(f.read_text())
+        tag = f"{r['arch']}|{r['shape']}"
+        probe = root / (f.stem + ".probe.json")
+        if probe.exists():
+            p = json.loads(probe.read_text())
+            r["flops_c"] = p["flops_corrected"]
+            r["bytes_c"] = p["bytes_corrected"]
+            r["coll_c"] = sum(p["collectives_corrected"].values())
+        else:
+            r["flops_c"] = r["flops"]
+            r["bytes_c"] = r["bytes_accessed"]
+            r["coll_c"] = sum(v for k, v in r["collectives"].items()
+                              if k != "count")
+        cells[tag] = r
+    return cells
+
+
+def model_flops(arch: str, shape_kind: str, seq: int, gbatch: int) -> float:
+    n = ACTIVE_PARAMS[arch]
+    if shape_kind == "train":
+        return 6.0 * n * seq * gbatch
+    if shape_kind == "prefill":
+        return 2.0 * n * seq * gbatch
+    return 2.0 * n * 1 * gbatch          # decode: one token per sequence
+
+
+def analyse(cell: Dict) -> Dict:
+    chips = cell["n_devices"]
+    # cost_analysis numbers are per-device; probe-corrected values inherit
+    # that convention -> totals = value * chips.
+    flops_total = cell["flops_c"] * chips
+    bytes_total = cell["bytes_c"] * chips
+    coll_total = cell["coll_c"] * chips
+    compute_t = flops_total / (chips * CHIP_FLOPS)
+    memory_t = bytes_total / (chips * HBM_BW)
+    coll_t = coll_total / (chips * ICI_BW)
+    dom = max(("compute", compute_t), ("memory", memory_t),
+              ("collective", coll_t), key=lambda kv: kv[1])[0]
+    mf = model_flops(cell["arch"], cell["kind"], cell["seq"],
+                     cell["global_batch"])
+    eff = mf / flops_total if flops_total else 0.0
+    bound = max(compute_t, memory_t, coll_t)
+    ideal = mf / (chips * CHIP_FLOPS)
+    frac = ideal / bound if bound > 0 else 0.0
+    mem = cell["memory"]
+    # donated caches alias their outputs: count them once
+    per_dev_bytes = mem["argument_bytes"] + mem["temp_bytes"] + \
+        max(0, mem["output_bytes"] - mem["alias_bytes"])
+    return {
+        "arch": cell["arch"], "shape": cell["shape"], "kind": cell["kind"],
+        "compute_s": compute_t, "memory_s": memory_t, "collective_s": coll_t,
+        "dominant": dom, "model_flops": mf, "hlo_flops": flops_total,
+        "efficiency": eff, "roofline_frac": frac,
+        "mem_gib": per_dev_bytes / 2 ** 30,
+        "fits_hbm": per_dev_bytes <= 16 * 2 ** 30,
+    }
+
+
+def table(root: str = "experiments/final", mesh: str = "single") -> str:
+    cells = load_cells(Path(root), mesh)
+    multi = load_cells(Path(root), "multi")
+    lines = ["| arch | shape | compute s | memory s | coll s | dominant | "
+             "MODEL/HLO | roofline frac | GiB/dev | fits | multi GiB |",
+             "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for tag in sorted(cells):
+        a = analyse(cells[tag])
+        m_gib = ""
+        if tag in multi:
+            am = analyse(multi[tag])
+            m_gib = f"{am['mem_gib']:.1f}{'' if am['fits_hbm'] else '!'}"
+        lines.append(
+            f"| {a['arch']} | {a['shape']} | {a['compute_s']:.3e} | "
+            f"{a['memory_s']:.3e} | {a['collective_s']:.3e} | "
+            f"{a['dominant']} | {a['efficiency']:.2f} | "
+            f"{a['roofline_frac']:.2f} | {a['mem_gib']:.1f} | "
+            f"{'Y' if a['fits_hbm'] else 'N'} | {m_gib} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    root = sys.argv[1] if len(sys.argv) > 1 else "experiments/final"
+    print(table(root))
+
+
+if __name__ == "__main__":
+    main()

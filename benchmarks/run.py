@@ -1,0 +1,88 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  fig3_utility[...]   total job utility per scheduler x #jobs   (Fig. 3)
+  fig4_timeliness[..] mean |completion - target| per scheduler  (Fig. 4)
+  fig5_ratio[...]     OPT / OASiS on exact-solvable instances   (Fig. 5)
+  fig6_estimate[...]  utility under mis-estimated U/L           (Fig. 6)
+  latency[...]        per-decision scheduler latency            (fn. 4)
+  minplus[...]        scheduler DP kernel micro-benchmarks
+
+``--quick`` shrinks instance sizes.  The roofline table is a separate
+consumer of the dry-run artifacts: ``python -m benchmarks.roofline``.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _kernel_micro() -> list:
+    import jax
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.kernels.minplus.ref import minplus_ref
+    from repro.core.subroutine import minplus_band
+
+    rows = []
+    rng = np.random.default_rng(0)
+    prev = jnp.asarray(rng.random(4096).astype(np.float32))
+    row = jnp.asarray(rng.random(257).astype(np.float32))
+    f = jax.jit(minplus_ref)
+    f(row, prev)[0].block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(20):
+        f(row, prev)[0].block_until_ready()
+    us = (time.perf_counter() - t0) / 20 * 1e6
+    rows.append(f"minplus_xla[D=4096;DC=256],{us:.0f},")
+
+    pnp = np.asarray(prev)
+    rnp = np.asarray(row)
+    t0 = time.perf_counter()
+    for _ in range(20):
+        minplus_band(pnp, rnp)
+    us = (time.perf_counter() - t0) / 20 * 1e6
+    rows.append(f"minplus_numpy[D=4096;DC=256],{us:.0f},")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig3,fig4,fig5,fig6,latency,kernels")
+    args = ap.parse_args()
+    from benchmarks import figs
+
+    which = set((args.only or "fig3,fig4,fig5,fig6,latency,kernels"
+                 ).split(","))
+    rows = []
+    t_all = time.time()
+    if "fig3" in which:
+        rows += figs.fig3_total_utility(
+            sizes=(20, 40) if args.quick else (20, 40, 60, 80))
+    if "fig4" in which:
+        rows += figs.fig4_timeliness(n=30 if args.quick else 50)
+    if "fig5" in which:
+        rows += figs.fig5_perf_ratio(seeds=(0, 1) if args.quick
+                                     else (0, 1, 2, 3, 4))
+    if "fig6" in which:
+        rows += figs.fig6_estimates(n=30 if args.quick else 60)
+    if "latency" in which:
+        rows += figs.latency_table(T=100 if args.quick else 300,
+                                   n=10 if args.quick else 20)
+    if "kernels" in which:
+        rows += _kernel_micro()
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r)
+    print(f"# total benchmark wall time: {time.time()-t_all:.1f}s",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

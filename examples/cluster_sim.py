@@ -1,0 +1,56 @@
+"""Reproduce the paper's headline comparison (Figs. 3-4) at configurable
+scale and print a small ASCII chart.
+
+    PYTHONPATH=src python examples/cluster_sim.py --jobs 60 --T 100
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.sim import make_cluster, make_jobs, simulate
+
+
+def bar(v, vmax, width=40):
+    n = int(width * v / max(vmax, 1e-9))
+    return "#" * n
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jobs", type=int, default=60)
+    ap.add_argument("--T", type=int, default=100)
+    ap.add_argument("--servers", type=int, default=20)
+    ap.add_argument("--seeds", type=int, default=3)
+    args = ap.parse_args()
+
+    totals = {}
+    gaps = {}
+    for seed in range(args.seeds):
+        cluster = make_cluster(T=args.T, H=args.servers, K=args.servers)
+        jobs = make_jobs(args.jobs, T=args.T, seed=seed, small=False)
+        for name in ["oasis", "fifo", "drf", "rrh", "dorm"]:
+            kw = dict(quantum=0) if name == "oasis" else {}
+            r = simulate(cluster, jobs, scheduler=name, check=False, **kw)
+            totals.setdefault(name, []).append(r.total_utility)
+            if r.target_gap:
+                gaps.setdefault(name, []).extend(r.target_gap)
+
+    print(f"== total job utility (mean of {args.seeds} seeds; Fig. 3) ==")
+    means = {k: float(np.mean(v)) for k, v in totals.items()}
+    vmax = max(means.values())
+    for k, v in sorted(means.items(), key=lambda kv: -kv[1]):
+        print(f"{k:6s} {v:9.1f}  {bar(v, vmax)}")
+
+    print(f"\n== completion - target time (mean abs; Fig. 4) ==")
+    for k in means:
+        g = gaps.get(k, [])
+        print(f"{k:6s} {np.mean(np.abs(g)) if g else float('nan'):8.2f} "
+              f"(n={len(g)})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""End-to-end driver: OASiS schedules a real training job, and the elastic
+runtime executes it — re-meshing between slots as the planned worker
+count changes, with async checkpointing and exact data-cursor resume.
+
+The model is a ~100M-param dense transformer (use --tiny for CI).  On
+this CPU container "workers" map to dp slices of the host mesh; on a
+real cluster the identical driver re-shards across pods.
+
+    PYTHONPATH=src python examples/elastic_training.py --steps 300
+    PYTHONPATH=src python examples/elastic_training.py --tiny
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import OASiS, job_from_arch, price_params_from_jobs
+from repro.data.pipeline import DataConfig, DataPipeline
+from repro.models import init_model
+from repro.models.config import ModelConfig
+from repro.runtime.elastic import ElasticTrainer, SlotPlan, schedule_to_plan
+from repro.sim import make_cluster
+from repro.train.optimizer import OptConfig, init_opt
+from repro.train.steps import make_train_step
+
+M100 = ModelConfig(name="m100", family="dense", n_layers=10, d_model=768,
+                   n_heads=12, n_kv_heads=4, head_dim=64, d_ff=3072,
+                   vocab_size=32000, dtype="float32", param_dtype="float32",
+                   remat=False)
+TINY = M100.scaled(name="m-tiny", n_layers=2, d_model=128, d_ff=256,
+                   vocab_size=512)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt", default="/tmp/repro_elastic_ckpt")
+    args = ap.parse_args()
+    cfg = TINY if args.tiny else M100
+    if args.tiny:
+        args.steps = min(args.steps, 30)
+
+    # 1) OASiS plans the job: resource terms derived from the model itself
+    cluster = make_cluster(T=50, H=10, K=10)
+    from repro.models.layers import is_spec
+    from repro.models.model import model_specs
+    specs, _ = jax.tree_util.tree_flatten(model_specs(cfg), is_leaf=is_spec)
+    n_params = sum(int(np.prod(s.shape)) for s in specs)
+    job = job_from_arch(cfg.name, arrival=0, flops_per_token=6 * n_params,
+                        param_bytes=4 * n_params,
+                        tokens_per_step=args.seq * args.batch,
+                        target_steps=args.steps)
+    sched = OASiS(cluster, price_params_from_jobs([job], cluster))
+    s = sched.on_arrival(job)
+    assert s is not None, "job rejected?!"
+    plan = schedule_to_plan(s)
+    steps_per_slot = max(1, args.steps // max(len(plan), 1))
+    plan = plan[:max(1, args.steps // steps_per_slot)]
+    print(f"OASiS plan: finish={s.finish} payoff={s.payoff:.2f} "
+          f"workers/slot={[p.n_workers for p in plan]}")
+
+    # 2) elastic execution of the plan
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                          global_batch=args.batch, seed=0)
+    opt_cfg = OptConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps,
+                        weight_decay=0.01)
+
+    def make_step(mesh):
+        fn, in_sh, out_sh = make_train_step(cfg, mesh, opt_cfg)
+        jfn = jax.jit(fn)
+        def wrapped(params, opt, batch):
+            return jfn(params, opt, {k: jnp.asarray(v)
+                                     for k, v in batch.items()})
+        return wrapped, in_sh[0], in_sh[1]
+
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    opt = init_opt(params, opt_cfg)
+    trainer = ElasticTrainer(cfg, opt_cfg, data_cfg, args.ckpt, make_step,
+                             steps_per_slot=steps_per_slot)
+    t0 = time.time()
+    out = trainer.run(plan, params, opt)
+    dt = time.time() - t0
+    ces = [m["ce"] for m in trainer.metrics_log]
+    n = max(1, len(ces) // 10)
+    print(f"\ntrained {out['steps']} steps in {dt:.0f}s "
+          f"({n_params/1e6:.1f}M params); dp widths used: "
+          f"{trainer.mesh_history}")
+    print(f"loss: first10={np.mean(ces[:n]):.3f} last10={np.mean(ces[-n:]):.3f}")
+    assert np.mean(ces[-n:]) < np.mean(ces[:n]), "loss did not decrease"
+    print("OK: loss decreased across elastic re-meshes")
+
+
+if __name__ == "__main__":
+    main()

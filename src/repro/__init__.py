@@ -1,0 +1,3 @@
+"""repro - OASiS online ML-cluster scheduling + multi-pod JAX training framework."""
+
+__version__ = "0.1.0"

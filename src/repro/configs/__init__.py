@@ -1,0 +1,53 @@
+"""Assigned architecture configs.  ``get_config(name)`` returns the full
+published config; ``get_smoke(name)`` a reduced same-family variant for
+CPU tests.  ``SHAPES`` defines the assigned input-shape cells."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, List, Tuple
+
+from ..models.config import ModelConfig, smoke_variant
+
+ARCHS = [
+    "whisper_large_v3", "olmoe_1b_7b", "deepseek_v3_671b", "granite_34b",
+    "gemma2_27b", "starcoder2_3b", "gemma2_9b", "mamba2_370m",
+    "pixtral_12b", "zamba2_7b",
+]
+
+# (shape_name, seq_len, global_batch, kind)
+SHAPES: List[Tuple[str, int, int, str]] = [
+    ("train_4k", 4096, 256, "train"),
+    ("prefill_32k", 32768, 32, "prefill"),
+    ("decode_32k", 32768, 128, "decode"),
+    ("long_500k", 524288, 1, "decode"),
+]
+
+# long_500k only for sub-quadratic families (see DESIGN.md §Arch-applicability)
+LONG_OK = {"mamba2_370m", "zamba2_7b", "gemma2_9b", "gemma2_27b"}
+
+
+def norm_name(name: str) -> str:
+    return name.replace("-", "_")
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f".{norm_name(name)}", __package__)
+    return mod.CONFIG
+
+
+def get_smoke(name: str) -> ModelConfig:
+    return smoke_variant(get_config(name))
+
+
+def cells(arch: str) -> List[Tuple[str, int, int, str]]:
+    out = []
+    for shape, seq, gb, kind in SHAPES:
+        if shape == "long_500k" and norm_name(arch) not in LONG_OK:
+            continue
+        out.append((shape, seq, gb, kind))
+    return out
+
+
+def all_cells() -> List[Tuple[str, str, int, int, str]]:
+    return [(a, *c) for a in ARCHS for c in cells(a)]

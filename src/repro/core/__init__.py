@@ -1,0 +1,6 @@
+"""OASiS core: online primal-dual job scheduling (the paper's contribution)."""
+from .types import ClusterSpec, Job, Schedule, SigmoidUtility, job_from_arch
+from .pricing import PriceParams, PriceState, price_params_from_jobs
+from .subroutine import best_schedule, best_schedule_ref
+from .oasis import OASiS
+from .baselines import BASELINES, DRF, Dorm, FIFO, RRH

@@ -1,0 +1,255 @@
+"""Baseline schedulers from the paper's evaluation (Sec. V-A):
+
+FIFO, DRF (dominant-resource fairness), RRH (risk-reward heuristic),
+and a Dorm-like utilization-maximizing repacker.  All are *reactive*
+slot-steppers sharing one interface so the simulator can drive any of
+them interchangeably with OASiS.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .types import ClusterSpec, Job, R
+
+
+def _place(count: int, free: np.ndarray, demand: np.ndarray) -> Optional[np.ndarray]:
+    """Round-robin placement of ``count`` instances onto servers.
+
+    free: (S, R) remaining capacity (mutated on success).  Returns per-server
+    counts or None if the pool cannot host all instances.
+    """
+    S = free.shape[0]
+    out = np.zeros(S, dtype=np.int64)
+    if count == 0:
+        return out
+    placed = 0
+    for rounds in range(count):
+        progressed = False
+        for srv in range(S):
+            if placed >= count:
+                break
+            if np.all(free[srv] >= demand - 1e-9):
+                free[srv] -= demand
+                out[srv] += 1
+                placed += 1
+                progressed = True
+        if placed >= count:
+            break
+        if not progressed:
+            # rollback
+            for srv in range(S):
+                free[srv] += out[srv] * demand
+            return None
+    if placed < count:
+        for srv in range(S):
+            free[srv] += out[srv] * demand
+        return None
+    return out
+
+
+class ReactiveScheduler:
+    """Base class: admit-all, allocate per slot."""
+
+    name = "base"
+
+    def __init__(self, cluster: ClusterSpec, fixed_workers: int = 8):
+        self.cluster = cluster
+        self.fixed_workers = fixed_workers
+        self.jobs: Dict[int, Job] = {}
+        self.unfinished: List[int] = []    # insertion == arrival order
+        self.alloc: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        self.dirty = True
+
+    # -- events -------------------------------------------------------------
+    def on_arrival(self, job: Job, t: int) -> bool:
+        self.jobs[job.jid] = job
+        self.unfinished.append(job.jid)
+        self.dirty = True
+        return True          # admit-all
+
+    def on_completion(self, jid: int, t: int) -> None:
+        if jid in self.unfinished:
+            self.unfinished.remove(jid)
+        self.alloc.pop(jid, None)
+        self.dirty = True
+
+    def _counts(self, job: Job) -> Tuple[int, int]:
+        n = min(self.fixed_workers, job.num_chunks)
+        return n, job.ps_for(n)
+
+    def step(self, t: int) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
+        raise NotImplementedError
+
+
+class FIFO(ReactiveScheduler):
+    """Jobs served strictly in arrival order with fixed worker counts."""
+
+    name = "fifo"
+
+    def step(self, t: int) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
+        free_w = self.cluster.worker_caps.astype(float).copy()
+        free_s = self.cluster.ps_caps.astype(float).copy()
+        out: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        # running jobs keep their placement (deduct first)
+        for jid in self.unfinished:
+            if jid in self.alloc:
+                y, z = self.alloc[jid]
+                job = self.jobs[jid]
+                free_w -= y[:, None] * job.worker_res[None]
+                free_s -= z[:, None] * job.ps_res[None]
+                out[jid] = (y, z)
+        # admit queued jobs head-of-line
+        for jid in self.unfinished:
+            if jid in self.alloc:
+                continue
+            job = self.jobs[jid]
+            nw, nps = self._counts(job)
+            y = _place(nw, free_w, job.worker_res)
+            if y is None:
+                break                        # FIFO head-of-line blocking
+            z = _place(nps, free_s, job.ps_res)
+            if z is None:
+                free_w += y[:, None] * job.worker_res[None]
+                break
+            self.alloc[jid] = (y, z)
+            out[jid] = (y, z)
+        return out
+
+
+class DRF(ReactiveScheduler):
+    """Dominant-resource max-min fairness via progressive filling."""
+
+    name = "drf"
+
+    def step(self, t: int) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
+        free_w = self.cluster.worker_caps.astype(float).copy()
+        free_s = self.cluster.ps_caps.astype(float).copy()
+        total_w = np.maximum(self.cluster.worker_caps.sum(axis=0), 1e-9)
+        counts = {jid: 0 for jid in self.unfinished}
+        shares = {jid: 0.0 for jid in self.unfinished}
+        placements = {jid: (np.zeros(self.cluster.H, dtype=np.int64),
+                            np.zeros(self.cluster.K, dtype=np.int64))
+                      for jid in self.unfinished}
+        blocked: set = set()
+        while len(blocked) < len(counts):
+            cand = [j for j in self.unfinished if j not in blocked]
+            if not cand:
+                break
+            jid = min(cand, key=lambda j: shares[j])
+            job = self.jobs[jid]
+            if counts[jid] >= job.num_chunks:
+                blocked.add(jid)
+                continue
+            y = _place(1, free_w, job.worker_res)
+            if y is None:
+                blocked.add(jid)
+                continue
+            need_ps = job.ps_for(counts[jid] + 1) - int(placements[jid][1].sum())
+            z = _place(need_ps, free_s, job.ps_res) if need_ps > 0 else np.zeros(
+                self.cluster.K, dtype=np.int64)
+            if z is None:
+                free_w += y[:, None] * job.worker_res[None]
+                blocked.add(jid)
+                continue
+            counts[jid] += 1
+            placements[jid] = (placements[jid][0] + y, placements[jid][1] + z)
+            dom = np.max(counts[jid] * job.worker_res / total_w)
+            shares[jid] = float(dom)
+        return {j: pl for j, pl in placements.items() if pl[0].sum() > 0}
+
+
+class RRH(ReactiveScheduler):
+    """Risk-reward heuristic [Irwin et al., HPDC'04 as used in the paper]:
+    admit iff estimated utility minus a delay cost clears a threshold;
+    running jobs keep fixed counts, paused jobs resume by payoff density."""
+
+    name = "rrh"
+
+    def __init__(self, cluster: ClusterSpec, fixed_workers: int = 8,
+                 delay_penalty: float = 0.5, threshold: float = 0.0):
+        super().__init__(cluster, fixed_workers)
+        self.delay_penalty = delay_penalty
+        self.threshold = threshold
+
+    def on_arrival(self, job: Job, t: int) -> bool:
+        nw, _ = self._counts(job)
+        est_dur = math.ceil(job.total_work_slots / max(nw, 1))
+        backlog = len(self.unfinished)
+        reward = job.utility(est_dur) - self.delay_penalty * backlog
+        if reward <= self.threshold:
+            return False
+        return super().on_arrival(job, t)
+
+    def step(self, t: int) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
+        free_w = self.cluster.worker_caps.astype(float).copy()
+        free_s = self.cluster.ps_caps.astype(float).copy()
+        out: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        for jid in self.unfinished:           # running keep allocation
+            if jid in self.alloc:
+                y, z = self.alloc[jid]
+                job = self.jobs[jid]
+                free_w -= y[:, None] * job.worker_res[None]
+                free_s -= z[:, None] * job.ps_res[None]
+                out[jid] = (y, z)
+        # resume/start paused jobs in order of payoff density
+        waiting = [j for j in self.unfinished if j not in self.alloc]
+        def density(jid: int) -> float:
+            job = self.jobs[jid]
+            nw, _ = self._counts(job)
+            dur = math.ceil(job.total_work_slots / max(nw, 1))
+            return -job.utility(dur + (t - job.arrival)) / max(
+                nw * job.worker_res.sum(), 1e-9)
+        for jid in sorted(waiting, key=density):
+            job = self.jobs[jid]
+            nw, nps = self._counts(job)
+            y = _place(nw, free_w, job.worker_res)
+            if y is None:
+                continue
+            z = _place(nps, free_s, job.ps_res)
+            if z is None:
+                free_w += y[:, None] * job.worker_res[None]
+                continue
+            self.alloc[jid] = (y, z)
+            out[jid] = (y, z)
+        return out
+
+
+class Dorm(ReactiveScheduler):
+    """Dorm-like repacking: on each event maximize cluster utilization
+    subject to round-robin fairness (MILP of [18] approximated greedily)."""
+
+    name = "dorm"
+
+    def step(self, t: int) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
+        free_w = self.cluster.worker_caps.astype(float).copy()
+        free_s = self.cluster.ps_caps.astype(float).copy()
+        placements = {jid: (np.zeros(self.cluster.H, dtype=np.int64),
+                            np.zeros(self.cluster.K, dtype=np.int64))
+                      for jid in self.unfinished}
+        counts = {jid: 0 for jid in self.unfinished}
+        progress = True
+        while progress:                       # round-robin water filling
+            progress = False
+            for jid in self.unfinished:
+                job = self.jobs[jid]
+                if counts[jid] >= job.num_chunks:
+                    continue
+                y = _place(1, free_w, job.worker_res)
+                if y is None:
+                    continue
+                need_ps = job.ps_for(counts[jid] + 1) - int(placements[jid][1].sum())
+                z = _place(need_ps, free_s, job.ps_res) if need_ps > 0 else np.zeros(
+                    self.cluster.K, dtype=np.int64)
+                if z is None:
+                    free_w += y[:, None] * job.worker_res[None]
+                    continue
+                counts[jid] += 1
+                placements[jid] = (placements[jid][0] + y, placements[jid][1] + z)
+                progress = True
+        return {j: pl for j, pl in placements.items() if pl[0].sum() > 0}
+
+
+BASELINES = {"fifo": FIFO, "drf": DRF, "rrh": RRH, "dorm": Dorm}

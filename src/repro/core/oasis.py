@@ -1,0 +1,75 @@
+"""Alg. 1 — OASiS online admission + scheduling loop."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+from .pricing import PriceParams, PriceState
+from .subroutine import best_schedule, best_schedule_ref
+from .types import ClusterSpec, Job, Schedule
+
+
+class OASiS:
+    """Online scheduler: admit iff the best schedule has positive payoff.
+
+    ``impl`` selects the dual-subroutine backend:
+      * ``"ref"``    — loop-faithful Alg. 2 (test oracle; slow)
+      * ``"fast"``   — vectorized numpy (default)
+      * ``"jax"``    — vectorized with the JAX/Pallas min-plus DP sweep
+    """
+
+    def __init__(self, cluster: ClusterSpec, params: PriceParams,
+                 impl: str = "fast", track_duality: bool = False):
+        self.cluster = cluster
+        self.state = PriceState(cluster, params)
+        self.impl = impl
+        self.accepted: Dict[int, Schedule] = {}
+        self.rejected: List[int] = []
+        self.total_utility = 0.0
+        self.decision_seconds: List[float] = []
+        # Lemma-2 instrumentation: per-accepted-job primal/dual increments
+        # (P_i - P_{i-1}, D_i - D_{i-1}); tests assert the allocation-cost
+        # relationship  ΔP >= ΔD / alpha  that drives Theorem 4.
+        self.track_duality = track_duality
+        self.primal_deltas: List[float] = []
+        self.dual_deltas: List[float] = []
+
+    # -- Alg. 1 "upon arrival of job i" ------------------------------------
+    def on_arrival(self, job: Job) -> Optional[Schedule]:
+        t0 = time.perf_counter()
+        if self.impl == "ref":
+            sched = best_schedule_ref(job, self.state)
+        elif self.impl == "jax":
+            sched = best_schedule(job, self.state, use_jax=True)
+        else:
+            sched = best_schedule(job, self.state)
+        self.decision_seconds.append(time.perf_counter() - t0)
+        if sched is None:                       # mu_i <= 0 -> reject
+            self.rejected.append(job.jid)
+            return None
+        # lines 5-11: commit allocations, bump prices
+        if self.track_duality:
+            p0 = self.state.worker_prices()
+            q0 = self.state.ps_prices()
+        self.state.commit(job, sched.workers, sched.ps)
+        if self.track_duality:
+            p1 = self.state.worker_prices()
+            q1 = self.state.ps_prices()
+            # ΔD = mu_i + Σ (p' - p) c_h + Σ (q' - q) c_k   (Lemma 2)
+            d_delta = sched.payoff
+            d_delta += float(((p1 - p0) *
+                              self.cluster.worker_caps[None]).sum())
+            d_delta += float(((q1 - q0) * self.cluster.ps_caps[None]).sum())
+            self.primal_deltas.append(sched.utility)
+            self.dual_deltas.append(d_delta)
+        self.accepted[job.jid] = sched
+        self.total_utility += sched.utility
+        return sched
+
+    # -- views used by the simulator ---------------------------------------
+    def allocation_at(self, t: int) -> Dict[int, tuple]:
+        out = {}
+        for jid, sched in self.accepted.items():
+            if t in sched.workers:
+                out[jid] = (sched.workers[t], sched.ps.get(t))
+        return out

@@ -1,0 +1,143 @@
+"""Dual price functions (paper eq. (22)-(26)) and mutable price state.
+
+Prices are maintained per (slot t, server, resource r):
+
+    p_h^r(t) = L1 * (U1^r / L1) ** (g_h^r(t) / c_h^r)        (workers pool)
+    q_k^r(t) = L2 * (U2^r / L2) ** (v_k^r(t) / c_k^r)        (PS pool)
+
+``U`` bounds are the max per-unit-resource utility over jobs, ``L`` the
+min unit-time-unit-resource utility scaled by 1/(4*eta).  In the online
+setting the exact values need future knowledge, so the operator supplies
+*estimates* (benchmarks/fig6 sweeps their accuracy).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import numpy as np
+
+from .types import ClusterSpec, Job, R
+
+
+@dataclasses.dataclass(frozen=True)
+class PriceParams:
+    U1: np.ndarray  # (R,)
+    U2: np.ndarray  # (R,)
+    L1: float
+    L2: float
+
+    def scaled(self, factor: float) -> "PriceParams":
+        """Scale the U/L *ratio* by ``factor`` keeping L fixed (Fig. 6 sweeps)."""
+        ratio1 = np.maximum(self.U1 / self.L1, 1.0 + 1e-6) ** factor
+        ratio2 = np.maximum(self.U2 / self.L2, 1.0 + 1e-6) ** factor
+        return PriceParams(U1=self.L1 * ratio1, U2=self.L2 * ratio2,
+                           L1=self.L1, L2=self.L2)
+
+    @property
+    def alpha(self) -> float:
+        """Competitive-ratio parameter: alpha = max_r(1, ln U1/L1, ln U2/L2)."""
+        a = 1.0
+        for r in range(len(self.U1)):
+            if self.L1 > 0 and self.U1[r] > 0:
+                a = max(a, math.log(max(self.U1[r] / self.L1, 1.0)))
+            if self.L2 > 0 and self.U2[r] > 0:
+                a = max(a, math.log(max(self.U2[r] / self.L2, 1.0)))
+        return a
+
+
+def price_params_from_jobs(jobs: Sequence[Job], cluster: ClusterSpec,
+                           floor_frac: float = 0.05) -> PriceParams:
+    """U1^r, U2^r (23)(24) and L1, L2 (25)(26) from a job population.
+
+    ``floor_frac`` clamps each job's worst-case utility f_i(T - a_i) to
+    at least floor_frac * f_i(best): the paper's literal min degenerates
+    to ~0 whenever a time-critical sigmoid job exists (f(T-a) is doubly-
+    exponentially small), which disables the price filter entirely.  The
+    paper itself runs with *estimated* U/L "based on past experience"
+    (Sec. IV-B, Fig. 6); this is that estimator.  Pass floor_frac=0 for
+    the literal formulas (used by the competitive-ratio tests — the
+    Theorem-4 bound is w.r.t. the literal values).
+    """
+    T = cluster.T
+    U1 = np.zeros(R)
+    U2 = np.zeros(R)
+    L1_num = math.inf
+    L2_num = math.inf
+    eta1_inv = math.inf  # min over i of the eta_1 bound RHS
+    eta2_inv = math.inf
+    cap_w = float(cluster.worker_caps.sum())
+    cap_s = float(cluster.ps_caps.sum())
+    for job in jobs:
+        f_max = job.utility(job.min_duration)          # best achievable utility
+        f_min = job.utility(T - job.arrival)           # worst (finish at T)
+        f_min = max(f_min, floor_frac * f_max)
+        total_work = math.ceil(job.total_work_slots)  # ceil(E N M (tau+2e/b))
+        for r in range(R):
+            if job.worker_res[r] > 0:
+                U1[r] = max(U1[r], f_max / job.worker_res[r])
+            if job.ps_res[r] > 0:
+                U2[r] = max(U2[r], f_max / job.ps_res[r])
+        wsum = float(job.worker_res.sum())
+        ssum = float(job.ps_res.sum())
+        L1_num = min(L1_num, f_min / (total_work * wsum))
+        L2_num = min(L2_num, f_min / (total_work * ssum))
+        eta1_inv = min(eta1_inv, total_work * wsum / (T * cap_w))
+        eta2_inv = min(eta2_inv, total_work * ssum / (T * cap_s))
+    eta1 = 1.0 / max(eta1_inv, 1e-12)
+    eta2 = 1.0 / max(eta2_inv, 1e-12)
+    eta1 = max(eta1, 1.0)  # paper requires 1/eta <= 1
+    eta2 = max(eta2, 1.0)
+    L1 = L1_num / (4.0 * eta1)
+    L2 = L2_num / (4.0 * eta2)
+    # Guard degenerate resources (e.g. PS pool has no GPUs): keep U >= L so
+    # the exponential price is well defined; a zero-demand resource never
+    # contributes to cost anyway.
+    U1 = np.maximum(U1, L1 * (1.0 + 1e-9))
+    U2 = np.maximum(U2, L2 * (1.0 + 1e-9))
+    return PriceParams(U1=U1, U2=U2, L1=L1, L2=L2)
+
+
+class PriceState:
+    """Allocations g_h^r(t), v_k^r(t) and the derived price tables."""
+
+    def __init__(self, cluster: ClusterSpec, params: PriceParams):
+        self.cluster = cluster
+        self.params = params
+        T, H, K = cluster.T, cluster.H, cluster.K
+        self.g = np.zeros((T, H, R))   # allocated on worker servers
+        self.v = np.zeros((T, K, R))   # allocated on PS servers
+
+    # -- price tables -----------------------------------------------------
+    def worker_prices(self) -> np.ndarray:
+        """p (T, H, R) with p = L1 * (U1/L1)^(g/c)."""
+        c = np.maximum(self.cluster.worker_caps[None], 1e-12)
+        ratio = np.maximum(self.params.U1[None, None] / self.params.L1, 1.0 + 1e-9)
+        return self.params.L1 * ratio ** (self.g / c)
+
+    def ps_prices(self) -> np.ndarray:
+        c = np.maximum(self.cluster.ps_caps[None], 1e-12)
+        ratio = np.maximum(self.params.U2[None, None] / self.params.L2, 1.0 + 1e-9)
+        return self.params.L2 * ratio ** (self.v / c)
+
+    # -- bookkeeping (Alg. 1 lines 7-10) -----------------------------------
+    def commit(self, job: Job, workers: dict, ps: dict) -> None:
+        for t, y in workers.items():
+            self.g[t] += y[:, None] * job.worker_res[None, :]
+        for t, z in ps.items():
+            self.v[t] += z[:, None] * job.ps_res[None, :]
+
+    def release(self, job: Job, workers: dict, ps: dict) -> None:
+        """Inverse of commit — used when a running job is preempted/killed
+        (fault handling), not part of the paper's committed schedules."""
+        for t, y in workers.items():
+            self.g[t] -= y[:, None] * job.worker_res[None, :]
+        for t, z in ps.items():
+            self.v[t] -= z[:, None] * job.ps_res[None, :]
+
+    def headroom_workers(self, t: int) -> np.ndarray:
+        return self.cluster.worker_caps - self.g[t]
+
+    def headroom_ps(self, t: int) -> np.ndarray:
+        return self.cluster.ps_caps - self.v[t]

@@ -1,0 +1,47 @@
+"""JAX backend for the Alg. 2 DP sweep.
+
+``dp_sweep_jax(rows, D)`` runs the min-plus recurrence over time slots with
+``lax.scan``; the inner banded min-plus is the Pallas VPU kernel
+(``repro.kernels.minplus``) on TPU, interpret-mode on CPU.  Returns the
+same (cost table, split table) as the numpy path in ``subroutine.py``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.minplus.ref import minplus_ref
+
+_INF = jnp.float32(jnp.inf)
+
+
+@functools.partial(jax.jit, static_argnames=("d_total", "use_pallas"))
+def _sweep(rows: jax.Array, d_total: int, use_pallas: bool
+           ) -> Tuple[jax.Array, jax.Array]:
+    if use_pallas:
+        from ..kernels.minplus.kernel import minplus_pallas
+        interpret = jax.default_backend() != "tpu"
+        inner = functools.partial(minplus_pallas, interpret=interpret)
+    else:
+        inner = minplus_ref
+
+    def step(prev, row):
+        new, arg = inner(row, prev)
+        return new, (new, arg)
+
+    init = jnp.full((d_total + 1,), _INF).at[0].set(0.0)
+    _, (costs, args) = jax.lax.scan(step, init, rows)
+    return costs, args
+
+
+def dp_sweep_jax(rows: np.ndarray, d_total: int, use_pallas: bool = False
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+    """rows: (T', dcap+1) float64/32 with +inf; returns (cost (T', D+1),
+    split (T', D+1) int)."""
+    rows32 = jnp.asarray(np.nan_to_num(rows, posinf=np.inf), jnp.float32)
+    costs, args = _sweep(rows32, int(d_total), bool(use_pallas))
+    return np.asarray(costs, np.float64), np.asarray(args, np.int64)

@@ -1,0 +1,266 @@
+"""Alg. 2 — dual subroutine deriving the best schedule for one job.
+
+Two implementations with identical outputs (tests assert so):
+
+* ``best_schedule_ref``  — loop-faithful transcription of the paper's
+  pseudocode (COST_t greedy, DP_COST recursion).  The test oracle.
+* ``best_schedule``      — vectorized: COST_t rows for all (t, d) via
+  sort + prefix sums (the greedy fills cheapest servers first, so its
+  cost is a prefix sum), DP via banded min-plus convolution.
+
+Both return ``None`` when no schedule has positive payoff (job rejected).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import numpy as np
+
+from .pricing import PriceState
+from .types import ClusterSpec, Job, R, Schedule
+
+INF = float("inf")
+
+
+# ---------------------------------------------------------------------------
+# Reference (paper-faithful) implementation
+# ---------------------------------------------------------------------------
+
+def _server_capacity(headroom: np.ndarray, demand: np.ndarray) -> np.ndarray:
+    """Per-server max instances: min_r floor(headroom_r / demand_r) (30)(31)."""
+    servers = headroom.shape[0]
+    cap = np.full(servers, np.iinfo(np.int64).max, dtype=np.int64)
+    for r in range(R):
+        if demand[r] > 0:
+            cap = np.minimum(cap, np.floor(headroom[:, r] / demand[r] + 1e-9).astype(np.int64))
+    return np.maximum(cap, 0)
+
+
+def cost_t_ref(job: Job, state: PriceState, p: np.ndarray, q: np.ndarray,
+               t: int, d: int) -> Tuple[float, np.ndarray, np.ndarray]:
+    """COST_t(t, d): greedy optimal deployment (Alg. 2 lines 21-44)."""
+    H, K = state.cluster.H, state.cluster.K
+    y = np.zeros(H, dtype=np.int64)
+    z = np.zeros(K, dtype=np.int64)
+    if d == 0:
+        return 0.0, y, z
+    D = job.workers_for(d)
+    if D > job.num_chunks:           # constraint (3) can never be met
+        return INF, y, z
+    # --- workers: cheapest server first -----------------------------------
+    w_cost = (p[t] * job.worker_res[None, :]).sum(axis=1)      # (H,)
+    w_cap = _server_capacity(state.headroom_workers(t), job.worker_res)
+    order = np.argsort(w_cost, kind="stable")
+    remaining = D
+    for h in order:
+        if remaining <= 0:
+            break
+        take = min(int(w_cap[h]), job.num_chunks - int(y.sum()), remaining)
+        y[h] = take
+        remaining -= take
+    if remaining > 0:
+        return INF, y, z
+    W = int(y.sum())
+    # --- parameter servers -------------------------------------------------
+    target = job.ps_for(W)
+    s_cost = (q[t] * job.ps_res[None, :]).sum(axis=1)          # (K,)
+    s_cap = _server_capacity(state.headroom_ps(t), job.ps_res)
+    order_k = np.argsort(s_cost, kind="stable")
+    for k in order_k:
+        deployed = int(z.sum())
+        take = min(int(s_cap[k]), target - deployed, W - deployed)
+        if take <= 0:
+            continue
+        z[k] = take
+    if z.sum() * job.ps_bw < W * job.worker_bw - 1e-9:          # line 39
+        return INF, y, z
+    cost = float((y * w_cost).sum() + (z * s_cost).sum())
+    return cost, y, z
+
+
+def best_schedule_ref(job: Job, state: PriceState) -> Optional[Schedule]:
+    """Alg. 2: enumerate deadlines, DP over workload splits."""
+    T = state.cluster.T
+    a = job.arrival
+    Dtot = job.workload
+    dcap = min(job.max_chunks_per_slot, Dtot)
+    p = state.worker_prices()
+    q = state.ps_prices()
+    # cost_t rows
+    rows = np.full((T, dcap + 1), INF)
+    for t in range(a, T):
+        for d in range(dcap + 1):
+            rows[t, d], _, _ = cost_t_ref(job, state, p, q, t, d)
+    # DP: cost[t][d] = min_{d'} rows[t][d'] + cost[t-1][d-d']
+    cost = np.full((T, Dtot + 1), INF)
+    split = np.zeros((T, Dtot + 1), dtype=np.int64)
+    prev = np.full(Dtot + 1, INF)
+    prev[0] = 0.0
+    best_payoff, best_t = 0.0, -1
+    for t in range(a, T):
+        for d in range(Dtot + 1):
+            lim = min(d, dcap)
+            best_c, best_d = INF, 0
+            for dp in range(lim + 1):
+                c = rows[t, dp] + prev[d - dp]
+                if c < best_c - 1e-12:
+                    best_c, best_d = c, dp
+            cost[t, d] = best_c
+            split[t, d] = best_d
+        prev = cost[t]
+        if cost[t, Dtot] < INF:
+            payoff = job.utility(t - a) - cost[t, Dtot]
+            if payoff > best_payoff + 1e-12:
+                best_payoff, best_t = payoff, t
+    if best_t < 0:
+        return None
+    return _extract(job, state, p, q, split, best_t, best_payoff,
+                    cost[best_t, Dtot])
+
+
+def _extract(job: Job, state: PriceState, p: np.ndarray, q: np.ndarray,
+             split: np.ndarray, t_hat: int, payoff: float, total_cost: float
+             ) -> Schedule:
+    """Backtrack the DP split table and re-run the greedy per slot."""
+    workers, ps = {}, {}
+    d_rem = job.workload
+    for t in range(t_hat, job.arrival - 1, -1):
+        d = int(split[t, d_rem])
+        if d > 0:
+            c, y, z = cost_t_ref(job, state, p, q, t, d)
+            assert c < INF
+            workers[t] = y
+            ps[t] = z
+        d_rem -= d
+    assert d_rem == 0, f"backtrack failed: {d_rem} chunk-passes unassigned"
+    return Schedule(jid=job.jid, workers=workers, ps=ps, finish=t_hat,
+                    cost=total_cost, payoff=payoff,
+                    utility=job.utility(t_hat - job.arrival))
+
+
+# ---------------------------------------------------------------------------
+# Vectorized implementation
+# ---------------------------------------------------------------------------
+
+def _prefix_tables(prices: np.ndarray, headroom: np.ndarray, demand: np.ndarray,
+                   t0: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Sorted per-slot unit costs + prefix sums of capacity and cost.
+
+    Returns (ccap (T, S), ccost (T, S), scost (T, S)) where column j holds the
+    cumulative capacity/cost over the j+1 cheapest servers at each slot.
+    """
+    T = prices.shape[0]
+    unit = (prices * demand[None, None, :]).sum(axis=2)   # (T, S)
+    cap = np.zeros(unit.shape, dtype=np.int64)
+    full = np.full(unit.shape[1], np.iinfo(np.int64).max, dtype=np.int64)
+    for t in range(t0, T):
+        c = full.copy()
+        for r in range(R):
+            if demand[r] > 0:
+                c = np.minimum(c, np.floor(headroom[t, :, r] / demand[r] + 1e-9).astype(np.int64))
+        cap[t] = np.maximum(c, 0)
+    order = np.argsort(unit, axis=1, kind="stable")
+    scost = np.take_along_axis(unit, order, axis=1)
+    scap = np.take_along_axis(cap, order, axis=1)
+    ccap = np.cumsum(scap, axis=1)
+    ccost = np.cumsum(scap * scost, axis=1)
+    return ccap, ccost, scost
+
+
+def _greedy_cost_for_counts(ccap: np.ndarray, ccost: np.ndarray, scost: np.ndarray,
+                            counts: np.ndarray) -> np.ndarray:
+    """Cost of greedily placing ``counts[j]`` instances at each slot row.
+
+    ccap/ccost/scost: (S,) prefix tables for ONE slot; counts: (M,) wanted
+    instance totals.  Returns (M,) costs (inf where counts exceed capacity).
+    """
+    total = ccap[-1] if ccap.size else 0
+    out = np.full(counts.shape, INF)
+    ok = counts <= total
+    cz = counts == 0
+    out[cz] = 0.0
+    idx = np.searchsorted(ccap, counts, side="left")   # first prefix covering
+    idx = np.minimum(idx, len(ccap) - 1)
+    prev_cap = np.where(idx > 0, ccap[np.maximum(idx - 1, 0)], 0)
+    prev_cost = np.where(idx > 0, ccost[np.maximum(idx - 1, 0)], 0.0)
+    vals = prev_cost + (counts - prev_cap) * scost[idx]
+    sel = ok & ~cz
+    out[sel] = vals[sel]
+    return out
+
+
+def cost_t_rows(job: Job, state: PriceState, p: np.ndarray, q: np.ndarray,
+                dcap: int) -> np.ndarray:
+    """rows[t, d] = COST_t(t, d) for every slot and d in [0, dcap]."""
+    T = state.cluster.T
+    a = job.arrival
+    rows = np.full((T, dcap + 1), INF)
+    wc_cap, wc_cost, wc_scost = _prefix_tables(
+        p, state.cluster.worker_caps[None] - state.g, job.worker_res, a)
+    ps_cap, ps_cost, ps_scost = _prefix_tables(
+        q, state.cluster.ps_caps[None] - state.v, job.ps_res, a)
+    ds = np.arange(dcap + 1)
+    W = np.array([job.workers_for(int(d)) for d in ds])      # (M,)
+    feas_n = W <= job.num_chunks
+    Z = np.array([job.ps_for(int(w)) for w in W])
+    for t in range(a, T):
+        w_costs = _greedy_cost_for_counts(wc_cap[t], wc_cost[t], wc_scost[t], W)
+        # PS deployed = min(target, W, pool capacity); feasible iff >= (b/B) W
+        pool = ps_cap[t, -1] if ps_cap.shape[1] else 0
+        deploy = np.minimum(np.minimum(Z, W), pool)
+        feas_ps = deploy * job.ps_bw >= W * job.worker_bw - 1e-9
+        z_costs = _greedy_cost_for_counts(ps_cap[t], ps_cost[t], ps_scost[t], deploy)
+        row = np.where(feas_n & feas_ps, w_costs + z_costs, INF)
+        row[0] = 0.0
+        rows[t] = row
+    return rows
+
+
+def minplus_band(prev: np.ndarray, row: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """new[d] = min_{d'} row[d'] + prev[d - d']; returns (new, argmin)."""
+    D = prev.shape[0] - 1
+    dcap = row.shape[0] - 1
+    ids = np.arange(D + 1)[:, None] - np.arange(dcap + 1)[None, :]   # (D+1, dcap+1)
+    prev_ext = np.append(prev, INF)
+    cand = row[None, :] + prev_ext[np.where(ids >= 0, ids, -1)]
+    cand = np.where(ids >= 0, cand, INF)
+    arg = np.argmin(cand, axis=1)
+    return cand[np.arange(D + 1), arg], arg
+
+
+def best_schedule(job: Job, state: PriceState, *, use_jax: bool = False
+                  ) -> Optional[Schedule]:
+    """Vectorized Alg. 2 (numpy min-plus; optionally the JAX/Pallas path)."""
+    T = state.cluster.T
+    a = job.arrival
+    Dtot = job.workload
+    dcap = min(job.max_chunks_per_slot, Dtot)
+    if dcap == 0:
+        return None
+    p = state.worker_prices()
+    q = state.ps_prices()
+    rows = cost_t_rows(job, state, p, q, dcap)
+    if use_jax:
+        from .schedule_jax import dp_sweep_jax
+        cost_tab, split = dp_sweep_jax(rows[a:], Dtot)
+    else:
+        cost_tab = np.full((T - a, Dtot + 1), INF)
+        split = np.zeros((T - a, Dtot + 1), dtype=np.int64)
+        prev = np.full(Dtot + 1, INF)
+        prev[0] = 0.0
+        for i, t in enumerate(range(a, T)):
+            cost_tab[i], split[i] = minplus_band(prev, rows[t])
+            prev = cost_tab[i]
+    best_payoff, best_i = 0.0, -1
+    finite = cost_tab[:, Dtot] < INF
+    for i in np.nonzero(finite)[0]:
+        payoff = job.utility(i) - cost_tab[i, Dtot]
+        if payoff > best_payoff + 1e-12:
+            best_payoff, best_i = payoff, int(i)
+    if best_i < 0:
+        return None
+    full_split = np.zeros((T, Dtot + 1), dtype=np.int64)
+    full_split[a:] = split
+    return _extract(job, state, p, q, full_split, a + best_i, best_payoff,
+                    float(cost_tab[best_i, Dtot]))

@@ -1,0 +1,115 @@
+"""Pallas TPU flash attention (forward) with GQA, causal masking, sliding
+window and logit softcap — the fused kernel behind
+``models.attention._sdpa_chunked`` (same online-softmax recurrence).
+
+Grid: (batch*heads, Sq blocks, Sk blocks); the last dimension iterates
+sequentially on a TPU core so the (m, l, acc) running statistics live in
+VMEM scratch across KV steps.  Block shapes are (BLOCK_Q, head_dim) /
+(BLOCK_K, head_dim) with head_dim expected MXU-aligned (64/128/256);
+scores use the MXU via jnp.dot in fp32.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+               scale: float, causal: bool, window: int, softcap: float,
+               seq_k: int, block_q: int, block_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                  # (BQ, D)
+    k = k_ref[0].astype(jnp.float32)                  # (BK, D)
+    s = jnp.dot(q, k.T) * scale                       # (BQ, BK)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = kpos < seq_k
+    if causal:
+        mask &= qpos >= kpos
+    if window > 0:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+    v = v_ref[0].astype(jnp.float32)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(p, v)
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "softcap", "block_q",
+                              "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = True) -> jax.Array:
+    """q: (B, Sq, H, D); k/v: (B, Sk, KV, D) with H % KV == 0.
+    Returns (B, Sq, H, D) in q.dtype."""
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(D)
+    bq = min(block_q, max(8, Sq))
+    bk = min(block_k, max(8, Sk))
+    sq_p = ((Sq + bq - 1) // bq) * bq
+    sk_p = ((Sk + bk - 1) // bk) * bk
+    qr = jnp.pad(q, ((0, 0), (0, sq_p - Sq), (0, 0), (0, 0)))
+    kr = jnp.pad(k, ((0, 0), (0, sk_p - Sk), (0, 0), (0, 0)))
+    vr = jnp.pad(v, ((0, 0), (0, sk_p - Sk), (0, 0), (0, 0)))
+    qr = qr.transpose(0, 2, 1, 3).reshape(B * H, sq_p, D)
+    kr = kr.transpose(0, 2, 1, 3).reshape(B * KV, sk_p, D)
+    vr = vr.transpose(0, 2, 1, 3).reshape(B * KV, sk_p, D)
+
+    kv_row = lambda bh: (bh // H) * KV + (bh % H) // G
+
+    out = pl.pallas_call(
+        functools.partial(_fa_kernel, scale=scale, causal=causal,
+                          window=window, softcap=softcap, seq_k=Sk,
+                          block_q=bq, block_k=bk),
+        grid=(B * H, sq_p // bq, sk_p // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, D), lambda bh, qi, ki: (kv_row(bh), ki, 0)),
+            pl.BlockSpec((1, bk, D), lambda bh, qi, ki: (kv_row(bh), ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, sq_p, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    out = out.reshape(B, H, sq_p, D).transpose(0, 2, 1, 3)
+    return out[:, :Sq]

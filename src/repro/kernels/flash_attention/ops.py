@@ -1,0 +1,17 @@
+"""Jit'd flash-attention entry: Pallas (interpret on CPU) or XLA oracle."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import flash_attention
+from .ref import attention_ref
+
+
+def attention_op(q, k, v, *, causal=True, window=0, softcap=0.0,
+                 use_pallas: bool = True):
+    if not use_pallas:
+        return attention_ref(q, k, v, causal=causal, window=window,
+                             softcap=softcap)
+    interpret = jax.default_backend() != "tpu"
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           softcap=softcap, interpret=interpret)

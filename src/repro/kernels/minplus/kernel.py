@@ -1,0 +1,83 @@
+"""Pallas TPU kernel for the banded min-plus (tropical) convolution at the
+heart of the paper's DP subroutine (Alg. 2):
+
+    new[d]  = min_{d' in [0, DC]} row[d'] + prev[d - d']
+    arg[d]  = argmin_{d'} (same)
+
+This is the only super-linear term in OASiS (O(T N^2 E^2), Theorem 3) —
+the paper's hot spot.  Min-plus is not a ring matmul, so the MXU cannot
+be used; the kernel targets the VPU with lane-aligned (multiple-of-128)
+blocks.  ``prev`` is small enough (D <= ~32k floats) to live fully in
+VMEM; the output is blocked over d and each block slides a window over
+the left-padded ``prev``.
+
+Layout: 2-D (1, L) row vectors — keeps the last dimension on lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_D = 512
+
+
+def _minplus_kernel(row_ref, prevpad_ref, out_ref, arg_ref, *, dc1: int,
+                    block: int):
+    """row: (1, DCpad); prevpad: (1, D1 + DCpad); out/arg: (1, block)."""
+    i = pl.program_id(0)
+    row = row_ref[0, :]                      # (DCpad,)
+    base = i * block
+    best = jnp.full((block,), jnp.inf, jnp.float32)
+    arg = jnp.zeros((block,), jnp.int32)
+
+    def body(j, carry):
+        best, arg = carry
+        # new[d] = row[j] + prev[d - j]  -> window starts at base + DCpad-... :
+        # prevpad[k] = prev[k - dcpad]; for output offset o in [0, block):
+        #   prev[base + o - j] = prevpad[base + o - j + dcpad]
+        start = base + dc1 - 1 - j
+        window = jax.lax.dynamic_slice(prevpad_ref[0, :], (start,), (block,))
+        cand = row[j] + window
+        take = cand < best
+        return jnp.where(take, cand, best), jnp.where(take, j, arg)
+
+    best, arg = jax.lax.fori_loop(0, dc1, body, (best, arg))
+    out_ref[0, :] = best
+    arg_ref[0, :] = arg
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def minplus_pallas(row: jax.Array, prev: jax.Array, *, interpret: bool = True):
+    """row: (DC+1,) float32 (+inf for infeasible); prev: (D+1,).
+    Returns (new (D+1,), argmin (D+1,)).  Sizes are padded to 128 lanes."""
+    d1 = prev.shape[0]
+    dc1 = row.shape[0]
+    block = min(BLOCK_D, ((d1 + 127) // 128) * 128)
+    d1p = ((d1 + block - 1) // block) * block
+    # prevpad[k] = prev[k - (dc1-1)]; +inf outside
+    prevpad = jnp.full((1, d1p + dc1 - 1 + block), jnp.inf, jnp.float32)
+    prevpad = jax.lax.dynamic_update_slice(
+        prevpad, prev.astype(jnp.float32)[None, :], (0, dc1 - 1))
+    rowp = row.astype(jnp.float32)[None, :]
+    grid = (d1p // block,)
+    out, arg = pl.pallas_call(
+        functools.partial(_minplus_kernel, dc1=dc1, block=block),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, dc1), lambda i: (0, 0)),
+            pl.BlockSpec((1, prevpad.shape[1]), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, d1p), jnp.float32),
+            jax.ShapeDtypeStruct((1, d1p), jnp.int32),
+        ],
+        interpret=interpret,
+    )(rowp, prevpad)
+    return out[0, :d1], arg[0, :d1]

@@ -1,0 +1,15 @@
+"""Jit'd entry point: Pallas on TPU, interpret-mode elsewhere, with the
+pure-jnp reference available for oracle checks."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import minplus_pallas
+from .ref import minplus_ref
+
+
+def minplus(row: jax.Array, prev: jax.Array, use_pallas: bool = True):
+    if not use_pallas:
+        return minplus_ref(row, prev)
+    interpret = jax.default_backend() != "tpu"
+    return minplus_pallas(row, prev, interpret=interpret)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the banded min-plus convolution."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def minplus_ref(row: jax.Array, prev: jax.Array):
+    """new[d] = min_{d'} row[d'] + prev[d-d'];  returns (new, argmin)."""
+    d1 = prev.shape[0]
+    dc1 = row.shape[0]
+    ids = jnp.arange(d1)[:, None] - jnp.arange(dc1)[None, :]
+    prev_ext = jnp.append(prev.astype(jnp.float32), jnp.inf)
+    cand = row.astype(jnp.float32)[None, :] + prev_ext[jnp.where(ids >= 0, ids, -1)]
+    cand = jnp.where(ids >= 0, cand, jnp.inf)
+    arg = jnp.argmin(cand, axis=1).astype(jnp.int32)
+    return jnp.take_along_axis(cand, arg[:, None], axis=1)[:, 0], arg

@@ -1,0 +1,84 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunk scan (arXiv:2405.21060 §6).
+
+Per (batch*head) row the sequence is processed in chunks of Q steps:
+quadratic attention-like compute inside the chunk (MXU: C@B^T and
+score@X matmuls) and a (P, N) recurrent state carried across chunks in
+VMEM scratch — the chunk dimension is the innermost (sequential) grid
+axis, mirroring ``models.mamba2.ssd_chunked``.
+
+Inputs are pre-expanded per head (groups broadcast in ops.py):
+  x: (BH, L, P); dt: (BH, L); A: (BH,); B,C: (BH, L, N)
+Output: y (BH, L, P) with the D skip-connection left to the caller.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_scr, *,
+                chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)     # (Q,)
+    A = a_ref[0, 0]                           # scalar (this head)
+    b = b_ref[0].astype(jnp.float32)          # (Q, N)
+    c = c_ref[0].astype(jnp.float32)          # (Q, N)
+
+    a = dt * A                                # per-step log decay (Q,)
+    a_cum = jnp.cumsum(a)                     # (Q,)
+    seg = a_cum[:, None] - a_cum[None, :]     # (Q, Q)
+    qpos = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    kpos = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.where(qpos >= kpos, jnp.exp(seg), 0.0)
+    scores = jnp.dot(c, b.T) * decay * dt[None, :]          # (Q, Q)
+    y_intra = jnp.dot(scores, x)                            # (Q, P)
+
+    state = state_scr[...]                                  # (P, N)
+    y_inter = jnp.dot(c, state.T) * jnp.exp(a_cum)[:, None]  # (Q, P)
+
+    last = a_cum[-1]
+    w_in = jnp.exp(last - a_cum) * dt                       # (Q,)
+    state_scr[...] = state * jnp.exp(last) + jnp.dot((x * w_in[:, None]).T, b)
+
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_pallas(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+               C: jax.Array, *, chunk: int = 128,
+               interpret: bool = True) -> jax.Array:
+    """x: (BH, L, P); dt: (BH, L); A: (BH,); B/C: (BH, L, N); L % chunk == 0
+    (caller pads).  Returns y: (BH, L, P)."""
+    BH, L, P = x.shape
+    N = B.shape[-1]
+    assert L % chunk == 0, "pad L to a chunk multiple in ops.py"
+    nc = L // chunk
+    dt2 = dt[:, None, :].reshape(BH, nc, chunk)        # blocks (1,1,chunk)
+    a2 = A[:, None]                                    # (BH, 1)
+
+    out = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, P), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, 1), lambda bh, ci: (bh, 0)),
+            pl.BlockSpec((1, chunk, N), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, N), lambda bh, ci: (bh, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, P), lambda bh, ci: (bh, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, L, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt2, a2, B, C)
+    return out

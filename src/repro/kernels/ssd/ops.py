@@ -1,0 +1,41 @@
+"""Jit'd SSD entry: handles group->head broadcast, chunk padding, head
+layout; selects Pallas (interpret off-TPU) or the jnp reference."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_pallas
+from .ref import ssd_ref
+
+
+def ssd_op(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+           C: jax.Array, *, chunk: int = 128, use_pallas: bool = True
+           ) -> jax.Array:
+    """Model-layout wrapper.  x: (b, L, H, P); dt: (b, L, H); A: (H,);
+    B/C: (b, L, G, N).  Returns (b, L, H, P)."""
+    b, L, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(B[:, :, :, None, :], rep, axis=3).reshape(b, L, H, N) \
+        if G != H else B
+    Ch = jnp.repeat(C[:, :, :, None, :], rep, axis=3).reshape(b, L, H, N) \
+        if G != H else C
+    xf = x.transpose(0, 2, 1, 3).reshape(b * H, L, P)
+    dtf = dt.transpose(0, 2, 1).reshape(b * H, L)
+    Af = jnp.tile(A, b)
+    Bf = Bh.transpose(0, 2, 1, 3).reshape(b * H, L, N)
+    Cf = Ch.transpose(0, 2, 1, 3).reshape(b * H, L, N)
+    pad = (-L) % chunk
+    if pad:
+        xf = jnp.pad(xf, ((0, 0), (0, pad), (0, 0)))
+        dtf = jnp.pad(dtf, ((0, 0), (0, pad)))
+        Bf = jnp.pad(Bf, ((0, 0), (0, pad), (0, 0)))
+        Cf = jnp.pad(Cf, ((0, 0), (0, pad), (0, 0)))
+    if use_pallas:
+        interpret = jax.default_backend() != "tpu"
+        y = ssd_pallas(xf, dtf, Af, Bf, Cf, chunk=chunk, interpret=interpret)
+    else:
+        y = ssd_ref(xf, dtf, Af, Bf, Cf)
+    y = y[:, :L].reshape(b, H, L, P).transpose(0, 2, 1, 3)
+    return y

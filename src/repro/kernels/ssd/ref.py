@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the SSD kernel: the sequential recurrence
+    s_t = exp(dt_t * A) * s_{t-1} + dt_t * B_t x_t^T;   y_t = C_t . s_t
+computed step by step (no chunking) — the ground truth both for the
+Pallas kernel and for ``models.mamba2.ssd_chunked``."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+            C: jax.Array) -> jax.Array:
+    """x: (BH, L, P); dt: (BH, L); A: (BH,); B/C: (BH, L, N) -> y (BH, L, P)."""
+    BH, L, P = x.shape
+    N = B.shape[-1]
+
+    def step(s, inp):
+        xt, dtt, bt, ct = inp                       # (BH,P),(BH,),(BH,N),(BH,N)
+        decay = jnp.exp(dtt * A)                    # (BH,)
+        s = s * decay[:, None, None] + dtt[:, None, None] * \
+            jnp.einsum("bp,bn->bpn", xt, bt)
+        y = jnp.einsum("bpn,bn->bp", s, ct)
+        return s, y
+
+    s0 = jnp.zeros((BH, P, N), jnp.float32)
+    xs = (x.transpose(1, 0, 2).astype(jnp.float32),
+          dt.transpose(1, 0).astype(jnp.float32),
+          B.transpose(1, 0, 2).astype(jnp.float32),
+          C.transpose(1, 0, 2).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2).astype(x.dtype)

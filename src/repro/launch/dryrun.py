@@ -1,0 +1,337 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes and extract roofline inputs.
+
+For each cell:
+  * train shapes  -> pjit(train_step)   .lower(params, opt, batch).compile()
+  * prefill shape -> pjit(prefill_step) .lower(params, batch).compile()
+  * decode shapes -> pjit(decode_step)  .lower(params, tok, cache, len).compile()
+
+Everything is ShapeDtypeStruct — no arrays are allocated.  Results
+(memory analysis, cost analysis, per-collective byte counts parsed from
+the optimized HLO) are written to experiments/dryrun/*.json for
+benchmarks/roofline.py.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+      [--mesh single|multi|both] [--out DIR]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCHS, all_cells, cells, get_config, norm_name
+from ..models.config import ModelConfig
+from ..models.layers import shapes_tree
+from ..models.model import model_specs
+from ..models import model_axes
+from .mesh import make_production_mesh
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "s16": 2,
+                "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8}
+
+
+def _parse_bytes(type_str: str) -> int:
+    """Sum byte sizes of all tensor shapes in an HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective-kind output bytes summed over ops in optimized HLO."""
+    out = {k: 0 for k in COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"(?:ROOT )?[%\w.\-]+ = (.*?) (" + "|".join(COLLECTIVES)
+                     + r")[\-a-z]*\(", line)
+        if m:
+            ty, kind = m.group(1), m.group(2)
+            out[kind] += _parse_bytes(ty)
+            out["count"] += 1
+    return out
+
+
+def params_shape_structs(cfg: ModelConfig):
+    from ..models.layers import P, is_spec
+    dt = jnp.dtype(cfg.param_dtype)
+
+    def one(p):
+        return jax.ShapeDtypeStruct(p.shape, dt)
+
+    return jax.tree_util.tree_map(one, model_specs(cfg),
+                                  is_leaf=is_spec)
+
+
+def lower_cell(cfg: ModelConfig, shape_name: str, seq: int, gbatch: int,
+               kind: str, mesh, accum: int = 1) -> dict:
+    from ..train.optimizer import OptConfig, OptState
+    from ..train.steps import input_specs, make_train_step
+    from ..serve.steps import decode_input_specs, make_decode_step, \
+        make_prefill_step
+    from ..parallel.sharding import batch_sharding, cache_shardings, \
+        param_shardings
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    p_structs = params_shape_structs(cfg)
+    p_shard = param_shardings(model_axes(cfg), shapes_tree(model_specs(cfg)),
+                              mesh)
+    repl = NamedSharding(mesh, PartitionSpec())
+
+    def in_batch_shard(tree):
+        """Shard dim0 (global batch) when divisible, else replicate."""
+        from ..parallel.sharding import logical_rules, _axis_size
+        rules = logical_rules(mesh)
+        ax = rules["batch"]
+
+        def one(s):
+            if s.shape and s.shape[0] % _axis_size(mesh, ax) == 0:
+                return NamedSharding(mesh, PartitionSpec(
+                    ax if len(ax) > 1 else ax[0],
+                    *([None] * (len(s.shape) - 1))))
+            return repl
+        return jax.tree_util.tree_map(one, tree)
+
+    t0 = time.time()
+    if kind == "train":
+        from ..train.steps import TrainHyper
+        opt_cfg = OptConfig(moment_dtype="bfloat16"
+                            if cfg.param_dtype == "bfloat16" else "float32")
+        step, in_sh, out_sh = make_train_step(cfg, mesh, opt_cfg,
+                                              TrainHyper(grad_accum=accum))
+        mdt = jnp.dtype(opt_cfg.moment_dtype)
+        opt_structs = OptState(
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+            mu=jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, mdt), p_structs),
+            nu=jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, mdt), p_structs))
+        batch = input_specs(cfg, seq, gbatch, "train")
+        fn = jax.jit(step, in_shardings=(p_shard, in_sh[1], in_batch_shard(batch)),
+                     out_shardings=out_sh, donate_argnums=(0, 1))
+        lowered = fn.lower(p_structs, opt_structs, batch)
+    elif kind == "prefill":
+        step, in_sh, _ = make_prefill_step(cfg, mesh, gbatch, seq)
+        batch = input_specs(cfg, seq, gbatch, "prefill")
+        fn = jax.jit(step, in_shardings=(p_shard, in_batch_shard(batch)))
+        lowered = fn.lower(p_structs, batch)
+    else:  # decode
+        step, in_sh, out_sh, c_shapes = make_decode_step(cfg, mesh, gbatch, seq)
+        tok, cache, extras = decode_input_specs(cfg, gbatch, seq)
+        c_shard = cache_shardings(c_shapes, mesh)
+        fn = jax.jit(step,
+                     in_shardings=(p_shard, in_batch_shard(tok), c_shard, repl,
+                                   in_batch_shard(extras)),
+                     donate_argnums=(2,))
+        lowered = fn.lower(p_structs, tok, cache,
+                           jax.ShapeDtypeStruct((), jnp.int32), extras)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    n_dev = mesh.devices.size
+    result = {
+        "arch": cfg.name, "shape": shape_name, "kind": kind,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "n_devices": int(n_dev),
+        "seq": seq, "global_batch": gbatch,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "collectives": coll,
+        "memory": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+        },
+    }
+    return result
+
+
+def probe_variants(cfg: ModelConfig):
+    """Small same-structure configs for scan-body cost extrapolation.
+
+    XLA's cost analysis counts a while/scan body ONCE (not x trip count),
+    so per-cell FLOPs/bytes/collectives are recovered by solving the
+    linear model  cost = a + sum_g b_g * n_g  from #groups+1 probe
+    compiles (exact for homogeneous stacks).  Probe variants run with
+    ``unroll=True`` so every layer is counted.  Returns
+    (variants=[(label, cfg, counts)], full_counts)."""
+    cfg = cfg.scaled(unroll=True)
+    out = []
+    if cfg.family == "encdec":
+        full = {"encoder": cfg.n_encoder_layers, "decoder": cfg.n_layers}
+        out.append(("p0", cfg.scaled(n_encoder_layers=1, n_layers=1),
+                    {"encoder": 1, "decoder": 1}))
+        out.append(("pe", cfg.scaled(n_encoder_layers=2, n_layers=1),
+                    {"encoder": 2, "decoder": 1}))
+        out.append(("pd", cfg.scaled(n_encoder_layers=1, n_layers=2),
+                    {"encoder": 1, "decoder": 2}))
+    elif cfg.family == "hybrid":
+        per = cfg.hybrid_period
+        full = {"periods": cfg.n_layers // per,
+                "tail": cfg.n_layers - (cfg.n_layers // per) * per}
+        out.append(("p0", cfg.scaled(n_layers=per + 1),
+                    {"periods": 1, "tail": 1}))
+        out.append(("pp", cfg.scaled(n_layers=2 * per + 1),
+                    {"periods": 2, "tail": 1}))
+        out.append(("pt", cfg.scaled(n_layers=per + 2),
+                    {"periods": 1, "tail": 2}))
+    elif cfg.use_mla and cfg.n_dense_layers:
+        full = {"dense": cfg.n_dense_layers,
+                "moe": cfg.n_layers - cfg.n_dense_layers}
+        out.append(("p0", cfg.scaled(n_dense_layers=1, n_layers=2),
+                    {"dense": 1, "moe": 1}))
+        out.append(("pd", cfg.scaled(n_dense_layers=2, n_layers=3),
+                    {"dense": 2, "moe": 1}))
+        out.append(("pm", cfg.scaled(n_dense_layers=1, n_layers=3),
+                    {"dense": 1, "moe": 2}))
+    elif cfg.local_global:
+        full = {"pairs": cfg.n_layers // 2}
+        out.append(("p0", cfg.scaled(n_layers=2), {"pairs": 1}))
+        out.append(("p1", cfg.scaled(n_layers=4), {"pairs": 2}))
+    else:
+        full = {"layers": cfg.n_layers}
+        out.append(("p0", cfg.scaled(n_layers=1), {"layers": 1}))
+        out.append(("p1", cfg.scaled(n_layers=2), {"layers": 2}))
+    return out, full
+
+
+def run_probes(args, meshes, out_dir: Path) -> None:
+    import numpy as np
+    keys = ["flops", "bytes_accessed"]
+    for arch in ARCHS:
+        if args.arch and norm_name(args.arch) != arch:
+            continue
+        cfg = get_config(arch)
+        variants, full = probe_variants(cfg)
+        groups = sorted(full)
+        for shape_name, seq, gbatch, kind in cells(arch):
+            if args.shape and args.shape != shape_name:
+                continue
+            for mesh_name, mesh in meshes:
+                tag = f"{arch}_{shape_name}_{mesh_name}"
+                try:
+                    rows, rhs = [], []
+                    coll_rhs = []
+                    for label, vcfg, counts in variants:
+                        r = lower_cell(vcfg, shape_name, seq, gbatch, kind,
+                                       mesh)
+                        rows.append([1.0] + [float(counts[g]) for g in groups])
+                        rhs.append([r["flops"], r["bytes_accessed"]])
+                        coll_rhs.append([float(r["collectives"][c])
+                                         for c in COLLECTIVES])
+                    A = np.array(rows)
+                    sol, *_ = np.linalg.lstsq(A, np.array(rhs), rcond=None)
+                    csol, *_ = np.linalg.lstsq(A, np.array(coll_rhs),
+                                               rcond=None)
+                    fullvec = np.array([1.0] + [float(full[g]) for g in groups])
+                    corr = fullvec @ sol
+                    ccorr = np.maximum(fullvec @ csol, 0.0)
+                    out = {
+                        "arch": cfg.name, "shape": shape_name,
+                        "mesh_name": mesh_name,
+                        "flops_corrected": float(corr[0]),
+                        "bytes_corrected": float(corr[1]),
+                        "collectives_corrected": {
+                            c: float(v) for c, v in zip(COLLECTIVES, ccorr)},
+                    }
+                    (out_dir / f"{tag}.probe.json").write_text(
+                        json.dumps(out, indent=1))
+                    print(f"PROBE {tag:46s} flops={corr[0]:.3e} "
+                          f"bytes={corr[1]:.3e}", flush=True)
+                except Exception as e:  # noqa: BLE001
+                    print(f"PROBE-FAIL {tag}: {type(e).__name__}: {e}",
+                          flush=True)
+                    (out_dir / f"{tag}.probe.err").write_text(
+                        traceback.format_exc())
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--probes", action="store_true",
+                    help="run scan-body cost extrapolation probes")
+    ap.add_argument("--accum", type=int, default=1,
+                    help="gradient-accumulation microbatches for train cells")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi", make_production_mesh(multi_pod=True)))
+
+    if args.probes:
+        run_probes(args, meshes, out_dir)
+        return
+
+    n_ok = n_fail = 0
+    for arch in ARCHS:
+        if args.arch and norm_name(args.arch) != arch:
+            continue
+        cfg = get_config(arch)
+        for shape_name, seq, gbatch, kind in cells(arch):
+            if args.shape and args.shape != shape_name:
+                continue
+            for mesh_name, mesh in meshes:
+                tag = f"{arch}_{shape_name}_{mesh_name}"
+                path = out_dir / f"{tag}.json"
+                try:
+                    res = lower_cell(cfg, shape_name, seq, gbatch, kind, mesh,
+                                     accum=args.accum)
+                    path.write_text(json.dumps(res, indent=1))
+                    mb = res["memory"]
+                    per_dev = (mb["argument_bytes"] + mb["temp_bytes"] +
+                               max(0, mb["output_bytes"] - mb["alias_bytes"]))
+                    print(f"OK   {tag:48s} compile={res['compile_s']:7.1f}s "
+                          f"flops={res['flops']:.3e} "
+                          f"mem/dev~{per_dev/2**30:.2f}GiB "
+                          f"coll={res['collectives']['count']}", flush=True)
+                    n_ok += 1
+                except Exception as e:  # noqa: BLE001 — report and continue
+                    n_fail += 1
+                    print(f"FAIL {tag}: {type(e).__name__}: {e}", flush=True)
+                    (out_dir / f"{tag}.err").write_text(traceback.format_exc())
+    print(f"\ndry-run complete: {n_ok} ok, {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Serving launcher: batched prefill + decode over a sharded cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch starcoder2_3b \
+        --smoke --batch 4 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    from ..configs import get_config, get_smoke
+    from ..models import decode_step, init_cache, init_model
+    from ..models.model import encdec_prepare, prefill
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    key = jax.random.PRNGKey(1)
+    max_len = args.prompt_len + args.gen
+    toks = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                              cfg.vocab_size)
+    cache = init_cache(cfg, args.batch, max_len)
+    extras = {}
+    if cfg.family == "encdec":
+        frames = jax.random.normal(key, (args.batch, cfg.encoder_seq,
+                                         cfg.d_model)) * 0.1
+        enc, cross = encdec_prepare(params, cfg, frames)
+        extras["enc"] = enc
+        cache["decoder"]["cross"] = cross
+    step = jax.jit(lambda p, t, c, l: decode_step(p, cfg, t, c, l, extras))
+    # teacher-forced prefill via the decode path keeps the cache exact for
+    # every family (attention, SSM state, hybrid) without a pad/copy step
+    t0 = time.time()
+    for i in range(args.prompt_len):
+        logits, cache = step(params, toks[:, i:i + 1], cache, jnp.int32(i))
+    tok = jnp.argmax(logits[:, :, :cfg.vocab_size], -1)
+    out = [tok]
+    for i in range(args.gen - 1):
+        logits, cache = step(params, tok, cache,
+                             jnp.int32(args.prompt_len + i))
+        tok = jnp.argmax(logits[:, :, :cfg.vocab_size], -1)
+        out.append(tok)
+    dt = time.time() - t0
+    gen = np.asarray(jnp.concatenate(out, 1))
+    print(f"{cfg.name}: generated {gen.shape} in {dt:.1f}s "
+          f"({args.batch*(args.prompt_len+args.gen)/dt:.1f} tok/s)")
+    print("sample:", gen[0][:12].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Training launcher: config -> mesh -> (optionally OASiS-planned) run.
+
+    PYTHONPATH=src python -m repro.launch.train --arch starcoder2_3b \
+        --smoke --steps 50 [--elastic]
+
+On this CPU container only smoke configs are runnable; full configs are
+exercised through dryrun.py.  On a real cluster the same entry point is
+used with jax.distributed initialized by the pod launcher.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--elastic", action="store_true",
+                    help="drive worker counts from an OASiS schedule")
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+
+    from ..configs import get_config, get_smoke
+    from ..data.pipeline import DataConfig, DataPipeline
+    from ..models import init_model
+    from ..train.optimizer import OptConfig, init_opt
+    from ..train.steps import TrainHyper, make_train_step
+    from .mesh import make_host_mesh
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    cfg.validate()
+    mesh = make_host_mesh(data=len(jax.devices()))
+    opt_cfg = OptConfig(lr=1e-3, warmup_steps=10, total_steps=args.steps)
+    hyper = TrainHyper(grad_compress=args.compress_grads)
+    fn, in_sh, out_sh = make_train_step(cfg, mesh, opt_cfg, hyper)
+    step = jax.jit(fn)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    opt = init_opt(params, opt_cfg)
+    pipe = DataPipeline(DataConfig(vocab_size=cfg.vocab_size,
+                                   seq_len=args.seq,
+                                   global_batch=args.batch))
+    from ..ckpt.checkpoint import AsyncCheckpointer
+    saver = AsyncCheckpointer(args.ckpt)
+    t0 = time.time()
+    for i in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in pipe.next_batch().items()}
+        if cfg.family == "encdec":
+            batch["frames"] = jnp.zeros((args.batch, cfg.encoder_seq,
+                                         cfg.d_model), jnp.float32)
+        if cfg.n_patches:
+            batch["patch_embeds"] = jnp.zeros((args.batch, cfg.n_patches,
+                                               cfg.d_model), jnp.float32)
+        params, opt, metrics = step(params, opt, batch)
+        if (i + 1) % 10 == 0:
+            print(f"step {i+1:4d} ce={float(metrics['ce']):.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} "
+                  f"({(time.time()-t0)/(i+1):.2f}s/step)", flush=True)
+        if (i + 1) % 25 == 0:
+            saver.save_async(i + 1, {"params": params, "opt": opt},
+                             extra={"pipeline": pipe.state.to_dict()})
+    saver.wait()
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

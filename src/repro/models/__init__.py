@@ -1,0 +1,4 @@
+from .config import ModelConfig, smoke_variant
+from .model import (decode_step, forward_train, init_cache, init_model,
+                    model_axes, model_specs, prefill)
+from .layers import param_count

@@ -1,0 +1,197 @@
+"""Attention: GQA + RoPE + sliding-window + logit softcap.
+
+Two XLA implementations with identical math:
+  * ``naive``   — materializes (Sq, Sk) scores; used for tiny smoke shapes
+                  and as the oracle for the chunked path / Pallas kernel.
+  * ``chunked`` — flash-style online-softmax scan over KV chunks; O(S) live
+                  memory, the default for training/prefill.  Mirrors the
+                  Pallas TPU kernel in ``repro.kernels.flash_attention``.
+
+Decode attends a single new token against a (possibly windowed) KV cache.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import P, apply_rope, softcap
+
+NEG_INF = -1e30
+
+
+def attn_specs(cfg, cross: bool = False) -> Dict:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    specs = {
+        "wq": P((d, H * hd), ("embed", "heads")),
+        "wk": P((d, KV * hd), ("embed", "kv")),
+        "wv": P((d, KV * hd), ("embed", "kv")),
+        "wo": P((H * hd, d), ("heads", "embed")),
+    }
+    if cfg.qk_norm:
+        specs["qn"] = P((hd,), (None,), "zeros")
+        specs["kn"] = P((hd,), (None,), "zeros")
+    return specs
+
+
+def _mask(qpos: jax.Array, kpos: jax.Array, causal: bool, window: int,
+          kv_len: Optional[jax.Array]) -> jax.Array:
+    """(..., Sq, Sk) boolean validity mask."""
+    m = jnp.ones((qpos.shape[-1], kpos.shape[-1]), dtype=bool)
+    if causal:
+        m &= qpos[:, None] >= kpos[None, :]
+    if window > 0:
+        m &= qpos[:, None] - kpos[None, :] < window
+    if kv_len is not None:
+        m &= kpos[None, :] < kv_len
+    return m
+
+
+def _sdpa(q: jax.Array, k: jax.Array, v: jax.Array, mask: jax.Array,
+          cap: float) -> jax.Array:
+    """q: (B,Sq,KV,G,D); k/v: (B,Sk,KV,D); mask: (Sq,Sk) or (B,Sq,Sk)."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = softcap(s, cap)
+    m = mask[:, None, None] if mask.ndim == 3 else mask[None, None, None]
+    s = jnp.where(m, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o
+
+
+def _sdpa_chunked(q: jax.Array, k: jax.Array, v: jax.Array, qpos: jax.Array,
+                  kpos: jax.Array, causal: bool, window: int, cap: float,
+                  kv_len: Optional[jax.Array], chunk: int) -> jax.Array:
+    """Online-softmax over KV chunks (flash-attention recurrence in XLA)."""
+    B, Sq, KV, G, D = q.shape
+    Sk = k.shape[1]
+    if kv_len is None:
+        kv_len = Sk              # always mask the chunk padding
+    chunk = min(chunk, Sk)
+    n = (Sk + chunk - 1) // chunk
+    pad = n * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kpos = jnp.pad(kpos, (0, pad), constant_values=jnp.iinfo(jnp.int32).max // 2)
+    kc = k.reshape(B, n, chunk, KV, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n, chunk, KV, D).transpose(1, 0, 2, 3, 4)
+    pc = kpos.reshape(n, chunk)
+    scale = 1.0 / math.sqrt(D)
+    qf = q.astype(jnp.float32)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kj, vj, pj = xs
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qf, kj.astype(jnp.float32)) * scale
+        s = softcap(s, cap)
+        msk = _mask(qpos, pj, causal, window, kv_len)
+        s = jnp.where(msk[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p, vj.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KV, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, Sq, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, pc))
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    return o.transpose(0, 3, 1, 2, 4)          # (B,Sq,KV,G,D)
+
+
+def attention(params: Dict, cfg, x: jax.Array, positions: jax.Array, *,
+              window: int = 0, causal: bool = True, use_rope: bool = True,
+              kv_src: Optional[jax.Array] = None,
+              kv_positions: Optional[jax.Array] = None,
+              cache: Optional[Dict] = None,
+              cache_len: Optional[jax.Array] = None,
+              return_cache: bool = False,
+              constrain_qkv=None) -> Tuple[jax.Array, Optional[Dict]]:
+    """General attention entry point.
+
+    * self-attention train/prefill: cache=None (return_cache to build one)
+    * cross-attention:              kv_src = encoder states (cache optional)
+    * decode:                       x is (B,1,D), cache holds K/V, cache_len
+                                    is the number of valid positions.
+    """
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // KV
+    dt = x.dtype
+    q = (x @ params["wq"].astype(dt)).reshape(B, S, H, hd)
+    src = x if kv_src is None else kv_src
+    new_cache = None
+    if cache is not None and kv_src is None:
+        # decode: append new K/V.  Caches smaller than the stream roll over
+        # (sliding-window layers keep only the last `window` entries; keys
+        # are stored post-RoPE so slot order does not matter).
+        k_new = (src @ params["wk"].astype(dt)).reshape(B, S, KV, hd)
+        v_new = (src @ params["wv"].astype(dt)).reshape(B, S, KV, hd)
+        if "qn" in params:
+            from .layers import rmsnorm
+            q = rmsnorm(q, params["qn"], cfg.norm_eps)
+            k_new = rmsnorm(k_new, params["kn"], cfg.norm_eps)
+        if use_rope:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k_new = apply_rope(k_new, positions, cfg.rope_theta)
+        size = cache["k"].shape[1]
+        write_idx = cache_len % size
+        if jnp.ndim(cache_len) == 1:
+            # per-row positions (continuous batching): vmap the row writes
+            upd = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(
+                c, n, (i, 0, 0)))
+            k = upd(cache["k"], k_new.astype(cache["k"].dtype), write_idx)
+            v = upd(cache["v"], v_new.astype(cache["v"].dtype), write_idx)
+        else:
+            k = jax.lax.dynamic_update_slice(
+                cache["k"], k_new.astype(cache["k"].dtype),
+                (0, write_idx, 0, 0))
+            v = jax.lax.dynamic_update_slice(
+                cache["v"], v_new.astype(cache["v"].dtype),
+                (0, write_idx, 0, 0))
+        new_cache = {"k": k, "v": v}
+        kpos = jnp.arange(size)
+        qg = q.reshape(B, S, KV, G, hd)
+        valid = jnp.minimum(cache_len + S, size)
+        if jnp.ndim(cache_len) == 1:
+            msk = kpos[None, None, :] < valid[:, None, None]     # (B,1,size)
+            msk = jnp.broadcast_to(msk, (B, S, size))
+        else:
+            msk = jnp.broadcast_to(kpos[None, :] < valid, (S, size))
+        o = _sdpa(qg, k, v, msk, cfg.attn_logit_softcap)
+    else:
+        k = (src @ params["wk"].astype(dt)).reshape(B, -1, KV, hd)
+        v = (src @ params["wv"].astype(dt)).reshape(B, -1, KV, hd)
+        if "qn" in params:
+            from .layers import rmsnorm
+            q = rmsnorm(q, params["qn"], cfg.norm_eps)
+            k = rmsnorm(k, params["kn"], cfg.norm_eps)
+        kpos = kv_positions if kv_positions is not None else positions
+        if use_rope:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            if kv_src is None:
+                k = apply_rope(k, kpos, cfg.rope_theta)
+        if return_cache:
+            new_cache = {"k": k, "v": v}
+        qg = q.reshape(B, S, KV, G, hd)
+        if constrain_qkv is not None:
+            # assert head sharding through the reshape: the chunked-softmax
+            # score blocks (B, KV, G, Sq, C) otherwise replicate heads
+            qg, k, v = constrain_qkv(qg), constrain_qkv(k), constrain_qkv(v)
+        if cfg.attn_impl == "naive" or S * k.shape[1] <= 256 * 256:
+            o = _sdpa(qg, k, v, _mask(positions, kpos, causal, window, None),
+                      cfg.attn_logit_softcap)
+        else:
+            o = _sdpa_chunked(qg, k, v, positions, kpos, causal, window,
+                              cfg.attn_logit_softcap, None, cfg.attn_chunk)
+    # both paths yield (B, Sq, KV, G, D)
+    o = o.reshape(B, S, H * hd).astype(dt)
+    return o @ params["wo"].astype(dt), new_cache

@@ -1,0 +1,285 @@
+"""Per-family layer blocks composed from attention/MLA/MoE/Mamba2 pieces.
+
+Each block is (specs_fn, body_fn).  ``body_fn(p, cfg, h, ctx, cache)``
+returns ``(h, new_cache, aux)``.  ``ctx`` carries positions, mode,
+cache_len, encoder states; blocks are scanned over stacked layer params
+by ``model.py``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attention, attn_specs
+from .layers import P, activation, apply_norm, norm_spec
+from .mamba2 import mamba_block, mamba_specs
+from .mla import mla_attention, mla_specs
+from .moe import moe_block, moe_specs
+
+Aux = jax.Array
+
+
+def mlp_specs(cfg, d_ff: Optional[int] = None) -> Dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    s = {
+        "wi": P((d, f), ("embed", "mlp")),
+        "wo": P((f, d), ("mlp", "embed")),
+    }
+    if cfg.gated_mlp:
+        s["wg"] = P((d, f), ("embed", "mlp"))
+    return s
+
+
+def mlp(params: Dict, cfg, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    act = activation(cfg.act)
+    if "wg" in params:
+        h = act(x @ params["wg"].astype(dt)) * (x @ params["wi"].astype(dt))
+    else:
+        h = act(x @ params["wi"].astype(dt))
+    return h @ params["wo"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# dense decoder layer (granite / starcoder2 / pixtral / gemma2-sublayer)
+# ---------------------------------------------------------------------------
+
+def dense_layer_specs(cfg) -> Dict:
+    s = {
+        "ln_attn": norm_spec(cfg),
+        "attn": attn_specs(cfg),
+        "ln_mlp": norm_spec(cfg),
+        "mlp": mlp_specs(cfg),
+    }
+    if cfg.post_norms:
+        s["ln_attn_post"] = norm_spec(cfg)
+        s["ln_mlp_post"] = norm_spec(cfg)
+    return s
+
+
+def _con_cache(ctx: Dict, new_cache):
+    fn = ctx.get("constrain_cache")
+    if fn is None or new_cache is None:
+        return new_cache
+    return jax.tree_util.tree_map(fn, new_cache)
+
+
+def dense_layer(p: Dict, cfg, h: jax.Array, ctx: Dict, cache: Optional[Dict],
+                window: int = 0) -> Tuple[jax.Array, Optional[Dict], Aux]:
+    a_in = apply_norm(p["ln_attn"], h, cfg)
+    a_out, new_cache = attention(
+        p["attn"], cfg, a_in, ctx["positions"], window=window,
+        causal=ctx.get("causal", True), cache=cache,
+        cache_len=ctx.get("cache_len"), return_cache=ctx.get("return_cache", False),
+        use_rope=ctx.get("use_rope", True),
+        constrain_qkv=ctx.get("constrain_qkv"))
+    new_cache = _con_cache(ctx, new_cache)
+    if cfg.post_norms:
+        a_out = apply_norm(p["ln_attn_post"], a_out, cfg)
+    h = h + a_out
+    m_in = apply_norm(p["ln_mlp"], h, cfg)
+    m_out = mlp(p["mlp"], cfg, m_in)
+    if cfg.post_norms:
+        m_out = apply_norm(p["ln_mlp_post"], m_out, cfg)
+    return h + m_out, new_cache, jnp.zeros((), jnp.float32)
+
+
+def gemma_pair_specs(cfg) -> Dict:
+    return {"local": dense_layer_specs(cfg), "global": dense_layer_specs(cfg)}
+
+
+def gemma_pair(p: Dict, cfg, h: jax.Array, ctx: Dict, cache: Optional[Dict]
+               ) -> Tuple[jax.Array, Optional[Dict], Aux]:
+    c_l = cache.get("local") if cache else None
+    c_g = cache.get("global") if cache else None
+    h, nc_l, _ = dense_layer(p["local"], cfg, h, ctx, c_l, window=cfg.sliding_window)
+    h, nc_g, _ = dense_layer(p["global"], cfg, h, ctx, c_g, window=0)
+    new_cache = None
+    if nc_l is not None or nc_g is not None:
+        new_cache = {"local": nc_l, "global": nc_g}
+    return h, new_cache, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# MoE decoder layer (olmoe) and MLA+MoE layer (deepseek-v3)
+# ---------------------------------------------------------------------------
+
+def moe_layer_specs(cfg) -> Dict:
+    return {
+        "ln_attn": norm_spec(cfg),
+        "attn": attn_specs(cfg),
+        "ln_mlp": norm_spec(cfg),
+        "moe": moe_specs(cfg),
+    }
+
+
+def moe_layer(p: Dict, cfg, h: jax.Array, ctx: Dict, cache: Optional[Dict]
+              ) -> Tuple[jax.Array, Optional[Dict], Aux]:
+    a_in = apply_norm(p["ln_attn"], h, cfg)
+    a_out, new_cache = attention(
+        p["attn"], cfg, a_in, ctx["positions"], cache=cache,
+        cache_len=ctx.get("cache_len"), return_cache=ctx.get("return_cache", False),
+        constrain_qkv=ctx.get("constrain_qkv"))
+    new_cache = _con_cache(ctx, new_cache)
+    h = h + a_out
+    m_in = apply_norm(p["ln_mlp"], h, cfg)
+    m_out, aux = moe_block(p["moe"], cfg, m_in)
+    return h + m_out, new_cache, aux
+
+
+def mla_dense_specs(cfg) -> Dict:
+    return {
+        "ln_attn": norm_spec(cfg),
+        "attn": mla_specs(cfg),
+        "ln_mlp": norm_spec(cfg),
+        "mlp": mlp_specs(cfg),
+    }
+
+
+def mla_moe_specs(cfg) -> Dict:
+    return {
+        "ln_attn": norm_spec(cfg),
+        "attn": mla_specs(cfg),
+        "ln_mlp": norm_spec(cfg),
+        "moe": moe_specs(cfg),
+    }
+
+
+def mla_layer(p: Dict, cfg, h: jax.Array, ctx: Dict, cache: Optional[Dict]
+              ) -> Tuple[jax.Array, Optional[Dict], Aux]:
+    a_in = apply_norm(p["ln_attn"], h, cfg)
+    a_out, new_cache = mla_attention(
+        p["attn"], cfg, a_in, ctx["positions"], cache=cache,
+        cache_len=ctx.get("cache_len"), return_cache=ctx.get("return_cache", False))
+    new_cache = _con_cache(ctx, new_cache)
+    h = h + a_out
+    m_in = apply_norm(p["ln_mlp"], h, cfg)
+    if "moe" in p:
+        m_out, aux = moe_block(p["moe"], cfg, m_in)
+    else:
+        m_out, aux = mlp(p["mlp"], cfg, m_in), jnp.zeros((), jnp.float32)
+    return h + m_out, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# SSM layer (mamba2) and hybrid period (zamba2)
+# ---------------------------------------------------------------------------
+
+def ssm_layer_specs(cfg) -> Dict:
+    return {"ln": norm_spec(cfg), "mamba": mamba_specs(cfg)}
+
+
+def ssm_layer(p: Dict, cfg, h: jax.Array, ctx: Dict, cache: Optional[Dict]
+              ) -> Tuple[jax.Array, Optional[Dict], Aux]:
+    x = apply_norm(p["ln"], h, cfg)
+    out, new_cache = mamba_block(p["mamba"], cfg, x, cache=cache,
+                                 want_cache=ctx.get("return_cache", False),
+                                 constrain=ctx.get("constrain_ssm"))
+    new_cache = _con_cache(ctx, new_cache)
+    return h + out, new_cache, jnp.zeros((), jnp.float32)
+
+
+def shared_attn_specs(cfg) -> Dict:
+    """Zamba2 shared transformer block (weights reused at every period):
+    input is concat(current hidden, initial embedding) fused by a linear."""
+    d = cfg.d_model
+    return {
+        "fuse": P((2 * d, d), ("embed", "embed")),
+        "layer": dense_layer_specs(cfg),
+    }
+
+
+def zamba_period_specs(cfg) -> Dict:
+    return {"ssm": [ssm_layer_specs(cfg) for _ in range(cfg.hybrid_period)]}
+
+
+def zamba_period(p: Dict, shared: Dict, cfg, h: jax.Array, ctx: Dict,
+                 cache: Optional[Dict]) -> Tuple[jax.Array, Optional[Dict], Aux]:
+    new_cache: Dict[str, Any] = {"ssm": [], "attn": None}
+    for i in range(cfg.hybrid_period):
+        c = cache["ssm"][i] if cache else None
+        h, nc, _ = ssm_layer(p["ssm"][i], cfg, h, ctx, c)
+        new_cache["ssm"].append(nc)
+    fused = jnp.concatenate([h, ctx["h0"]], axis=-1) @ shared["fuse"].astype(h.dtype)
+    a_c = cache["attn"] if cache else None
+    out, nc_a, _ = dense_layer(shared["layer"], cfg, fused, ctx, a_c)
+    new_cache["attn"] = nc_a
+    h = h + (out - fused)          # residual of the shared block only
+    if all(c is None for c in new_cache["ssm"]) and nc_a is None:
+        new_cache = None
+    return h, new_cache, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# whisper encoder/decoder layers
+# ---------------------------------------------------------------------------
+
+def enc_layer_specs(cfg) -> Dict:
+    return {
+        "ln_attn": norm_spec(cfg),
+        "attn": attn_specs(cfg),
+        "ln_mlp": norm_spec(cfg),
+        "mlp": mlp_specs(cfg),
+    }
+
+
+def enc_layer(p: Dict, cfg, h: jax.Array, ctx: Dict
+              ) -> Tuple[jax.Array, None, Aux]:
+    a_in = apply_norm(p["ln_attn"], h, cfg)
+    a_out, _ = attention(p["attn"], cfg, a_in, ctx["enc_positions"],
+                         causal=False, use_rope=False)
+    h = h + a_out
+    m_in = apply_norm(p["ln_mlp"], h, cfg)
+    return h + mlp(p["mlp"], cfg, m_in), None, jnp.zeros((), jnp.float32)
+
+
+def dec_layer_specs(cfg) -> Dict:
+    return {
+        "ln_self": norm_spec(cfg),
+        "self_attn": attn_specs(cfg),
+        "ln_cross": norm_spec(cfg),
+        "cross_attn": attn_specs(cfg),
+        "ln_mlp": norm_spec(cfg),
+        "mlp": mlp_specs(cfg),
+    }
+
+
+def dec_layer(p: Dict, cfg, h: jax.Array, ctx: Dict, cache: Optional[Dict]
+              ) -> Tuple[jax.Array, Optional[Dict], Aux]:
+    self_c = cache.get("self") if cache else None
+    a_in = apply_norm(p["ln_self"], h, cfg)
+    a_out, nc_self = attention(
+        p["self_attn"], cfg, a_in, ctx["positions"], cache=self_c,
+        cache_len=ctx.get("cache_len"), use_rope=False,
+        return_cache=ctx.get("return_cache", False))
+    nc_self = _con_cache(ctx, nc_self)
+    h = h + a_out
+    c_in = apply_norm(p["ln_cross"], h, cfg)
+    if cache is not None and "cross" in cache and cache["cross"] is not None:
+        # decode: reuse precomputed cross K/V (no update)
+        from .attention import _sdpa, _mask
+        kc, vc = cache["cross"]["k"], cache["cross"]["v"]
+        B, S, _ = c_in.shape
+        H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        q = (c_in @ p["cross_attn"]["wq"].astype(c_in.dtype)).reshape(
+            B, S, KV, H // KV, hd)
+        kpos = jnp.arange(kc.shape[1])
+        o = _sdpa(q, kc, vc, _mask(ctx["positions"], kpos, False, 0, None),
+                  0.0)
+        c_out = o.reshape(B, S, H * hd).astype(c_in.dtype) @ \
+            p["cross_attn"]["wo"].astype(c_in.dtype)
+        nc_cross = cache["cross"]
+    else:
+        c_out, nc_cross = attention(
+            p["cross_attn"], cfg, c_in, ctx["positions"], causal=False,
+            use_rope=False, kv_src=ctx["enc"], kv_positions=ctx["enc_positions"],
+            return_cache=ctx.get("return_cache", False))
+        nc_cross = _con_cache(ctx, nc_cross)
+    h = h + c_out
+    m_in = apply_norm(p["ln_mlp"], h, cfg)
+    new_cache = None
+    if nc_self is not None or nc_cross is not None:
+        new_cache = {"self": nc_self, "cross": nc_cross}
+    return h + mlp(p["mlp"], cfg, m_in), new_cache, jnp.zeros((), jnp.float32)

@@ -1,0 +1,150 @@
+"""Parameter specs, initializers and elementary layers.
+
+Parameters are built from *specs*: a nested dict whose leaves are
+``P(shape, axes, init, scale)``.  ``axes`` are *logical* axis names
+(``embed``, ``heads``, ``mlp``, ``vocab``, ``experts``, ...) mapped to
+mesh axes by ``repro.parallel.sharding`` — the one place distribution
+policy lives.  ``init_params`` materializes a spec tree; ``axes_tree``
+extracts the matching logical-axes tree for pjit shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | small_a
+    scale: Optional[float] = None  # default: 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x: Any) -> bool:
+    return isinstance(x, P)
+
+
+def init_params(key: jax.Array, specs: Dict, dtype=jnp.float32) -> Dict:
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, spec in zip(keys, leaves):
+        if spec.init == "zeros":
+            out.append(jnp.zeros(spec.shape, dtype))
+        elif spec.init == "ones":
+            out.append(jnp.ones(spec.shape, dtype))
+        elif spec.init == "small_a":   # mamba A_log init: log(uniform[1,16])
+            u = jax.random.uniform(k, spec.shape, jnp.float32, 1.0, 16.0)
+            out.append(jnp.log(u).astype(dtype))
+        else:
+            fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+            scale = spec.scale if spec.scale is not None else 1.0 / math.sqrt(fan_in)
+            out.append((jax.random.normal(k, spec.shape, jnp.float32) * scale).astype(dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def axes_tree(specs: Dict) -> Dict:
+    return jax.tree_util.tree_map(lambda s: s.axes, specs, is_leaf=is_spec)
+
+
+def shapes_tree(specs: Dict) -> Dict:
+    return jax.tree_util.tree_map(lambda s: s.shape, specs, is_leaf=is_spec)
+
+
+def param_count(params: Dict) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# elementary ops
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, weight: jax.Array, eps: float = 1e-6,
+            plus_one: bool = True) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    w = weight.astype(jnp.float32)
+    w = 1.0 + w if plus_one else w
+    return (x * w).astype(dt)
+
+
+def layernorm(x: jax.Array, weight: jax.Array, bias: jax.Array,
+              eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def norm_spec(cfg, dim: Optional[int] = None) -> Dict:
+    d = dim or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"w": P((d,), (None,), "ones"), "b": P((d,), (None,), "zeros")}
+    return {"w": P((d,), (None,), "zeros")}   # rmsnorm stored as (1 + w)
+
+
+def apply_norm(params: Dict, x: jax.Array, cfg) -> jax.Array:
+    if "b" in params:
+        return layernorm(x, params["w"], params["b"], cfg.norm_eps)
+    return rmsnorm(x, params["w"], cfg.norm_eps)
+
+
+def activation(name: str):
+    if name == "gelu":
+        return jax.nn.gelu
+    return jax.nn.silu
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if cap <= 0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D) rotated pairwise; positions: (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                     # (D/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs[None, :]  # (..., S, D/2)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, dim: int) -> jax.Array:
+    """Whisper-style sinusoidal embeddings (no params)."""
+    pos = np.arange(length)[:, None]
+    i = np.arange(dim // 2)[None, :]
+    angle = pos / np.power(10000.0, 2 * i / dim)
+    out = np.concatenate([np.sin(angle), np.cos(angle)], axis=1)
+    return jnp.asarray(out, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# vocab padding for clean TP sharding
+# ---------------------------------------------------------------------------
+
+def padded_vocab(vocab_size: int, multiple: int = 256) -> int:
+    return ((vocab_size + multiple - 1) // multiple) * multiple

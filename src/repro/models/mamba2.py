@@ -1,0 +1,223 @@
+"""Mamba2 — SSD (state-space duality) block (arXiv:2405.21060).
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+compute inside fixed-size chunks, linear recurrent state passing between
+chunks (mirrored by the Pallas kernel in ``repro.kernels.ssd``).  Decode
+is the O(1) recurrence over the (H, P, N) state.
+
+Tensor-parallel layout (EXPERIMENTS.md §Perf hillclimb #3): the reference
+implementation packs [z | x | B | C | dt] into one in_proj whose output
+dim cannot be sharded semantically, forcing the whole block to be
+TP-replicated (per-layer weight all-gathers dominated the collective
+term).  Projections are split so the large d_inner-sized pieces shard
+over the ``model`` axis — SSD heads are independent, so compute shards
+cleanly; only the small grouped B/C projections stay replicated:
+
+  z_proj, x_proj : (d, d_inner)   sharded on d_inner (H*P heads)
+  bc_proj        : (d, 2*G*N)     replicated (small)
+  dt_proj        : (d, H)         sharded on heads
+  depthwise conv : x-part sharded on channels, B/C-part replicated
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import P, rmsnorm
+
+
+def mamba_specs(cfg) -> Dict:
+    d, din = cfg.d_model, cfg.d_inner
+    G, N, H = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    return {
+        "z_proj": P((d, din), ("embed", "mlp")),
+        "x_proj": P((d, din), ("embed", "mlp")),
+        "bc_proj": P((d, 2 * G * N), ("embed", None)),
+        "dt_proj": P((d, H), ("embed", "heads")),
+        "conv_x_w": P((cfg.ssm_conv, din), (None, "mlp"), scale=0.3),
+        "conv_x_b": P((din,), ("mlp",), "zeros"),
+        "conv_bc_w": P((cfg.ssm_conv, 2 * G * N), (None, None), scale=0.3),
+        "conv_bc_b": P((2 * G * N,), (None,), "zeros"),
+        "A_log": P((H,), (None,), "small_a"),
+        "D": P((H,), (None,), "ones"),
+        "dt_bias": P((H,), (None,), "zeros"),
+        "gate_norm": P((din,), ("mlp",), "zeros"),
+        "out_proj": P((din, d), ("mlp", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 tail: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv, kernel size K.  x: (B, L, C); w: (K, C).
+    Returns (y, new_tail) where tail is the last K-1 inputs for decode."""
+    K = w.shape[0]
+    if tail is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
+    y = jax.nn.silu(y + b[None, None, :])
+    new_tail = xp[:, -(K - 1):, :]
+    return y, new_tail
+
+
+def _conv_step(x: jax.Array, w: jax.Array, b: jax.Array, tail: jax.Array
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Single decode step of the depthwise conv.  x: (B, 1, C)."""
+    K = w.shape[0]
+    xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)   # (B, K, C)
+    y = sum(xp[:, -K + i, :] * w[i][None, :] for i in range(K))
+    y = jax.nn.silu(y + b[None, :])
+    return y, xp[:, -(K - 1):, :]
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                C: jax.Array, chunk: int,
+                init_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """SSD core.  x: (b, L, H, P); dt: (b, L, H); A: (H,) < 0;
+    B, C: (b, L, G, N).  Returns (y (b,L,H,P), final_state (b,H,P,N)).
+    """
+    b, L, H, Pd = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    pad = (-L) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Lp = L + pad
+    nc = Lp // chunk
+    xc = x.reshape(b, nc, chunk, H, Pd)
+    dtc = dt.reshape(b, nc, chunk, H)
+    Bc = B.reshape(b, nc, chunk, G, N)
+    Cc = C.reshape(b, nc, chunk, G, N)
+
+    a = dtc * A[None, None, None, :]                      # log-decay per step
+    a_cum = jnp.cumsum(a, axis=2)                         # (b,nc,Q,H)
+    # intra-chunk "attention":  M[i,j] = exp(a_cum[i]-a_cum[j]) * (C_i . B_j) * dt_j
+    seg = a_cum[:, :, :, None, :] - a_cum[:, :, None, :, :]    # (b,nc,Q,Q,H)
+    qpos = jnp.arange(chunk)
+    causal = qpos[:, None] >= qpos[None, :]
+    # mask BEFORE exp: the non-causal region has seg > 0 and can overflow;
+    # exp-then-where poisons the backward pass with inf * 0 = NaN.
+    seg = jnp.where(causal[None, None, :, :, None], seg, -jnp.inf)
+    decay = jnp.exp(seg)
+    CB = jnp.einsum("bcqgn,bckgn->bcqkg", Cc.astype(jnp.float32),
+                    Bc.astype(jnp.float32))
+    CB = jnp.repeat(CB, rep, axis=-1) if G != H else CB   # (b,nc,Q,Q,H)
+    M = CB * decay * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", M, xc.astype(jnp.float32))
+
+    # chunk-level states: S_c = sum_j exp(a_cum[last]-a_cum[j]) dt_j B_j x_j^T
+    last = a_cum[:, :, -1:, :]                            # (b,nc,1,H)
+    w_in = jnp.exp(last - a_cum) * dtc                    # (b,nc,Q,H)
+    # expand groups to heads: (b,nc,Q,G,N) -> (b,nc,Q,H,N), h = g*rep + r
+    Bh = jnp.repeat(Bc[:, :, :, :, None, :], rep, axis=4).reshape(b, nc, chunk, H, N) \
+        if G != H else Bc
+    Ch = jnp.repeat(Cc[:, :, :, :, None, :], rep, axis=4).reshape(b, nc, chunk, H, N) \
+        if G != H else Cc
+    S_chunk = jnp.einsum("bcqh,bcqhn,bcqhp->bchpn", w_in,
+                         Bh.astype(jnp.float32), xc.astype(jnp.float32))
+    chunk_decay = jnp.exp(last[:, :, 0, :])               # (b,nc,H)
+
+    def scan_fn(state, inp):
+        s_c, dec = inp                                    # (b,H,P,N), (b,H)
+        out_state = state                                 # state BEFORE chunk
+        new_state = state * dec[:, :, None, None] + s_c
+        return new_state, out_state
+
+    s0 = init_state if init_state is not None else jnp.zeros((b, H, Pd, N), jnp.float32)
+    final, states_before = jax.lax.scan(
+        scan_fn, s0, (S_chunk.transpose(1, 0, 2, 3, 4),
+                      chunk_decay.transpose(1, 0, 2)))
+    states_before = states_before.transpose(1, 0, 2, 3, 4)  # (b,nc,H,P,N)
+
+    # inter-chunk contribution: y_j += exp(a_cum[j]) * C_j . state_before
+    w_out = jnp.exp(a_cum)                                # (b,nc,Q,H)
+    y_inter = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", Ch.astype(jnp.float32),
+                         states_before, w_out)
+    y = (y_intra + y_inter).reshape(b, Lp, H, Pd)[:, :L]
+    return y, final
+
+
+def ssd_decode_step(state: jax.Array, x: jax.Array, dt: jax.Array, A: jax.Array,
+                    B: jax.Array, C: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One-token recurrence.  state: (b,H,P,N); x: (b,H,P); dt: (b,H);
+    B, C: (b,G,N).  Returns (y (b,H,P), new_state)."""
+    H = x.shape[1]
+    G = B.shape[1]
+    rep = H // G
+    Bh = jnp.repeat(B[:, :, None, :], rep, axis=2).reshape(B.shape[0], H, -1)
+    Ch = jnp.repeat(C[:, :, None, :], rep, axis=2).reshape(C.shape[0], H, -1)
+    decay = jnp.exp(dt * A[None, :])                      # (b,H)
+    upd = jnp.einsum("bh,bhp,bhn->bhpn", dt, x.astype(jnp.float32),
+                     Bh.astype(jnp.float32))
+    new_state = state * decay[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch.astype(jnp.float32))
+    return y, new_state
+
+
+def mamba_block(params: Dict, cfg, h: jax.Array, *,
+                cache: Optional[Dict] = None, want_cache: bool = False,
+                constrain=None) -> Tuple[jax.Array, Optional[Dict]]:
+    """Full Mamba2 block.
+    cache = {"state": (b,H,P,N), "conv_x": (b,K-1,din), "conv_bc": (b,K-1,2GN)}.
+    """
+    Bsz, L, _ = h.shape
+    din = cfg.d_inner
+    G, N, H = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    Pd = cfg.ssm_head_dim
+    dt_ = h.dtype
+    z = h @ params["z_proj"].astype(dt_)
+    xr = h @ params["x_proj"].astype(dt_)
+    bc = h @ params["bc_proj"].astype(dt_)
+    dt_raw = h @ params["dt_proj"].astype(dt_)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    if cache is not None and L == 1:
+        xc, new_cx = _conv_step(xr, params["conv_x_w"], params["conv_x_b"],
+                                cache["conv_x"])
+        bcc, new_cbc = _conv_step(bc, params["conv_bc_w"], params["conv_bc_b"],
+                                  cache["conv_bc"])
+        x = xc.reshape(Bsz, H, Pd)
+        Bv = bcc[..., :G * N].reshape(Bsz, G, N)
+        Cv = bcc[..., G * N:].reshape(Bsz, G, N)
+        dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                             + params["dt_bias"][None, :])
+        yssm, new_state = ssd_decode_step(cache["state"], x, dt, A, Bv, Cv)
+        yssm = yssm + x.astype(jnp.float32) * params["D"][None, :, None]
+        yssm = yssm.reshape(Bsz, 1, din).astype(dt_)
+        new_cache = {"state": new_state, "conv_x": new_cx, "conv_bc": new_cbc}
+    else:
+        tail_x = cache["conv_x"] if cache is not None else None
+        tail_bc = cache["conv_bc"] if cache is not None else None
+        xc, new_cx = _causal_conv(xr, params["conv_x_w"], params["conv_x_b"],
+                                  tail_x)
+        bcc, new_cbc = _causal_conv(bc, params["conv_bc_w"],
+                                    params["conv_bc_b"], tail_bc)
+        x = xc.reshape(Bsz, L, H, Pd)
+        Bv = bcc[..., :G * N].reshape(Bsz, L, G, N)
+        Cv = bcc[..., G * N:].reshape(Bsz, L, G, N)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"][None, None, :])
+        if constrain is not None:
+            # head-shard the SSD internals: the (b, chunks, Q, Q, H) decay
+            # tensors dominate live memory if XLA keeps them seq-sharded
+            x = constrain(x)
+            dt = constrain(dt)
+        init = cache["state"] if cache is not None else None
+        yssm, final_state = ssd_chunked(x, dt, A, Bv, Cv, cfg.ssm_chunk, init)
+        yssm = yssm + x.astype(jnp.float32) * params["D"][None, None, :, None]
+        yssm = yssm.reshape(Bsz, L, din).astype(dt_)
+        if cache is not None or want_cache:
+            new_cache = {"state": final_state, "conv_x": new_cx,
+                         "conv_bc": new_cbc}
+        else:
+            new_cache = None
+    # gated norm + out projection
+    y = rmsnorm(yssm * jax.nn.silu(z), params["gate_norm"], cfg.norm_eps)
+    return y @ params["out_proj"].astype(dt_), new_cache

@@ -1,0 +1,176 @@
+"""Multi-head Latent Attention (DeepSeek-V3, arXiv:2412.19437).
+
+Queries and KV are low-rank compressed; the KV cache stores only the
+latent ``c_kv`` (kv_lora_rank) plus a shared RoPE key (qk_rope_dim).
+Decode uses the *absorbed* formulation: the up-projection ``W^{UK}`` is
+folded into the query so attention runs in latent space — the memory
+win that makes 32k/500k caches practical.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import NEG_INF, _mask
+from .layers import P, apply_rope, rmsnorm
+
+# sequences longer than this use the chunked online-softmax path
+# (module-level so tests can exercise both paths at small sizes)
+FLASH_THRESHOLD = 4096
+
+
+def mla_specs(cfg) -> Dict:
+    d, H = cfg.d_model, cfg.n_heads
+    nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "wq_a": P((d, cfg.q_lora_rank), ("embed", "lora")),
+        "q_norm": P((cfg.q_lora_rank,), (None,), "zeros"),
+        "wq_b": P((cfg.q_lora_rank, H * (nope + rope)), ("lora", "heads")),
+        "wkv_a": P((d, cfg.kv_lora_rank + rope), ("embed", "lora")),
+        "kv_norm": P((cfg.kv_lora_rank,), (None,), "zeros"),
+        "wkv_b": P((cfg.kv_lora_rank, H * (nope + vd)), ("lora", "heads")),
+        "wo": P((H * vd, d), ("heads", "embed")),
+    }
+
+
+def _project_q(params: Dict, cfg, x: jax.Array, positions: jax.Array):
+    B, S, _ = x.shape
+    H, nope, rope = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    dt = x.dtype
+    cq = rmsnorm(x @ params["wq_a"].astype(dt), params["q_norm"], cfg.norm_eps)
+    q = (cq @ params["wq_b"].astype(dt)).reshape(B, S, H, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latent_kv(params: Dict, cfg, x: jax.Array, positions: jax.Array):
+    """Compressed cache entries: (c_kv normalized, k_rope rotated)."""
+    dt = x.dtype
+    kvr = x @ params["wkv_a"].astype(dt)
+    ckv, k_rope = kvr[..., :cfg.kv_lora_rank], kvr[..., cfg.kv_lora_rank:]
+    ckv = rmsnorm(ckv, params["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return ckv, k_rope
+
+
+def mla_attention(params: Dict, cfg, x: jax.Array, positions: jax.Array, *,
+                  cache: Optional[Dict] = None,
+                  cache_len: Optional[jax.Array] = None,
+                  return_cache: bool = False) -> Tuple[jax.Array, Optional[Dict]]:
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    lr = cfg.kv_lora_rank
+    dt = x.dtype
+    scale = 1.0 / math.sqrt(nope + rope)
+    q_nope, q_rope = _project_q(params, cfg, x, positions)
+    wkv_b = params["wkv_b"].astype(dt).reshape(lr, H, nope + vd)
+    wk_b, wv_b = wkv_b[..., :nope], wkv_b[..., nope:]
+
+    if cache is not None:
+        # ---- decode: absorbed attention in latent space -------------------
+        ckv_new, kr_new = _latent_kv(params, cfg, x, positions)
+        if jnp.ndim(cache_len) == 1:    # per-row positions (batcher)
+            upd = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(
+                c, n, (i, 0)))
+            ckv = upd(cache["ckv"], ckv_new.astype(cache["ckv"].dtype),
+                      cache_len)
+            kr = upd(cache["kr"], kr_new.astype(cache["kr"].dtype), cache_len)
+        else:
+            ckv = jax.lax.dynamic_update_slice(
+                cache["ckv"], ckv_new.astype(cache["ckv"].dtype),
+                (0, cache_len, 0))
+            kr = jax.lax.dynamic_update_slice(
+                cache["kr"], kr_new.astype(cache["kr"].dtype),
+                (0, cache_len, 0))
+        new_cache = {"ckv": ckv, "kr": kr}
+        # fold W^{UK} into q:  (B,S,H,nope) x (lr,H,nope) -> (B,S,H,lr)
+        q_lat = jnp.einsum("bshn,lhn->bshl", q_nope.astype(jnp.float32),
+                           wk_b.astype(jnp.float32))
+        s_lat = jnp.einsum("bshl,btl->bhst", q_lat, ckv.astype(jnp.float32))
+        s_rope = jnp.einsum("bshr,btr->bhst", q_rope.astype(jnp.float32),
+                            kr.astype(jnp.float32))
+        s = (s_lat + s_rope) * scale
+        kpos = jnp.arange(ckv.shape[1])
+        if jnp.ndim(cache_len) == 1:
+            msk = jnp.broadcast_to(
+                kpos[None, None, :] < (cache_len + S)[:, None, None],
+                (B, S, ckv.shape[1]))
+            s = jnp.where(msk[:, None], s, NEG_INF)
+        else:
+            msk = _mask(positions, kpos, False, 0, cache_len + S)
+            s = jnp.where(msk[None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        ctx = jnp.einsum("bhst,btl->bshl", p, ckv.astype(jnp.float32))
+        o = jnp.einsum("bshl,lhv->bshv", ctx, wv_b.astype(jnp.float32))
+    else:
+        # ---- train/prefill ------------------------------------------------
+        ckv, k_rope = _latent_kv(params, cfg, x, positions)
+        new_cache = {"ckv": ckv, "kr": k_rope} if return_cache else None
+        if S <= FLASH_THRESHOLD:
+            k_nope = jnp.einsum("btl,lhn->bthn", ckv.astype(jnp.float32),
+                                wk_b.astype(jnp.float32))
+            v = jnp.einsum("btl,lhv->bthv", ckv.astype(jnp.float32),
+                           wv_b.astype(jnp.float32))
+            s = (jnp.einsum("bshn,bthn->bhst", q_nope.astype(jnp.float32), k_nope)
+                 + jnp.einsum("bshr,btr->bhst", q_rope.astype(jnp.float32),
+                              k_rope.astype(jnp.float32))) * scale
+            msk = _mask(positions, positions, True, 0, None)
+            s = jnp.where(msk[None, None], s, NEG_INF)
+            p = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("bhst,bthv->bshv", p, v)
+        else:
+            o = _mla_flash(cfg, q_nope, q_rope, ckv, k_rope, wk_b, wv_b,
+                           positions, scale)
+    out = o.reshape(B, S, H * vd).astype(dt) @ params["wo"].astype(dt)
+    return out, new_cache
+
+
+def _mla_flash(cfg, q_nope, q_rope, ckv, k_rope, wk_b, wv_b, positions,
+               scale, chunk: int = 2048):
+    """Online-softmax over KV chunks; K/V expanded from the latent per
+    chunk (compute-optimal prefill form; decode uses the absorbed form)."""
+    B, S, H, nope = q_nope.shape
+    vd = wv_b.shape[-1]
+    T = ckv.shape[1]
+    n = (T + chunk - 1) // chunk
+    pad = n * chunk - T
+    if pad:
+        ckv = jnp.pad(ckv, ((0, 0), (0, pad), (0, 0)))
+        k_rope = jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0)))
+    kpos = jnp.pad(positions, (0, pad),
+                   constant_values=jnp.iinfo(jnp.int32).max // 2)
+    ckv_c = ckv.reshape(B, n, chunk, -1).transpose(1, 0, 2, 3)
+    kr_c = k_rope.reshape(B, n, chunk, -1).transpose(1, 0, 2, 3)
+    pc = kpos.reshape(n, chunk)
+    qn = q_nope.astype(jnp.float32)
+    qr = q_rope.astype(jnp.float32)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        cj, rj, pj = xs
+        k_nope = jnp.einsum("bcl,lhn->bchn", cj.astype(jnp.float32),
+                            wk_b.astype(jnp.float32))
+        vj = jnp.einsum("bcl,lhv->bchv", cj.astype(jnp.float32),
+                        wv_b.astype(jnp.float32))
+        s = (jnp.einsum("bshn,bchn->bhsc", qn, k_nope)
+             + jnp.einsum("bshr,bcr->bhsc", qr, rj.astype(jnp.float32))) * scale
+        msk = positions[:, None] >= pj[None, :]
+        s = jnp.where(msk[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("bhsc,bchv->bhsv", p, vj)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, S), jnp.float32)
+    a0 = jnp.zeros((B, H, S, vd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ckv_c, kr_c, pc))
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    return o.transpose(0, 2, 1, 3)             # (B,S,H,vd)

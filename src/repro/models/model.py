@@ -1,0 +1,396 @@
+"""Model assembly: init / train forward / prefill / decode for all families.
+
+Layers are organized into *groups* of identical structure; each group's
+parameters are stacked along a leading "layers" axis and executed with
+``jax.lax.scan`` (small HLO, fast compiles, natural remat unit).  Caches
+are stacked the same way and threaded through the scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import blocks
+from .config import ModelConfig
+from .layers import (P, apply_norm, axes_tree, init_params, norm_spec,
+                     padded_vocab, sinusoidal_positions, softcap)
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupDef:
+    name: str
+    n: int                                   # scan length
+    specs: Dict                              # per-step param specs
+    body: Callable                           # (p, cfg, h, ctx, cache) -> (h, cache, aux)
+    has_cache: bool = True
+
+
+def group_defs(cfg: ModelConfig) -> List[GroupDef]:
+    f = cfg.family
+    if f == "dense":
+        if cfg.local_global:
+            return [GroupDef("pairs", cfg.n_layers // 2, blocks.gemma_pair_specs(cfg),
+                             blocks.gemma_pair)]
+        return [GroupDef("layers", cfg.n_layers, blocks.dense_layer_specs(cfg),
+                         blocks.dense_layer)]
+    if f == "moe":
+        if cfg.use_mla:
+            defs = []
+            if cfg.n_dense_layers:
+                defs.append(GroupDef("dense", cfg.n_dense_layers,
+                                     blocks.mla_dense_specs(cfg), blocks.mla_layer))
+            defs.append(GroupDef("moe", cfg.n_layers - cfg.n_dense_layers,
+                                 blocks.mla_moe_specs(cfg), blocks.mla_layer))
+            return defs
+        return [GroupDef("layers", cfg.n_layers, blocks.moe_layer_specs(cfg),
+                         blocks.moe_layer)]
+    if f == "ssm":
+        return [GroupDef("layers", cfg.n_layers, blocks.ssm_layer_specs(cfg),
+                         blocks.ssm_layer)]
+    if f == "hybrid":
+        per = cfg.hybrid_period
+        n_periods = cfg.n_layers // per
+        tail = cfg.n_layers - n_periods * per
+        defs = [GroupDef("periods", n_periods, blocks.zamba_period_specs(cfg),
+                         None)]  # body bound later (needs shared params)
+        if tail:
+            defs.append(GroupDef("tail", tail, blocks.ssm_layer_specs(cfg),
+                                 blocks.ssm_layer))
+        return defs
+    if f == "encdec":
+        return [GroupDef("encoder", cfg.n_encoder_layers, blocks.enc_layer_specs(cfg),
+                         blocks.enc_layer, has_cache=False),
+                GroupDef("decoder", cfg.n_layers, blocks.dec_layer_specs(cfg),
+                         blocks.dec_layer)]
+    raise ValueError(f"unknown family {f}")
+
+
+# ---------------------------------------------------------------------------
+# parameter construction
+# ---------------------------------------------------------------------------
+
+def _stack_specs(specs: Dict, n: int) -> Dict:
+    def bump(p: P) -> P:
+        return P((n,) + p.shape, ("layers",) + p.axes, p.init, p.scale)
+    return jax.tree_util.tree_map(bump, specs,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def model_specs(cfg: ModelConfig) -> Dict:
+    vp = padded_vocab(cfg.vocab_size)
+    specs: Dict[str, Any] = {
+        "embed": P((vp, cfg.d_model), ("vocab", "embed"), scale=1.0),
+        "final_norm": norm_spec(cfg),
+        "groups": {g.name: _stack_specs(g.specs, g.n) for g in group_defs(cfg)},
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P((cfg.d_model, vp), ("embed", "vocab"))
+    if cfg.family == "hybrid":
+        specs["shared_block"] = blocks.shared_attn_specs(cfg)
+    if cfg.mtp_depth:
+        specs["mtp"] = {
+            "proj": P((2 * cfg.d_model, cfg.d_model), ("embed", "embed")),
+            "norm_h": norm_spec(cfg),
+            "norm_e": norm_spec(cfg),
+            "layer": blocks.mla_dense_specs(cfg) if cfg.use_mla
+            else blocks.dense_layer_specs(cfg),
+        }
+    return specs
+
+
+def init_model(key: jax.Array, cfg: ModelConfig) -> Dict:
+    dt = jnp.dtype(cfg.param_dtype)
+    return init_params(key, model_specs(cfg), dtype=dt)
+
+
+def model_axes(cfg: ModelConfig) -> Dict:
+    return axes_tree(model_specs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# scan machinery
+# ---------------------------------------------------------------------------
+
+def _scan_group(gdef: GroupDef, params: Dict, cfg: ModelConfig, h: jax.Array,
+                ctx: Dict, cache: Optional[Dict], shared: Optional[Dict]
+                ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+    body = gdef.body
+
+    con = ctx.get("constrain")
+
+    def step(carry, xs):
+        hh = carry
+        p, c = xs
+        if con is not None:
+            hh = con(hh)
+        if gdef.name == "periods":
+            hh2, nc, aux = blocks.zamba_period(p, shared, cfg, hh, ctx, c)
+        elif gdef.has_cache:
+            hh2, nc, aux = body(p, cfg, hh, ctx, c)
+        else:
+            hh2, nc, aux = body(p, cfg, hh, ctx)
+        if con is not None:
+            hh2 = con(hh2)
+        return hh2, (nc, aux)
+
+    fn = jax.checkpoint(step) if cfg.remat else step
+    if cfg.unroll:
+        caches, auxes = [], []
+        for i in range(gdef.n):
+            p_i = jax.tree_util.tree_map(lambda x: x[i], params)
+            c_i = None if cache is None else jax.tree_util.tree_map(
+                lambda x: x[i], cache)
+            h, (nc_i, aux_i) = fn(h, (p_i, c_i))
+            caches.append(nc_i)
+            auxes.append(aux_i)
+        aux = jnp.stack(auxes)
+        if all(x is None for x in jax.tree_util.tree_leaves(caches)):
+            new_cache = None
+        else:
+            new_cache = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *caches)
+    else:
+        h, (new_cache, aux) = jax.lax.scan(fn, h, (params, cache))
+        if new_cache is not None and all(
+                x is None for x in jax.tree_util.tree_leaves(new_cache)):
+            new_cache = None
+    return h, new_cache, aux.sum()
+
+
+def _embed(params: Dict, cfg: ModelConfig, tokens: jax.Array,
+           patch_embeds: Optional[jax.Array] = None) -> jax.Array:
+    dt = jnp.dtype(cfg.dtype)
+    h = params["embed"].astype(dt)[tokens]
+    if cfg.name.startswith("gemma"):
+        h = h * jnp.asarray(cfg.d_model ** 0.5, dt)
+    if cfg.n_patches and patch_embeds is not None:
+        pe = patch_embeds.astype(dt)
+        h = jnp.concatenate([pe, h[:, cfg.n_patches:]], axis=1)
+    return h
+
+
+def _logits(params: Dict, cfg: ModelConfig, h: jax.Array) -> jax.Array:
+    h = apply_norm(params["final_norm"], h, cfg)
+    if cfg.tie_embeddings:
+        logits = h @ params["embed"].astype(h.dtype).T
+    else:
+        logits = h @ params["lm_head"].astype(h.dtype)
+    logits = softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
+    return logits
+
+
+def _run_encoder(params: Dict, cfg: ModelConfig, frames: jax.Array,
+                 ctx: Dict) -> jax.Array:
+    dt = jnp.dtype(cfg.dtype)
+    enc_pos = jnp.arange(frames.shape[1])
+    h = frames.astype(dt) + sinusoidal_positions(frames.shape[1],
+                                                 cfg.d_model).astype(dt)
+    ctx = dict(ctx, enc_positions=enc_pos)
+    h, _, _ = _scan_group([g for g in group_defs(cfg) if g.name == "encoder"][0],
+                          params["groups"]["encoder"], cfg, h, ctx, None, None)
+    ctx["enc"] = h
+    return h, ctx
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def forward_train(params: Dict, cfg: ModelConfig, batch: Dict,
+                  constrain=None, constrain_ssm=None, constrain_qkv=None
+                  ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Returns (logits (B,S,Vpad) fp32, aux dict incl. optional mtp logits).
+    ``constrain`` (optional) re-asserts the batch sharding of the hidden
+    state inside each scanned layer — without it XLA may shard the
+    remat-saved activation stack on the layer dim (or replicate it)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.arange(S)
+    ctx: Dict[str, Any] = {"positions": positions, "mode": "train",
+                           "return_cache": False, "constrain": constrain,
+                           "constrain_ssm": constrain_ssm,
+                           "constrain_qkv": constrain_qkv}
+    if cfg.family == "encdec":
+        _, ctx = _run_encoder(params, cfg, batch["frames"], ctx)
+        if cfg.norm == "layernorm":
+            pass
+        dt = jnp.dtype(cfg.dtype)
+        h = params["embed"].astype(dt)[tokens] + sinusoidal_positions(
+            S, cfg.d_model).astype(dt)
+    else:
+        h = _embed(params, cfg, tokens, batch.get("patch_embeds"))
+    ctx["h0"] = h
+    aux_total = jnp.zeros((), jnp.float32)
+    shared = params.get("shared_block")
+    for g in group_defs(cfg):
+        if g.name == "encoder":
+            continue
+        h, _, aux = _scan_group(g, params["groups"][g.name], cfg, h, ctx,
+                                None, shared)
+        aux_total = aux_total + aux
+    logits = _logits(params, cfg, h)
+    aux: Dict[str, jax.Array] = {"moe_aux": aux_total}
+    if cfg.mtp_depth:
+        aux["mtp_logits"] = _mtp_logits(params, cfg, h, tokens)
+    return logits, aux
+
+
+def _mtp_logits(params: Dict, cfg: ModelConfig, h: jax.Array,
+                tokens: jax.Array) -> jax.Array:
+    """DeepSeek-V3 multi-token prediction (depth 1): combine the trunk
+    hidden state at position t with the embedding of token t+1, run one
+    extra layer, and predict token t+2 through the shared head."""
+    mtp = params["mtp"]
+    dt = h.dtype
+    nxt = jnp.roll(tokens, -1, axis=1)
+    e = params["embed"].astype(dt)[nxt]
+    hin = jnp.concatenate([apply_norm(mtp["norm_h"], h, cfg),
+                           apply_norm(mtp["norm_e"], e, cfg)], axis=-1)
+    hm = hin @ mtp["proj"].astype(dt)
+    ctx = {"positions": jnp.arange(h.shape[1]), "mode": "train",
+           "return_cache": False}
+    if cfg.use_mla:
+        hm, _, _ = blocks.mla_layer(mtp["layer"], cfg, hm, ctx, None)
+    else:
+        hm, _, _ = blocks.dense_layer(mtp["layer"], cfg, hm, ctx, None)
+    return _logits(params, cfg, hm)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Dict:
+    """Stacked per-group decode caches."""
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+
+    def kv(n: int, length: int) -> Dict:
+        return {"k": jnp.zeros((n, batch, length, KV, hd), dtype),
+                "v": jnp.zeros((n, batch, length, KV, hd), dtype)}
+
+    def ssm(n: int) -> Dict:
+        return {"state": jnp.zeros((n, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                                    cfg.ssm_state), jnp.float32),
+                "conv_x": jnp.zeros((n, batch, cfg.ssm_conv - 1, cfg.d_inner),
+                                    dtype),
+                "conv_bc": jnp.zeros((n, batch, cfg.ssm_conv - 1,
+                                      2 * cfg.ssm_groups * cfg.ssm_state),
+                                     dtype)}
+
+    caches: Dict[str, Any] = {}
+    for g in group_defs(cfg):
+        if g.name == "encoder":
+            continue
+        if g.name == "pairs":
+            local_len = min(max_len, cfg.sliding_window)
+            caches[g.name] = {"local": kv(g.n, local_len),
+                              "global": kv(g.n, max_len)}
+        elif g.name in ("layers", "dense", "moe") and cfg.use_mla:
+            caches[g.name] = {
+                "ckv": jnp.zeros((g.n, batch, max_len, cfg.kv_lora_rank), dtype),
+                "kr": jnp.zeros((g.n, batch, max_len, cfg.qk_rope_dim), dtype)}
+        elif cfg.family == "ssm":
+            caches[g.name] = ssm(g.n)
+        elif g.name == "periods":
+            caches[g.name] = {
+                "ssm": [ssm(g.n) for _ in range(cfg.hybrid_period)],
+                "attn": kv(g.n, max_len)}
+        elif g.name == "tail":
+            caches[g.name] = ssm(g.n)
+        elif g.name == "decoder":
+            caches[g.name] = {"self": kv(g.n, max_len),
+                              "cross": kv(g.n, cfg.encoder_seq)}
+        else:
+            caches[g.name] = kv(g.n, max_len)
+    return caches
+
+
+def encdec_prepare(params: Dict, cfg: ModelConfig, frames: jax.Array
+                   ) -> Tuple[jax.Array, Dict]:
+    """Run the encoder once and precompute per-decoder-layer cross K/V
+    (the serving fast path: cross-attention K/V are static during decode)."""
+    enc, _ = _run_encoder(params, cfg, frames, {})
+    dec_p = params["groups"]["decoder"]
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+
+    def one_layer(p):
+        B, Se, _ = enc.shape
+        k = (enc @ p["cross_attn"]["wk"].astype(enc.dtype)).reshape(B, Se, KV, hd)
+        v = (enc @ p["cross_attn"]["wv"].astype(enc.dtype)).reshape(B, Se, KV, hd)
+        return {"k": k, "v": v}
+
+    cross = jax.vmap(one_layer)(dec_p)
+    return enc, cross
+
+
+def prefill(params: Dict, cfg: ModelConfig, batch: Dict, max_len: int,
+            constrain=None, constrain_cache=None, constrain_ssm=None
+            ) -> Tuple[jax.Array, Dict]:
+    """Forward over the prompt; returns (last-position logits, cache).
+
+    ``constrain``/``constrain_cache`` re-assert batch/seq shardings of the
+    hidden state and the per-layer cache entries inside the scan (see
+    forward_train; without them the stacked cache/remat buffers lose the
+    batch sharding)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.arange(S)
+    ctx: Dict[str, Any] = {"positions": positions, "mode": "prefill",
+                           "return_cache": True, "constrain": constrain,
+                           "constrain_cache": constrain_cache,
+                           "constrain_ssm": constrain_ssm}
+    if cfg.family == "encdec":
+        _, ctx = _run_encoder(params, cfg, batch["frames"], ctx)
+        dt = jnp.dtype(cfg.dtype)
+        h = params["embed"].astype(dt)[tokens] + sinusoidal_positions(
+            S, cfg.d_model).astype(dt)
+    else:
+        h = _embed(params, cfg, tokens, batch.get("patch_embeds"))
+    ctx["h0"] = h
+    shared = params.get("shared_block")
+    cache_out: Dict[str, Any] = {}
+    for g in group_defs(cfg):
+        if g.name == "encoder":
+            continue
+        h, nc, _ = _scan_group(g, params["groups"][g.name], cfg, h, ctx, None,
+                               shared)
+        cache_out[g.name] = nc
+    logits = _logits(params, cfg, h[:, -1:])
+    return logits, cache_out
+
+
+def decode_step(params: Dict, cfg: ModelConfig, tokens: jax.Array,
+                cache: Dict, cache_len: jax.Array,
+                batch_extras: Optional[Dict] = None
+                ) -> Tuple[jax.Array, Dict]:
+    """One decode step.  tokens: (B, 1); cache from init_cache/prefill.
+    ``cache_len`` may be a scalar (synchronized batch) or a (B,) vector
+    of per-row positions (continuous batching)."""
+    B, S = tokens.shape
+    if jnp.ndim(cache_len) == 1:
+        positions = cache_len[:, None] + jnp.arange(S)[None, :]
+    else:
+        positions = cache_len + jnp.arange(S)
+    ctx: Dict[str, Any] = {"positions": positions, "mode": "decode",
+                           "cache_len": cache_len, "return_cache": True}
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.family == "encdec":
+        ctx["enc"] = (batch_extras or {}).get("enc")
+        ctx["enc_positions"] = jnp.arange(cfg.encoder_seq)
+        max_len = cache["decoder"]["self"]["k"].shape[2]
+        pos_tab = sinusoidal_positions(max_len, cfg.d_model).astype(dt)
+        h = params["embed"].astype(dt)[tokens] + pos_tab[positions][None]
+    else:
+        h = _embed(params, cfg, tokens)
+    ctx["h0"] = h
+    shared = params.get("shared_block")
+    new_cache: Dict[str, Any] = {}
+    for g in group_defs(cfg):
+        if g.name == "encoder":
+            continue
+        h, nc, _ = _scan_group(g, params["groups"][g.name], cfg, h, ctx,
+                               cache[g.name], shared)
+        new_cache[g.name] = nc
+    logits = _logits(params, cfg, h)
+    return logits, new_cache

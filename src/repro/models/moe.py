@@ -1,0 +1,126 @@
+"""Mixture-of-Experts with token-choice top-k routing and capacity-bounded
+scatter dispatch (expert-parallel friendly).
+
+Dispatch avoids the dense (tokens, experts, capacity) one-hot tensor:
+tokens are scattered into a per-expert buffer (E, C, d) using their
+rank-within-expert (a cumsum over assignment one-hots), expert FFNs run as
+one batched einsum over stacked weights, and results gather back.  With
+``experts -> model`` sharding XLA lowers the scatter/gather into
+all-to-all exchanges — the TPU-native analogue of PS-style gradient
+sharding.  Tokens beyond capacity are dropped (standard Switch-style).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import P, activation
+
+
+def moe_specs(cfg) -> Dict:
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    specs = {
+        "router": P((d, E), ("embed", "experts"), scale=0.02),
+        "wg": P((E, d, f), ("experts", "embed", "expert_mlp")),
+        "wi": P((E, d, f), ("experts", "embed", "expert_mlp")),
+        "wo": P((E, f, d), ("experts", "expert_mlp", "embed")),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        specs["shared"] = {
+            "wg": P((d, fs), ("embed", "mlp")),
+            "wi": P((d, fs), ("embed", "mlp")),
+            "wo": P((fs, d), ("mlp", "embed")),
+        }
+    return specs
+
+
+def _router_probs(cfg, logits: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Top-k expert ids and combine weights; (T, k) each."""
+    if cfg.router_type == "sigmoid":           # deepseek-v3 style
+        scores = jax.nn.sigmoid(logits)
+        w, ids = jax.lax.top_k(scores, cfg.top_k)
+        w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        w, ids = jax.lax.top_k(probs, cfg.top_k)
+        w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    return ids, w
+
+
+def _rank_in_expert(flat_ids: jax.Array, n_experts: int) -> jax.Array:
+    """rank[j] = number of i < j with flat_ids[i] == flat_ids[j].
+
+    Stable-sort the assignments by expert, compute the position within
+    each sorted segment with a 1-D running maximum of segment starts,
+    and scatter back through the inverse permutation."""
+    tk = flat_ids.shape[0]
+    order = jnp.argsort(flat_ids, stable=True)
+    sorted_ids = flat_ids[order]
+    idx = jnp.arange(tk)
+    is_start = jnp.concatenate([jnp.ones((1,), bool),
+                                sorted_ids[1:] != sorted_ids[:-1]])
+    seg_start = jax.lax.associative_scan(jnp.maximum,
+                                         jnp.where(is_start, idx, 0))
+    rank_sorted = idx - seg_start
+    return jnp.zeros(tk, jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
+
+
+def _rank_in_expert_ref(flat_ids: jax.Array, n_experts: int) -> jax.Array:
+    """Reference O(TK*E) one-hot cumsum ranking (test oracle)."""
+    onehot = jax.nn.one_hot(flat_ids, n_experts, dtype=jnp.int32)
+    cum = jnp.cumsum(onehot, axis=0) - onehot
+    return jnp.take_along_axis(cum, flat_ids[:, None], axis=1)[:, 0]
+
+
+def moe_block(params: Dict, cfg, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss)."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    dt = x.dtype
+    xt = x.reshape(T, d)
+    logits = (xt @ params["router"].astype(dt)).astype(jnp.float32)
+    ids, w = _router_probs(cfg, logits)                    # (T,k)
+
+    # load-balancing auxiliary loss (Switch/OLMoE style)
+    probs = jax.nn.softmax(logits, axis=-1)
+    me = probs.mean(axis=0)                                # mean router prob
+    ce = jnp.zeros(E).at[ids.reshape(-1)].add(1.0) / (T * k)
+    aux = cfg.router_aux_coef * E * jnp.sum(me * ce)
+
+    cap = max(1, int(math.ceil(T * k / E * cfg.capacity_factor)))
+    flat_ids = ids.reshape(-1)                             # (T*k,)
+    flat_w = w.reshape(-1)
+    # rank of each assignment within its expert (# prior hits on that
+    # expert).  Sort-based: O(TK log TK) total.  The textbook one-hot
+    # cumsum is O(TK * E) and its reduce-window lowering dominated the
+    # whole step's HLO FLOPs (5.7e14/device for olmoe train_4k — see
+    # EXPERIMENTS.md §Perf hillclimb #1), so it is kept only as a
+    # reference implementation in tests.
+    rank = _rank_in_expert(flat_ids, E)
+    keep = rank < cap
+    slot = flat_ids * cap + jnp.where(keep, rank, 0)       # (T*k,)
+
+    buf = jnp.zeros((E * cap, d), dt)
+    tok_idx = jnp.repeat(jnp.arange(T), k)
+    buf = buf.at[slot].add(jnp.where(keep[:, None], xt[tok_idx], 0))
+    xe = buf.reshape(E, cap, d)
+
+    act = activation(cfg.act)
+    h = act(jnp.einsum("ecd,edf->ecf", xe, params["wg"].astype(dt))) * \
+        jnp.einsum("ecd,edf->ecf", xe, params["wi"].astype(dt))
+    ye = jnp.einsum("ecf,efd->ecd", h, params["wo"].astype(dt))
+
+    gathered = ye.reshape(E * cap, d)[slot]                # (T*k, d)
+    gathered = jnp.where(keep[:, None], gathered, 0) * flat_w[:, None].astype(dt)
+    out = jnp.zeros((T, d), dt).at[tok_idx].add(gathered)
+
+    if cfg.n_shared_experts:
+        sh = params["shared"]
+        hs = act(xt @ sh["wg"].astype(dt)) * (xt @ sh["wi"].astype(dt))
+        out = out + hs @ sh["wo"].astype(dt)
+    return out.reshape(B, S, d), aux

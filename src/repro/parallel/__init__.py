@@ -1,0 +1,2 @@
+from .sharding import (batch_sharding, logical_rules, param_shardings,
+                       with_batch_constraint)

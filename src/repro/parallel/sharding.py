@@ -1,0 +1,132 @@
+"""Logical-axis -> mesh-axis sharding policy (the one place it lives).
+
+Parallelism map (DP/FSDP/TP/EP/pod):
+  batch        -> ("pod", "data")      data parallel across pods and the
+                                       data axis (DP)
+  embed        -> "data"               parameter fsdp/ZeRO-3 sharding: XLA
+                                       all-gathers weights per layer and
+                                       reduce-scatters grads (the TPU-native
+                                       analogue of the paper's parameter
+                                       servers — see DESIGN.md §3)
+  heads/kv/mlp/vocab -> "model"        tensor parallel (TP)
+  experts      -> "model"              expert parallel (EP)
+  layers/lora/state/... -> replicated
+
+A logical dim is sharded only when its size divides the mesh axis product
+(e.g. granite's kv=1 stays replicated); this keeps every (arch x mesh)
+combination lowerable without per-arch hand-tuning.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+def logical_rules(mesh: Mesh) -> Dict[str, Tuple[str, ...]]:
+    has_pod = "pod" in mesh.axis_names
+    batch = ("pod", "data") if has_pod else ("data",)
+    return {
+        "batch": batch,
+        "embed": ("data",),
+        "heads": ("model",),
+        "kv": ("model",),
+        "mlp": ("model",),
+        "vocab": ("model",),
+        "experts": ("model",),
+        "expert_mlp": (),
+        "lora": (),
+        "layers": (),
+        "conv": (),
+        "state": (),
+        "seq": (),
+    }
+
+
+def _axis_size(mesh: Mesh, names: Tuple[str, ...]) -> int:
+    return int(np.prod([mesh.shape[n] for n in names])) if names else 1
+
+
+def _spec_for(shape: Tuple[int, ...], axes: Tuple[Optional[str], ...],
+              mesh: Mesh, rules: Dict[str, Tuple[str, ...]]) -> PartitionSpec:
+    used = set()
+    entries = []
+    for dim, ax in zip(shape, axes):
+        mesh_axes: Tuple[str, ...] = ()
+        if ax is not None:
+            mesh_axes = tuple(rules.get(ax, ()))
+        # drop if not divisible or mesh axis already consumed by another dim
+        if mesh_axes and (any(m in used for m in mesh_axes)
+                          or dim % _axis_size(mesh, mesh_axes) != 0):
+            mesh_axes = ()
+        if mesh_axes:
+            used.update(mesh_axes)
+            entries.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+        else:
+            entries.append(None)
+    return PartitionSpec(*entries)
+
+
+def param_shardings(axes_tree: Dict, shapes_tree: Dict, mesh: Mesh) -> Dict:
+    """Build a NamedSharding tree matching the params tree."""
+    rules = logical_rules(mesh)
+
+    def one(axes, shape):
+        return NamedSharding(mesh, _spec_for(tuple(shape), tuple(axes), mesh, rules))
+
+    return jax.tree_util.tree_map(
+        one, axes_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def batch_sharding(mesh: Mesh) -> NamedSharding:
+    rules = logical_rules(mesh)
+    return NamedSharding(mesh, PartitionSpec(rules["batch"]))
+
+
+def with_batch_constraint(x: jax.Array, mesh: Mesh) -> jax.Array:
+    rules = logical_rules(mesh)
+    spec = PartitionSpec(rules["batch"], *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def cache_shardings(cache_tree, mesh: Mesh):
+    """Decode caches.  Layout conventions (see models.model.init_cache):
+      k/v   : (layers, B, L, KV, hd) -> batch over dp; KV over model if it
+              divides, else L over model (flash-decoding split — the
+              softmax over the sharded length becomes a tiny all-reduce)
+      ckv/kr: (layers, B, L, r)      -> batch over dp, L over model
+      state : (layers, B, H, P, N)   -> batch over dp, H over model
+      conv  : (layers, B, K-1, C)    -> batch over dp
+    Any dim that does not divide its mesh axes falls back to replicated.
+    """
+    rules = logical_rules(mesh)
+    model = rules["heads"]
+    batch = rules["batch"]
+
+    def fits(dim, axes):
+        return dim % _axis_size(mesh, axes) == 0
+
+    def one(path, x):
+        shape = tuple(x.shape)
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        spec = [None] * len(shape)
+        if len(shape) >= 2 and fits(shape[1], batch):
+            spec[1] = batch if len(batch) > 1 else batch[0]
+        if name in ("k", "v") and len(shape) == 5:
+            if fits(shape[3], model):
+                spec[3] = model[0]
+            elif fits(shape[2], model):
+                spec[2] = model[0]
+        elif name in ("ckv", "kr") and len(shape) == 4:
+            if fits(shape[2], model):
+                spec[2] = model[0]
+        elif name == "state" and len(shape) == 5:
+            if fits(shape[2], model):
+                spec[2] = model[0]
+        return NamedSharding(mesh, PartitionSpec(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)

@@ -1,0 +1,80 @@
+"""Fault-tolerant training driver: checkpoint/restart supervision.
+
+``run_with_restarts`` executes a training function under supervision;
+on failure (node loss is simulated by exceptions / injected faults) it
+restores the latest checkpoint — including the data-pipeline cursor —
+and continues.  NaN loss is treated as a fault (restore + LR notch), the
+standard large-run recipe.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from ..ckpt import checkpoint as ckpt
+from ..data.pipeline import DataPipeline, PipelineState
+
+
+class FaultInjector:
+    """Deterministic fault schedule for tests: raises at given steps."""
+
+    def __init__(self, fail_at=()):
+        self.fail_at = set(fail_at)
+        self.fired = set()
+
+    def maybe_fail(self, step: int):
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise RuntimeError(f"injected node failure at step {step}")
+
+
+def run_with_restarts(train_fn: Callable, init_state: Dict, pipeline: DataPipeline,
+                      ckpt_dir: str, total_steps: int, save_every: int = 20,
+                      max_restarts: int = 5,
+                      injector: Optional[FaultInjector] = None) -> Dict:
+    """train_fn(state, batch, step) -> (state, loss: float).  state is a
+    pytree with everything that must survive a restart."""
+    saver = ckpt.AsyncCheckpointer(ckpt_dir)
+    state = init_state
+    step = 0
+    restarts = 0
+    # resume if a checkpoint exists (crash-restart entry point)
+    last = ckpt.latest_step(ckpt_dir)
+    if last is not None:
+        state, extra = ckpt.restore(ckpt_dir, last, init_state)
+        pipeline.state = PipelineState.from_dict(extra["pipeline"])
+        step = last
+    losses = []
+    while step < total_steps:
+        try:
+            if injector is not None:
+                injector.maybe_fail(step)
+            batch = pipeline.next_batch()
+            state, loss = train_fn(state, batch, step)
+            if not math.isfinite(loss):
+                raise FloatingPointError(f"non-finite loss at step {step}")
+            losses.append(loss)
+            step += 1
+            if step % save_every == 0:
+                saver.save_async(step, state,
+                                 extra={"pipeline": pipeline.state.to_dict()})
+        except (RuntimeError, FloatingPointError) as e:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            last = ckpt.latest_step(ckpt_dir)
+            if last is None:                   # nothing saved yet: restart cold
+                state = init_state
+                pipeline.state = PipelineState(0)
+                step = 0
+                continue
+            saver.wait()
+            state, extra = ckpt.restore(ckpt_dir, last, state)
+            pipeline.state = PipelineState.from_dict(extra["pipeline"])
+            step = last
+    saver.wait()
+    return {"state": state, "losses": losses, "restarts": restarts,
+            "final_step": step}

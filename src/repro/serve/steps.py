@@ -1,0 +1,123 @@
+"""Serving steps: prefill and decode with sharded KV caches.
+
+``make_decode_step`` / ``make_prefill_step`` return (fn, in_shardings,
+out_shardings) for pjit — consumed by the serving driver and the dry-run.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from ..models import decode_step, init_cache, prefill
+from ..models.config import ModelConfig
+from ..models.layers import shapes_tree
+from ..models.model import model_specs
+from ..models import model_axes
+from ..parallel.sharding import (batch_sharding, cache_shardings,
+                                 param_shardings)
+
+
+def serve_param_shardings(cfg: ModelConfig, mesh: Mesh):
+    return param_shardings(model_axes(cfg), shapes_tree(model_specs(cfg)), mesh)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16) -> Any:
+    """ShapeDtypeStruct tree for the decode cache (no allocation)."""
+    shapes = jax.eval_shape(lambda: init_cache(cfg, batch, max_len, dtype))
+    return shapes
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int):
+    p_shard = serve_param_shardings(cfg, mesh)
+    b_shard = batch_sharding(mesh)
+    repl = NamedSharding(mesh, PartitionSpec())
+    c_shapes = cache_specs(cfg, batch, max_len)
+    c_shard = cache_shardings(c_shapes, mesh)
+
+    extras_shard = {}
+    if cfg.family == "encdec":
+        extras_shard["enc"] = b_shard
+
+    def step(params, tokens, cache, cache_len, extras):
+        logits, new_cache = decode_step(params, cfg, tokens, cache, cache_len,
+                                        extras)
+        return logits, new_cache
+
+    in_sh = (p_shard, b_shard, c_shard, repl, extras_shard)
+    out_sh = (b_shard, c_shard)
+    return step, in_sh, out_sh, c_shapes
+
+
+def make_cache_constrain(cfg: ModelConfig, mesh: Mesh):
+    """Per-layer cache-entry sharding asserted inside the prefill scan:
+    batch over dp; KV heads over model when divisible, else the length
+    dim (flash-decoding layout) — mirrors ``cache_shardings``."""
+    from ..parallel.sharding import _axis_size, logical_rules
+    rules = logical_rules(mesh)
+    batch_ax = rules["batch"]
+    msize = mesh.shape["model"]
+
+    def fn(x):
+        if not hasattr(x, "ndim") or x.ndim < 2:
+            return x
+        spec = [None] * x.ndim
+        if x.shape[0] % _axis_size(mesh, batch_ax) == 0:
+            spec[0] = batch_ax if len(batch_ax) > 1 else batch_ax[0]
+        if x.ndim == 4:        # (B, S, KV, hd)
+            if x.shape[2] % msize == 0:
+                spec[2] = "model"
+            elif x.shape[1] % msize == 0:
+                spec[1] = "model"
+        elif x.ndim == 3:      # (B, S, r) latent caches
+            if x.shape[1] % msize == 0:
+                spec[1] = "model"
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, PartitionSpec(*spec)))
+
+    return fn
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh, batch: int, seq: int):
+    import jax
+    from ..parallel.sharding import with_batch_constraint
+    p_shard = serve_param_shardings(cfg, mesh)
+    b_shard = batch_sharding(mesh)
+    con_cache = make_cache_constrain(cfg, mesh)
+
+    def con_h(x):
+        if x.ndim == 3 and x.shape[1] % mesh.shape["model"] == 0:
+            from jax.sharding import NamedSharding, PartitionSpec
+            from ..parallel.sharding import logical_rules
+            rules = logical_rules(mesh)
+            b = rules["batch"] if len(rules["batch"]) > 1 else rules["batch"][0]
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, PartitionSpec(b, "model", None)))
+        return with_batch_constraint(x, mesh)
+
+    def step(params, inputs):
+        logits, cache = prefill(params, cfg, inputs, seq, constrain=con_h,
+                                constrain_cache=con_cache)
+        return logits, cache
+
+    in_sh = (p_shard, {"tokens": b_shard} | (
+        {"frames": b_shard} if cfg.family == "encdec" else {}) | (
+        {"patch_embeds": b_shard} if cfg.n_patches else {}))
+    out_sh = None
+    return step, in_sh, out_sh
+
+
+def decode_input_specs(cfg: ModelConfig, batch: int, max_len: int
+                       ) -> Tuple[Dict, Any, Dict]:
+    sd = jax.ShapeDtypeStruct
+    tokens = sd((batch, 1), jnp.int32)
+    cache = cache_specs(cfg, batch, max_len)
+    extras = {}
+    if cfg.family == "encdec":
+        extras["enc"] = sd((batch, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    return tokens, cache, extras

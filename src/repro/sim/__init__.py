@@ -1,0 +1,2 @@
+from .simulator import SimResult, simulate
+from .workload import make_cluster, make_jobs

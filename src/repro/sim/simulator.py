@@ -1,0 +1,125 @@
+"""Discrete-time trace-driven cluster simulator (paper Sec. V-A).
+
+Drives either OASiS (plan-ahead) or a reactive baseline through T slots,
+accounts utilities at completion, and validates capacity feasibility of
+every allocation it executes (a scheduler bug = simulation error).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from ..core.baselines import BASELINES, ReactiveScheduler
+from ..core.oasis import OASiS
+from ..core.pricing import PriceParams, price_params_from_jobs
+from ..core.types import ClusterSpec, Job
+
+
+@dataclasses.dataclass
+class SimResult:
+    name: str
+    total_utility: float
+    accepted: int
+    completed: int
+    n_jobs: int
+    completion: Dict[int, int]              # jid -> completion slot
+    target_gap: List[float]                 # (t_done - a) - gamma3 per job
+    decision_seconds: List[float]
+    utilization: float                      # mean worker-pool GPU utilization
+
+
+def _check_capacity(cluster: ClusterSpec, jobs: Dict[int, Job],
+                    alloc: Dict[int, tuple]) -> None:
+    used_w = np.zeros_like(cluster.worker_caps, dtype=float)
+    used_s = np.zeros_like(cluster.ps_caps, dtype=float)
+    for jid, (y, z) in alloc.items():
+        job = jobs[jid]
+        used_w += y[:, None] * job.worker_res[None]
+        if z is not None:
+            used_s += z[:, None] * job.ps_res[None]
+    assert np.all(used_w <= cluster.worker_caps + 1e-6), "worker capacity violated"
+    assert np.all(used_s <= cluster.ps_caps + 1e-6), "PS capacity violated"
+
+
+def simulate(cluster: ClusterSpec, jobs: Sequence[Job], scheduler: str = "oasis",
+             params: Optional[PriceParams] = None, impl: str = "fast",
+             fixed_workers: int = 8, check: bool = True,
+             quantum: Optional[int] = None) -> SimResult:
+    jmap = {j.jid: j for j in jobs}
+    by_slot: Dict[int, List[Job]] = {}
+    for j in jobs:
+        by_slot.setdefault(j.arrival, []).append(j)
+
+    total_gpu = max(float(cluster.worker_caps[:, 0].sum()), 1e-9)
+    util_acc = []
+
+    if scheduler == "oasis":
+        params = params or price_params_from_jobs(jobs, cluster)
+        osched = OASiS(cluster, params, impl=impl)
+        completion: Dict[int, int] = {}
+        for t in range(cluster.T):
+            for job in by_slot.get(t, []):
+                if quantum is not None:
+                    q = quantum if quantum > 0 else max(
+                        1, math.ceil(job.epochs * job.num_chunks / 1200))
+                    job = dataclasses.replace(job, quantum=q)
+                s = osched.on_arrival(job)
+                if s is not None:
+                    completion[job.jid] = s.finish
+            alloc = osched.allocation_at(t)
+            if check:
+                _check_capacity(cluster, jmap, alloc)
+            gpu = sum(float(y.sum()) * jmap[jid].worker_res[0]
+                      for jid, (y, _) in alloc.items())
+            util_acc.append(gpu / total_gpu)
+        gaps = []
+        for jid, tdone in completion.items():
+            u = jmap[jid].utility
+            if getattr(u, "gamma2", 0) > 0:
+                gaps.append((tdone - jmap[jid].arrival) - u.gamma3)
+        return SimResult(name="oasis", total_utility=osched.total_utility,
+                         accepted=len(osched.accepted), completed=len(completion),
+                         n_jobs=len(jobs), completion=completion, target_gap=gaps,
+                         decision_seconds=osched.decision_seconds,
+                         utilization=float(np.mean(util_acc)) if util_acc else 0.0)
+
+    cls = BASELINES[scheduler]
+    rsched: ReactiveScheduler = cls(cluster, fixed_workers=fixed_workers)
+    admitted: List[int] = []
+    work_done: Dict[int, float] = {}
+    completion = {}
+    total_utility = 0.0
+    for t in range(cluster.T):
+        for job in by_slot.get(t, []):
+            if rsched.on_arrival(job, t):
+                admitted.append(job.jid)
+                work_done[job.jid] = 0.0
+        alloc = rsched.step(t)
+        if check:
+            _check_capacity(cluster, jmap, alloc)
+        gpu = 0.0
+        done_now = []
+        for jid, (y, z) in alloc.items():
+            job = jmap[jid]
+            gpu += float(y.sum()) * job.worker_res[0]
+            # W workers provide W worker-slots of work per slot
+            work_done[jid] += float(y.sum())
+            if work_done[jid] >= job.total_work_slots - 1e-9:
+                done_now.append(jid)
+        util_acc.append(gpu / total_gpu)
+        for jid in done_now:
+            completion[jid] = t
+            total_utility += jmap[jid].utility(t - jmap[jid].arrival)
+            rsched.on_completion(jid, t)
+    gaps = []
+    for jid, tdone in completion.items():
+        u = jmap[jid].utility
+        if getattr(u, "gamma2", 0) > 0:
+            gaps.append((tdone - jmap[jid].arrival) - u.gamma3)
+    return SimResult(name=scheduler, total_utility=total_utility,
+                     accepted=len(admitted), completed=len(completion),
+                     n_jobs=len(jobs), completion=completion, target_gap=gaps,
+                     decision_seconds=[], utilization=float(np.mean(util_acc)) if util_acc else 0.0)

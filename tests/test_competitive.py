@@ -1,0 +1,56 @@
+"""Competitive-ratio validation (Theorem 4): on exhaustively-solvable
+instances, OPT / OASiS must lie in [1, 2*alpha]."""
+import numpy as np
+import pytest
+
+from repro.core import OASiS, price_params_from_jobs
+from repro.core.offline_opt import offline_optimum
+from repro.sim import make_cluster, make_jobs, simulate
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_competitive_ratio_bound(seed):
+    cluster = make_cluster(T=6, H=2, K=2, scale=0.6)
+    jobs = make_jobs(5, T=6, seed=seed, small=True)
+    # Theorem 4's bound is stated for the literal (un-floored) U/L values
+    params = price_params_from_jobs(jobs, cluster, floor_frac=0.0)
+    sched = OASiS(cluster, params)
+    for j in sorted(jobs, key=lambda x: x.arrival):
+        sched.on_arrival(j)
+    online = sched.total_utility
+    opt = offline_optimum(cluster, jobs, time_limit=60.0)
+    alpha = params.alpha
+    # weak duality: OPT >= online (allow tiny solver tolerance)
+    assert opt >= online - 1e-6 * max(1.0, abs(opt))
+    if online > 1e-9:
+        ratio = opt / online
+        assert ratio <= 2 * alpha + 1e-6, (ratio, alpha)
+
+
+def test_offline_opt_sanity_single_job():
+    """One trivially-schedulable job: OPT equals the utility at the
+    fastest feasible completion (ceil(work / N) slots of work)."""
+    import math
+    cluster = make_cluster(T=6, H=2, K=2)
+    jobs = make_jobs(1, T=6, seed=9, small=True)
+    job = jobs[0]
+    opt = offline_optimum(cluster, jobs, time_limit=30.0)
+    min_slots = math.ceil(job.total_work_slots / job.num_chunks)
+    best = job.utility(min_slots - 1)        # t_hat = a + min_slots - 1
+    assert opt == pytest.approx(best, rel=1e-3)
+
+
+def test_oasis_beats_baselines_under_scarcity():
+    """Fig. 3's qualitative claim at a paper-like load point (the paper
+    uses H=K=50, T<=300 with hundreds of jobs; scaled proportionally).
+    Averaged over seeds like the paper's plots — individual draws vary."""
+    results = {}
+    for seed in (2, 3, 4):
+        cluster = make_cluster(T=100, H=20, K=20)
+        jobs = make_jobs(60, T=100, seed=seed, small=False)
+        for name in ["oasis", "fifo", "drf", "rrh", "dorm"]:
+            kw = dict(quantum=0) if name == "oasis" else {}
+            r = simulate(cluster, jobs, scheduler=name, check=True, **kw)
+            results.setdefault(name, []).append(r.total_utility)
+    means = {k: float(np.mean(v)) for k, v in results.items()}
+    assert means["oasis"] >= max(v for k, v in means.items() if k != "oasis"), means

@@ -1,0 +1,100 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.minplus.kernel import minplus_pallas
+from repro.kernels.minplus.ref import minplus_ref
+from repro.kernels.ssd.ops import ssd_op
+from repro.kernels.ssd.ref import ssd_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("B,Sq,Sk,H,KV,D", [
+    (1, 64, 64, 2, 2, 64),
+    (2, 128, 128, 4, 2, 64),
+    (1, 130, 130, 4, 1, 128),     # ragged seq (padding path)
+    (2, 96, 96, 8, 4, 256),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window,cap", [
+    (True, 0, 0.0), (True, 32, 0.0), (True, 0, 50.0), (False, 0, 0.0)])
+def test_flash_attention_sweep(B, Sq, Sk, H, KV, D, dtype, causal, window, cap):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, Sk, KV, D), dtype)
+    v = jax.random.normal(ks[2], (B, Sk, KV, D), dtype)
+    got = flash_attention(q, k, v, causal=causal, window=window, softcap=cap,
+                          interpret=True)
+    want = attention_ref(q, k, v, causal=causal, window=window, softcap=cap)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("d1,dc1", [(5, 2), (64, 8), (129, 17), (1000, 100),
+                                    (4097, 257)])
+@pytest.mark.parametrize("inf_frac", [0.0, 0.3])
+def test_minplus_sweep(d1, dc1, inf_frac):
+    rng = np.random.default_rng(d1)
+    prev = rng.random(d1).astype(np.float32)
+    row = rng.random(dc1).astype(np.float32)
+    prev[rng.random(d1) < inf_frac] = np.inf
+    row[rng.random(dc1) < inf_frac] = np.inf
+    prev[0] = 0.0
+    row[0] = 0.0
+    o1, a1 = minplus_pallas(jnp.array(row), jnp.array(prev), interpret=True)
+    o2, a2 = minplus_ref(jnp.array(row), jnp.array(prev))
+    v1, v2 = np.asarray(o1), np.asarray(o2)
+    assert np.all((np.isinf(v1) & np.isinf(v2)) | (np.abs(v1 - v2) < 1e-5))
+    assert np.array_equal(np.asarray(a1), np.asarray(a2))
+
+
+@pytest.mark.parametrize("b,L,H,P,G,N,chunk", [
+    (1, 32, 2, 16, 1, 16, 16),
+    (2, 64, 4, 32, 2, 32, 32),
+    (1, 100, 4, 64, 1, 64, 64),   # ragged length (padding path)
+    (2, 256, 8, 64, 4, 128, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_sweep(b, L, H, P, G, N, chunk, dtype):
+    ks = jax.random.split(KEY, 5)
+    x = (jax.random.normal(ks[0], (b, L, H, P)) * 0.5).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, L, H))).astype(dtype)
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    B = (jax.random.normal(ks[3], (b, L, G, N)) * 0.3).astype(dtype)
+    C = (jax.random.normal(ks[4], (b, L, G, N)) * 0.3).astype(dtype)
+    got = ssd_op(x, dt, A, B, C, chunk=chunk, use_pallas=True)
+    rep = H // G
+    Bh = jnp.repeat(B[:, :, :, None, :], rep, 3).reshape(b, L, H, N)
+    Ch = jnp.repeat(C[:, :, :, None, :], rep, 3).reshape(b, L, H, N)
+    want = ssd_ref(
+        x.transpose(0, 2, 1, 3).reshape(b * H, L, P).astype(jnp.float32),
+        dt.transpose(0, 2, 1).reshape(b * H, L).astype(jnp.float32),
+        jnp.tile(A, b),
+        Bh.transpose(0, 2, 1, 3).reshape(b * H, L, N).astype(jnp.float32),
+        Ch.transpose(0, 2, 1, 3).reshape(b * H, L, N).astype(jnp.float32))
+    want = want.reshape(b, H, L, P).transpose(0, 2, 1, 3)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-3
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+def test_model_chunked_ssd_matches_kernel():
+    """models.mamba2.ssd_chunked (XLA path) == Pallas kernel == sequential."""
+    from repro.models.mamba2 import ssd_chunked
+    ks = jax.random.split(KEY, 5)
+    b, L, H, P, G, N = 2, 96, 4, 32, 1, 32
+    x = jax.random.normal(ks[0], (b, L, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, L, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, L, G, N)) * 0.3
+    C = jax.random.normal(ks[4], (b, L, G, N)) * 0.3
+    y_model, _ = ssd_chunked(x, dt, A, B, C, 32)
+    y_kernel = ssd_op(x, dt, A, B, C, chunk=32, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(y_model), np.asarray(y_kernel),
+                               atol=1e-4, rtol=1e-4)

@@ -1,0 +1,113 @@
+"""Hypothesis property tests on the scheduler's invariants."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import best_schedule, price_params_from_jobs
+from repro.core.pricing import PriceState
+from repro.core.types import ClusterSpec, Job, SigmoidUtility
+
+
+def build(T, H, K, cap, E, N, M, tau, e, b, B, g1, g2, g3, a):
+    cluster = ClusterSpec(T=T, worker_caps=np.full((H, 5), cap),
+                          ps_caps=np.full((K, 5), cap))
+    job = Job(jid=0, arrival=a, epochs=E, num_chunks=N,
+              minibatches_per_chunk=M, tau=tau, grad_size=e, worker_bw=b,
+              ps_bw=B, worker_res=np.array([1.0, 1.5, 2.0, 1.0, b]),
+              ps_res=np.array([0.0, 1.0, 2.0, 1.0, B]),
+              utility=SigmoidUtility(g1, g2, g3))
+    return cluster, job
+
+
+job_strategy = st.tuples(
+    st.integers(4, 14),              # T
+    st.integers(1, 4),               # H
+    st.integers(1, 4),               # K
+    st.floats(4.0, 32.0),            # cap
+    st.integers(1, 4),               # E
+    st.integers(1, 6),               # N
+    st.integers(2, 30),              # M
+    st.floats(0.001, 0.05),          # tau
+    st.floats(0.005, 0.2),           # e
+    st.floats(0.5, 4.0),             # b
+    st.floats(2.0, 16.0),            # B
+    st.floats(1.0, 100.0),           # g1
+    st.floats(0.0, 5.0),             # g2
+    st.floats(1.0, 12.0),            # g3
+    st.integers(0, 3),               # arrival
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(job_strategy)
+def test_schedule_feasibility_invariants(args):
+    """Any returned schedule satisfies constraints (2)(3)(6)(7) + capacity."""
+    cluster, job = build(*args)
+    params = price_params_from_jobs([job], cluster)
+    state = PriceState(cluster, params)
+    s = best_schedule(job, state)
+    if s is None:
+        return
+    total_work = 0.0
+    for t, y in s.workers.items():
+        W = int(y.sum())
+        total_work += W
+        assert t >= job.arrival                              # (9)
+        assert W <= job.num_chunks                           # (3)
+        z = s.ps[t]
+        Z = int(z.sum())
+        assert Z <= W                                        # (7)
+        assert Z * job.ps_bw >= W * job.worker_bw - 1e-9     # (6)
+        assert np.all(y[:, None] * job.worker_res[None] <=
+                      cluster.worker_caps + 1e-9)            # (4)
+        assert np.all(z[:, None] * job.ps_res[None] <=
+                      cluster.ps_caps + 1e-9)                # (5)
+    assert total_work >= job.total_work_slots - 1e-9         # (2)
+    assert s.finish == max(s.workers)                        # (8)
+    # payoff consistency
+    assert s.payoff == pytest.approx(
+        job.utility(s.finish - job.arrival) - s.cost, rel=1e-6, abs=1e-9)
+    assert s.payoff > 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(job_strategy, st.floats(0.1, 0.9))
+def test_payoff_monotone_in_prices(args, frac):
+    """Raising allocations (hence prices) never increases the best payoff."""
+    cluster, job = build(*args)
+    params = price_params_from_jobs([job], cluster)
+    s_empty = best_schedule(job, PriceState(cluster, params))
+    state = PriceState(cluster, params)
+    state.g[:] = cluster.worker_caps[None] * frac
+    state.v[:] = cluster.ps_caps[None] * frac
+    s_busy = best_schedule(job, state)
+    p0 = s_empty.payoff if s_empty else 0.0
+    p1 = s_busy.payoff if s_busy else 0.0
+    assert p1 <= p0 + 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(job_strategy)
+def test_utility_nonincreasing(args):
+    _, job = build(*args)
+    vals = [job.utility(d) for d in range(0, 20)]
+    for a, b in zip(vals, vals[1:]):
+        assert b <= a + 1e-12
+    assert all(v >= 0 for v in vals)
+
+
+@settings(max_examples=20, deadline=None)
+@given(job_strategy, st.integers(2, 8))
+def test_quantum_never_beats_exact(args, q):
+    """Coarse DP over-provisions => its payoff cannot exceed the exact DP."""
+    import dataclasses
+    cluster, job = build(*args)
+    params = price_params_from_jobs([job], cluster)
+    state = PriceState(cluster, params)
+    exact = best_schedule(job, state)
+    coarse = best_schedule(dataclasses.replace(job, quantum=q), state)
+    pe = exact.payoff if exact else 0.0
+    pc = coarse.payoff if coarse else 0.0
+    assert pc <= pe + 1e-6
