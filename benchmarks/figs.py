@@ -112,3 +112,42 @@ def latency_table(T: int = 300, H: int = 50, K: int = 50, n: int = 20
         rows.append(f"latency[q={label};p95],{np.percentile(dec,95)*1e6:.0f},"
                     f"{np.percentile(dec,95):.4f}")
     return rows
+
+
+def decision_latency(T: int = 96, H: int = 16, K: int = 16, n: int = 200
+                     ) -> List[str]:
+    """Per-decision scheduler latency (p50/p95 of ``decision_seconds``):
+    seed per-slot-loop baseline vs vectorized numpy vs the fused jit engine.
+
+    Each impl is run twice and the second (warm) run is reported — the jit
+    engine compiles one executable per shape bucket on first contact, which
+    a long-running scheduler amortises away; the one-off cost is reported
+    separately as ``jax;cold_mean``.  The final row is the p50 speedup of
+    impl="jax" over the seed per-slot-loop path.
+    """
+    rows = []
+    cluster = make_cluster(T=T, H=H, K=K)
+    jobs = make_jobs(n, T=T, seed=17, small=False)
+    stats = {}
+    for impl in ("loop", "fast", "jax"):
+        # every impl gets a discarded first run so the comparison is
+        # symmetric (jit compiles; numpy warms allocator/page cache)
+        cold = simulate(cluster, jobs, scheduler="oasis", impl=impl,
+                        check=False, quantum=0)
+        r = simulate(cluster, jobs, scheduler="oasis", impl=impl,
+                     check=False, quantum=0)
+        dec = np.array(r.decision_seconds)
+        stats[impl] = {"p50": float(np.percentile(dec, 50)),
+                       "p95": float(np.percentile(dec, 95)),
+                       "mean": float(dec.mean())}
+        for label, val in stats[impl].items():
+            rows.append(f"decision_latency[{impl};{label}],{val*1e6:.0f},"
+                        f"{val:.6f}")
+        if impl == "jax":
+            cm = float(np.mean(cold.decision_seconds))
+            rows.append(f"decision_latency[jax;cold_mean],{cm*1e6:.0f},"
+                        f"{cm:.6f}")
+    for label in ("p50", "p95", "mean"):
+        rows.append(f"decision_latency[speedup_jax_vs_seed;{label}],0,"
+                    f"{stats['loop'][label] / stats['jax'][label]:.2f}")
+    return rows

@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   fig5_ratio[...]     OPT / OASiS on exact-solvable instances   (Fig. 5)
   fig6_estimate[...]  utility under mis-estimated U/L           (Fig. 6)
   latency[...]        per-decision scheduler latency            (fn. 4)
+  decision_latency[.] loop vs fast vs fused-jax backend p50/p95
   minplus[...]        scheduler DP kernel micro-benchmarks
 
 ``--quick`` shrinks instance sizes.  The roofline table is a separate
@@ -54,11 +55,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="comma list: fig3,fig4,fig5,fig6,latency,kernels")
+                    help="comma list: fig3,fig4,fig5,fig6,latency,decision,"
+                         "kernels")
     args = ap.parse_args()
     from benchmarks import figs
 
-    which = set((args.only or "fig3,fig4,fig5,fig6,latency,kernels"
+    which = set((args.only or "fig3,fig4,fig5,fig6,latency,decision,kernels"
                  ).split(","))
     rows = []
     t_all = time.time()
@@ -75,6 +77,8 @@ def main() -> None:
     if "latency" in which:
         rows += figs.latency_table(T=100 if args.quick else 300,
                                    n=10 if args.quick else 20)
+    if "decision" in which:
+        rows += figs.decision_latency(n=60 if args.quick else 200)
     if "kernels" in which:
         rows += _kernel_micro()
     print("name,us_per_call,derived")

@@ -15,14 +15,21 @@ class OASiS:
     ``impl`` selects the dual-subroutine backend:
       * ``"ref"``    — loop-faithful Alg. 2 (test oracle; slow)
       * ``"fast"``   — vectorized numpy (default)
-      * ``"jax"``    — vectorized with the JAX/Pallas min-plus DP sweep
+      * ``"jax"``    — fused jit engine (one XLA call per decision; Pallas
+                       min-plus sweep kernel on TPU) with vmapped batching
+                       via :meth:`on_arrivals`
+      * ``"loop"``   — the seed's per-slot-loop numpy path (benchmark
+                       baseline only)
     """
 
     def __init__(self, cluster: ClusterSpec, params: PriceParams,
-                 impl: str = "fast", track_duality: bool = False):
+                 impl: str = "fast", track_duality: bool = False,
+                 batch_threshold: int = 2):
         self.cluster = cluster
         self.state = PriceState(cluster, params)
         self.impl = impl
+        # min batch size before on_arrivals uses the vmapped engine
+        self.batch_threshold = max(2, batch_threshold)
         self.accepted: Dict[int, Schedule] = {}
         self.rejected: List[int] = []
         self.total_utility = 0.0
@@ -41,13 +48,58 @@ class OASiS:
             sched = best_schedule_ref(job, self.state)
         elif self.impl == "jax":
             sched = best_schedule(job, self.state, use_jax=True)
+        elif self.impl == "loop":
+            sched = best_schedule(job, self.state, rows_impl="loop")
         else:
             sched = best_schedule(job, self.state)
         self.decision_seconds.append(time.perf_counter() - t0)
+        return self._resolve(job, sched)
+
+    def on_arrivals(self, jobs: List[Job]) -> List[Optional[Schedule]]:
+        """Batched arrivals: decide all jobs in one vmapped engine call.
+
+        Alg. 1 semantics are preserved exactly.  Candidates are speculative
+        (computed at the prices in effect when the batch starts):
+
+        * a REJECTED candidate is final — commits only raise prices and
+          shrink headroom, so every schedule's payoff can only decrease and
+          a non-positive maximum stays non-positive;
+        * an ACCEPTED candidate is used as-is only while no other job from
+          the batch has been admitted; once prices move it is re-solved
+          individually against the updated state.
+
+        The result is identical, job for job, to calling ``on_arrival`` in
+        sequence (stable arrival order).
+        """
+        order = sorted(range(len(jobs)), key=lambda i: jobs[i].arrival)
+        out: List[Optional[Schedule]] = [None] * len(jobs)
+        if self.impl != "jax" or len(jobs) < self.batch_threshold:
+            for i in order:
+                out[i] = self.on_arrival(jobs[i])
+            return out
+        from .schedule_jax import best_schedule_fused_batch
+        times: List[float] = []
+        cands = best_schedule_fused_batch([jobs[i] for i in order],
+                                          self.state, timings=times)
+        prices_moved = False
+        for pos, (i, cand) in enumerate(zip(order, cands)):
+            if cand is None or not prices_moved:
+                self.decision_seconds.append(times[pos])
+                out[i] = self._resolve(jobs[i], cand)
+                prices_moved = prices_moved or out[i] is not None
+            else:
+                out[i] = self.on_arrival(jobs[i])
+                # the speculative batch share spent on this job is real
+                # per-decision cost too — don't under-report latency
+                self.decision_seconds[-1] += times[pos]
+        return out
+
+    def _resolve(self, job: Job, sched: Optional[Schedule]
+                 ) -> Optional[Schedule]:
+        """Alg. 1 lines 5-11: admit iff positive payoff, commit, bump prices."""
         if sched is None:                       # mu_i <= 0 -> reject
             self.rejected.append(job.jid)
             return None
-        # lines 5-11: commit allocations, bump prices
         if self.track_duality:
             p0 = self.state.worker_prices()
             q0 = self.state.ps_prices()

@@ -81,14 +81,27 @@ def price_params_from_jobs(jobs: Sequence[Job], cluster: ClusterSpec,
                 U2[r] = max(U2[r], f_max / job.ps_res[r])
         wsum = float(job.worker_res.sum())
         ssum = float(job.ps_res.sum())
-        L1_num = min(L1_num, f_min / (total_work * wsum))
-        L2_num = min(L2_num, f_min / (total_work * ssum))
-        eta1_inv = min(eta1_inv, total_work * wsum / (T * cap_w))
-        eta2_inv = min(eta2_inv, total_work * ssum / (T * cap_s))
-    eta1 = 1.0 / max(eta1_inv, 1e-12)
-    eta2 = 1.0 / max(eta2_inv, 1e-12)
+        # A job with zero demand on a pool places no constraint on that
+        # pool's prices: worker-only jobs (ssum == 0) are a legal workload
+        # and must not divide by zero here.
+        if wsum > 0:
+            L1_num = min(L1_num, f_min / (total_work * wsum))
+            if cap_w > 0:
+                eta1_inv = min(eta1_inv, total_work * wsum / (T * cap_w))
+        if ssum > 0:
+            L2_num = min(L2_num, f_min / (total_work * ssum))
+            if cap_s > 0:
+                eta2_inv = min(eta2_inv, total_work * ssum / (T * cap_s))
+    eta1 = 1.0 / max(eta1_inv, 1e-12) if math.isfinite(eta1_inv) else 1.0
+    eta2 = 1.0 / max(eta2_inv, 1e-12) if math.isfinite(eta2_inv) else 1.0
     eta1 = max(eta1, 1.0)  # paper requires 1/eta <= 1
     eta2 = max(eta2, 1.0)
+    # No job constrains a pool -> any finite price works; fall back to the
+    # other pool's floor (or 1.0) so the exponential price stays defined.
+    if not math.isfinite(L1_num):
+        L1_num = L2_num if math.isfinite(L2_num) else 4.0
+    if not math.isfinite(L2_num):
+        L2_num = L1_num
     L1 = L1_num / (4.0 * eta1)
     L2 = L2_num / (4.0 * eta2)
     # Guard degenerate resources (e.g. PS pool has no GPUs): keep U >= L so
@@ -108,6 +121,9 @@ class PriceState:
         T, H, K = cluster.T, cluster.H, cluster.K
         self.g = np.zeros((T, H, R))   # allocated on worker servers
         self.v = np.zeros((T, K, R))   # allocated on PS servers
+        # bumped on every commit/release; lets the jit engine cache its
+        # device-side copy of (g, v) between allocation changes
+        self.version = 0
 
     # -- price tables -----------------------------------------------------
     def worker_prices(self) -> np.ndarray:
@@ -127,6 +143,7 @@ class PriceState:
             self.g[t] += y[:, None] * job.worker_res[None, :]
         for t, z in ps.items():
             self.v[t] += z[:, None] * job.ps_res[None, :]
+        self.version += 1
 
     def release(self, job: Job, workers: dict, ps: dict) -> None:
         """Inverse of commit — used when a running job is preempted/killed
@@ -135,6 +152,7 @@ class PriceState:
             self.g[t] -= y[:, None] * job.worker_res[None, :]
         for t, z in ps.items():
             self.v[t] -= z[:, None] * job.ps_res[None, :]
+        self.version += 1
 
     def headroom_workers(self, t: int) -> np.ndarray:
         return self.cluster.worker_caps - self.g[t]

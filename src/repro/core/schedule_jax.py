@@ -1,47 +1,427 @@
-"""JAX backend for the Alg. 2 DP sweep.
+"""Fused, jit-compiled JAX backend for the Alg. 2 dual subroutine.
 
-``dp_sweep_jax(rows, D)`` runs the min-plus recurrence over time slots with
-``lax.scan``; the inner banded min-plus is the Pallas VPU kernel
-(``repro.kernels.minplus``) on TPU, interpret-mode on CPU.  Returns the
-same (cost table, split table) as the numpy path in ``subroutine.py``.
+``best_schedule_fused`` runs the WHOLE per-arrival pipeline as one XLA
+computation: dual prices from the allocation state, per-server capacity +
+sorted prefix-sum greedy COST_t rows for all (t, d), the banded min-plus DP
+sweep over slots, the payoff argmax with the reference tie rule, the
+split-table backtrack, and the greedy placement extraction.  Nothing
+re-enters Python between stages, so a decision costs one dispatch instead of
+O(T) interpreter round-trips.
+
+``best_schedule_fused_batch`` vmaps the same core over a padded batch of
+jobs (shared price state) — the speculative half of ``OASiS.on_arrivals``.
+
+Precision: on CPU the engine runs under ``jax.experimental.enable_x64`` by
+default so its decisions match the float64 numpy/reference paths exactly;
+on TPU it runs float32 (f64 is unsupported there) with the Pallas min-plus
+sweep kernel.  An ambient ``jax_enable_x64`` setting is always respected.
+
+``dp_sweep_jax`` (the seed's DP-only entry point) is kept for micro-benches
+and backward compatibility; it now follows ``jax_enable_x64`` instead of
+silently downcasting to float32, and its Pallas path is the single-launch
+sweep kernel rather than a ``lax.scan`` of tiny launches.
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+import time
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..kernels.minplus.ref import minplus_ref
+from ..kernels.minplus.kernel import minplus_sweep_pallas
+from ..kernels.minplus.ref import minplus_sweep_cost, minplus_sweep_ref
+from .pricing import PriceState
+from .types import Job, R, Schedule
 
-_INF = jnp.float32(jnp.inf)
+# Stand-in for "unbounded" per-server instance capacity (job has no demand
+# on some resource): big enough to never bind, small enough that prefix sums
+# of it stay exact-ish in f32 comparisons against tiny instance counts.
+_BIG_CAP = 1.0e9
+_PAY_EPS = 1e-12        # payoff tie epsilon — same as the reference path
 
+
+# ---------------------------------------------------------------------------
+# Seed-compatible DP-only entry point
+# ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("d_total", "use_pallas"))
 def _sweep(rows: jax.Array, d_total: int, use_pallas: bool
            ) -> Tuple[jax.Array, jax.Array]:
     if use_pallas:
-        from ..kernels.minplus.kernel import minplus_pallas
         interpret = jax.default_backend() != "tpu"
-        inner = functools.partial(minplus_pallas, interpret=interpret)
-    else:
-        inner = minplus_ref
-
-    def step(prev, row):
-        new, arg = inner(row, prev)
-        return new, (new, arg)
-
-    init = jnp.full((d_total + 1,), _INF).at[0].set(0.0)
-    _, (costs, args) = jax.lax.scan(step, init, rows)
-    return costs, args
+        return minplus_sweep_pallas(rows, d_total, interpret=interpret)
+    return minplus_sweep_ref(rows, d_total)
 
 
 def dp_sweep_jax(rows: np.ndarray, d_total: int, use_pallas: bool = False
                  ) -> Tuple[np.ndarray, np.ndarray]:
-    """rows: (T', dcap+1) float64/32 with +inf; returns (cost (T', D+1),
-    split (T', D+1) int)."""
-    rows32 = jnp.asarray(np.nan_to_num(rows, posinf=np.inf), jnp.float32)
-    costs, args = _sweep(rows32, int(d_total), bool(use_pallas))
+    """rows: (T', dcap+1) with +inf; returns (cost (T', D+1), split (T', D+1)).
+
+    Runs in float64 when ``jax_enable_x64`` is on (the numpy path's dtype),
+    float32 otherwise.  The Pallas path is always float32 (TPU VPU kernel).
+    """
+    dtype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+    rows_j = jnp.asarray(np.nan_to_num(rows, posinf=np.inf), dtype)
+    costs, args = _sweep(rows_j, int(d_total), bool(use_pallas))
     return np.asarray(costs, np.float64), np.asarray(args, np.int64)
+
+
+# ---------------------------------------------------------------------------
+# Fused engine core (pure jnp; shapes static per (T, H, K, M, D1) bucket)
+# ---------------------------------------------------------------------------
+
+def _prefix_tables_jnp(prices: jax.Array, headroom: jax.Array,
+                       demand: jax.Array):
+    """Per-slot sorted unit costs + prefix sums (whole-array, all slots).
+
+    Returns (order, scap, scost, ccap, ccost), each (T, S)."""
+    unit = (prices * demand[None, None, :]).sum(axis=2)          # (T, S)
+    safe = jnp.where(demand > 0, demand, 1.0)
+    per_r = jnp.where(demand[None, None, :] > 0,
+                      jnp.floor(headroom / safe[None, None, :] + 1e-9),
+                      _BIG_CAP)
+    cap = jnp.clip(jnp.min(per_r, axis=2), 0.0, _BIG_CAP)        # (T, S)
+    order = jnp.argsort(unit, axis=1, stable=True)
+    scost = jnp.take_along_axis(unit, order, axis=1)
+    scap = jnp.take_along_axis(cap, order, axis=1)
+    ccap = jnp.cumsum(scap, axis=1)
+    ccost = jnp.cumsum(scap * scost, axis=1)
+    return order, scap, scost, ccap, ccost
+
+
+def _greedy_cost_jnp(ccap: jax.Array, ccost: jax.Array, scost: jax.Array,
+                     counts: jax.Array) -> jax.Array:
+    """Greedy (cheapest-first) deployment cost for ``counts`` (T, M) at every
+    slot, from (T, S) prefix tables.  +inf where counts exceed capacity."""
+    S = ccap.shape[1]
+    # first prefix covering each count (== np.searchsorted side="left")
+    idx = (ccap[:, :, None] < counts[:, None, :]).sum(axis=1)    # (T, M)
+    zcol = jnp.zeros((ccap.shape[0], 1), ccap.dtype)
+    prev_cap = jnp.take_along_axis(jnp.concatenate([zcol, ccap], 1), idx, 1)
+    prev_cost = jnp.take_along_axis(jnp.concatenate([zcol, ccost], 1), idx, 1)
+    marg = jnp.take_along_axis(scost, jnp.minimum(idx, S - 1), 1)
+    vals = prev_cost + (counts - prev_cap) * marg
+    return jnp.where(counts == 0, 0.0,
+                     jnp.where(counts <= ccap[:, -1:], vals, jnp.inf))
+
+
+def _greedy_place_jnp(order: jax.Array, scap: jax.Array, ccap: jax.Array,
+                      count: jax.Array) -> jax.Array:
+    """Per-server instance counts for a greedy fill of ``count`` (T,) at each
+    slot: cheapest servers first, each up to its capacity.  Returns (T, S)
+    int32 in ORIGINAL server order."""
+    prev = jnp.concatenate(
+        [jnp.zeros((ccap.shape[0], 1), ccap.dtype), ccap[:, :-1]], axis=1)
+    take = jnp.clip(count[:, None] - prev, 0.0, scap)            # sorted order
+    inv = jnp.argsort(order, axis=1, stable=True)                # rank of h
+    return jnp.round(jnp.take_along_axis(take, inv, axis=1)).astype(jnp.int32)
+
+
+def _decide_core(sd, jd, *, d1: int, use_pallas: bool):
+    """One Alg. 2 decision, fully fused.
+
+    sd: state arrays (g (T,H,R), v (T,K,R), wcaps (H,R), scaps (K,R),
+        U1 (R,), U2 (R,), L1 (), L2 ())
+    jd: bundled job arrays (resbw (2R+2,) = [wres, sres, wbw, psbw],
+        WZ (2, M) i32, u (T,), meta (3,) i32 = [a, nchunks, d_tot])
+    d1: static — DP columns (padded D_total + 1).
+
+    Returns (best_t i32 (-1 = reject), payoff, total_cost, d_left i32 —
+    workload still unassigned after the backtrack, 0 for any sound accept —
+    d_slots (T,) i32, y (T, H) i32, z (T, K) i32).
+    """
+    g, v, wcaps, scaps, U1, U2, L1, L2 = sd
+    resbw, WZ, u, meta = jd
+    wres, sres = resbw[:R], resbw[R:2 * R]
+    wbw, psbw = resbw[2 * R], resbw[2 * R + 1]
+    W, Z = WZ[0], WZ[1]
+    a, nchunks, d_tot = meta[0], meta[1], meta[2]
+    T = g.shape[0]
+    M = W.shape[0]
+    dt = g.dtype
+
+    # dual prices p = L1 (U1/L1)^(g/c), q = L2 (U2/L2)^(v/c)   (eq. 22, 25)
+    p = L1 * jnp.maximum(U1 / L1, 1.0 + 1e-9)[None, None, :] ** (
+        g / jnp.maximum(wcaps, 1e-12)[None])
+    q = L2 * jnp.maximum(U2 / L2, 1.0 + 1e-9)[None, None, :] ** (
+        v / jnp.maximum(scaps, 1e-12)[None])
+
+    w_order, w_scap, w_scost, w_ccap, w_ccost = _prefix_tables_jnp(
+        p, wcaps[None] - g, wres)
+    s_order, s_scap, s_scost, s_ccap, s_ccost = _prefix_tables_jnp(
+        q, scaps[None] - v, sres)
+
+    # COST_t rows for all (t, d)
+    Wt = jnp.broadcast_to(W.astype(dt)[None, :], (T, M))
+    w_costs = _greedy_cost_jnp(w_ccap, w_ccost, w_scost, Wt)
+    pool = s_ccap[:, -1:]                                        # (T, 1)
+    deploy = jnp.minimum(jnp.minimum(Z, W).astype(dt)[None, :], pool)
+    feas_n = (W <= nchunks)[None, :]
+    feas_ps = deploy * psbw >= Wt * wbw - 1e-9
+    z_costs = _greedy_cost_jnp(s_ccap, s_ccost, s_scost, deploy)
+    rows = jnp.where(feas_n & feas_ps, w_costs + z_costs, jnp.inf)
+    rows = rows.at[:, 0].set(0.0)
+    # slots before arrival carry the DP unchanged: row = [0, inf, ...]
+    ts = jnp.arange(T, dtype=jnp.int32)
+    pre = (ts[:, None] < a) & (jnp.arange(M)[None, :] > 0)
+    rows = jnp.where(pre, jnp.inf, rows)
+
+    # banded min-plus DP over slots (cost only; splits recovered below)
+    if use_pallas:
+        cost_tab = minplus_sweep_pallas(
+            rows, d1 - 1, interpret=jax.default_backend() != "tpu")[0]
+        cost_tab = cost_tab.astype(dt)
+    else:
+        cost_tab = minplus_sweep_cost(rows, d1 - 1)
+
+    # payoff argmax with the reference tie rule (> best + eps switches)
+    costD = jnp.take(cost_tab, d_tot, axis=1)                    # (T,)
+    payoff_t = jnp.where(jnp.isfinite(costD) & (ts >= a), u - costD, -jnp.inf)
+
+    def _pick(carry, x):
+        best, best_t = carry
+        pt, t = x
+        switch = pt > best + _PAY_EPS
+        return (jnp.where(switch, pt, best),
+                jnp.where(switch, t, best_t)), None
+
+    (best_payoff, best_t), _ = jax.lax.scan(
+        _pick, (jnp.asarray(0.0, dt), jnp.int32(-1)), (payoff_t, ts))
+
+    # backtrack from best_t down to arrival, recomputing each slot's split
+    # as argmin_j rows[t, j] + cost_{t-1}[d_rem - j] over the stored table —
+    # the same first-minimum the carried DP argmin would have produced
+    init_row = jnp.full((d1,), jnp.inf, dt).at[0].set(0.0)
+    prev_tab = jnp.concatenate([init_row[None, :], cost_tab[:-1]], axis=0)
+    js = jnp.arange(M)
+
+    def _back(d_rem, x):
+        row, prev, t = x
+        idx = d_rem - js
+        vals = jnp.where(idx >= 0, row + prev[jnp.clip(idx, 0, d1 - 1)],
+                         jnp.inf)
+        d_here = jnp.where(t <= best_t,
+                           jnp.argmin(vals).astype(jnp.int32), 0)
+        return d_rem - d_here, d_here
+
+    d_left, d_slots = jax.lax.scan(_back, d_tot, (rows, prev_tab, ts),
+                                   reverse=True)
+
+    # greedy placements for the chosen per-slot counts
+    W_slots = jnp.take(W, d_slots)
+    Z_slots = jnp.take(Z, d_slots)
+    deploy_slots = jnp.minimum(jnp.minimum(Z_slots, W_slots).astype(dt),
+                               pool[:, 0])
+    y = _greedy_place_jnp(w_order, w_scap, w_ccap, W_slots.astype(dt))
+    z = _greedy_place_jnp(s_order, s_scap, s_ccap, deploy_slots)
+
+    total_cost = jnp.take(costD, jnp.maximum(best_t, 0))
+    return best_t, best_payoff, total_cost, d_left, d_slots, y, z
+
+
+@functools.partial(jax.jit, static_argnames=("d1", "use_pallas"))
+def _decide_one(sd, jd, d1: int, use_pallas: bool):
+    return _decide_core(sd, jd, d1=d1, use_pallas=use_pallas)
+
+
+@functools.partial(jax.jit, static_argnames=("d1",))
+def _decide_many(sd, jds, d1: int):
+    return jax.vmap(
+        lambda jd: _decide_core(sd, jd, d1=d1, use_pallas=False))(jds)
+
+
+# ---------------------------------------------------------------------------
+# Python wrappers: padding, bucketing, Schedule construction
+# ---------------------------------------------------------------------------
+
+def _bucket(n: int, floor: int = 32, step: int = 64) -> int:
+    """Size bucket: powers of two up to ``step``, then multiples of ``step``.
+
+    Balances jit recompiles (few distinct shapes) against padded DP work
+    (cost is linear in each padded axis)."""
+    b = floor
+    while b < n and b < step:
+        b *= 2
+    if b >= n:
+        return b
+    return ((n + step - 1) // step) * step
+
+
+def _state_arrays(state: PriceState, dtype):
+    """Pack the price state for the engine.  Empty pools are padded with one
+    zero-capacity server so gathers stay in bounds (it can never be used).
+
+    Cached on the state object keyed by ``state.version`` (bumped by
+    commit/release) so rejected arrivals between commits pay no host→device
+    transfer.  Rebinding ``state.g``/``state.v`` wholesale also invalidates:
+    the cache holds strong references to the keyed arrays and compares with
+    ``is``, so a replacement array can never alias a freed one's id."""
+    cached = getattr(state, "_engine_cache", None)
+    if (cached is not None and cached[0] == state.version
+            and cached[1] is state.g and cached[2] is state.v
+            and cached[3] == np.dtype(dtype).str):
+        return cached[4]
+    T = state.cluster.T
+    g, wcaps = state.g, state.cluster.worker_caps
+    v, scaps = state.v, state.cluster.ps_caps
+    if wcaps.shape[0] == 0:
+        wcaps = np.zeros((1, R))
+        g = np.zeros((T, 1, R))
+    if scaps.shape[0] == 0:
+        scaps = np.zeros((1, R))
+        v = np.zeros((T, 1, R))
+    pp = state.params
+    sd = (jnp.asarray(g, dtype), jnp.asarray(v, dtype),
+          jnp.asarray(wcaps, dtype), jnp.asarray(scaps, dtype),
+          jnp.asarray(pp.U1, dtype), jnp.asarray(pp.U2, dtype),
+          jnp.asarray(pp.L1, dtype), jnp.asarray(pp.L2, dtype))
+    state._engine_cache = (state.version, state.g, state.v,
+                           np.dtype(dtype).str, sd)
+    return sd
+
+
+def _job_arrays(job: Job, T: int, m_pad: int, dtype):
+    """Pad the per-job tables to the ``m_pad`` bucket and bundle them into
+    four device arrays (res+bw, W/Z, utilities, int metadata) to keep the
+    per-decision host→device transfer count low.  Padded d entries get a
+    sentinel worker count larger than any N so they are infeasible."""
+    from .subroutine import workload_tables
+    dcap = min(job.max_chunks_per_slot, job.workload)
+    W, Z = workload_tables(job, dcap)
+    WZ = np.zeros((2, m_pad), np.int32)
+    WZ[0] = np.int32(1) << 30
+    WZ[0, :dcap + 1] = W
+    WZ[1, :dcap + 1] = Z
+    a = job.arrival
+    u = np.array([job.utility(t - a) if t >= a else 0.0 for t in range(T)])
+    resbw = np.concatenate([job.worker_res, job.ps_res,
+                            [job.worker_bw, job.ps_bw]])
+    meta = np.array([a, job.num_chunks, job.workload], np.int32)
+    return (jnp.asarray(resbw, dtype), jnp.asarray(WZ), jnp.asarray(u, dtype),
+            jnp.asarray(meta))
+
+
+def _reject_job_arrays(T: int, m_pad: int, dtype):
+    """A batch-padding dummy whose every d > 0 is infeasible (nchunks = -1)."""
+    resbw = np.zeros(2 * R + 2)
+    resbw[-2:] = 1.0
+    WZ = np.zeros((2, m_pad), np.int32)
+    WZ[0] = np.int32(1) << 30
+    return (jnp.asarray(resbw, dtype), jnp.asarray(WZ),
+            jnp.zeros((T,), dtype), jnp.asarray(np.array([0, -1, 1], np.int32)))
+
+
+def _x64_context(precision: str):
+    """Engine precision policy.  "auto": float64 on CPU (exact agreement with
+    the numpy paths), float32 on TPU.  An ambient jax_enable_x64 always wins.
+    """
+    import contextlib
+    from jax.experimental import enable_x64
+    if precision == "x64":
+        return enable_x64(True)
+    if precision == "auto" and jax.default_backend() == "cpu":
+        return enable_x64(True)
+    return contextlib.nullcontext()
+
+
+def _schedule_from_outputs(job: Job, state: PriceState, best_t: int,
+                           cost: float, d_left: int, d_slots: np.ndarray,
+                           y: np.ndarray, z: np.ndarray
+                           ) -> Optional[Schedule]:
+    if best_t < 0:
+        return None
+    # mirrors _extract's backtrack assert: an accepted schedule must place
+    # the whole workload (guards e.g. mixed-precision pallas-on-CPU runs)
+    assert d_left == 0, \
+        f"fused backtrack failed: {d_left} chunk-passes unassigned"
+    H, K = state.cluster.H, state.cluster.K
+    workers, ps = {}, {}
+    for t in range(job.arrival, best_t + 1):
+        if d_slots[t] > 0:
+            workers[t] = y[t, :H].astype(np.int64)
+            ps[t] = z[t, :K].astype(np.int64)
+    utility = job.utility(best_t - job.arrival)
+    return Schedule(jid=job.jid, workers=workers, ps=ps, finish=int(best_t),
+                    cost=float(cost), payoff=utility - float(cost),
+                    utility=utility)
+
+
+def best_schedule_fused(job: Job, state: PriceState, *,
+                        use_pallas: Optional[bool] = None,
+                        precision: str = "auto") -> Optional[Schedule]:
+    """Alg. 2 for one job as a single fused jit call."""
+    dcap = min(job.max_chunks_per_slot, job.workload)
+    if dcap == 0:
+        return None
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    T = state.cluster.T
+    m_pad = _bucket(dcap + 1, step=64)
+    d1 = _bucket(job.workload + 1, step=256)
+    with _x64_context(precision):
+        dtype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+        sd = _state_arrays(state, dtype)
+        jd = _job_arrays(job, T, m_pad, dtype)
+        best_t, _, cost, d_left, d_slots, y, z = _decide_one(
+            sd, jd, d1=d1, use_pallas=bool(use_pallas))
+        return _schedule_from_outputs(
+            job, state, int(best_t), float(cost), int(d_left),
+            np.asarray(d_slots), np.asarray(y), np.asarray(z))
+
+
+def best_schedule_fused_batch(jobs: Sequence[Job], state: PriceState, *,
+                              precision: str = "auto",
+                              timings: Optional[List[float]] = None
+                              ) -> List[Optional[Schedule]]:
+    """Speculative batched Alg. 2: vmapped jit calls for all jobs at the
+    CURRENT prices.  Jobs are grouped by (dcap, workload) shape bucket and
+    each group is decided in one vmapped call — batching a burst must not
+    pad a small job up to the burst's largest DP table (the sweep cost is
+    linear in both padded axes).  Commit order / price updates are the
+    caller's job (``OASiS.on_arrivals`` re-solves any job whose prices
+    moved).
+
+    ``timings``, when given, is filled in place with each job's share of
+    its own shape group's wall time (len(jobs) entries) — a fair
+    per-decision latency attribution for the scheduler's stats."""
+    out: List[Optional[Schedule]] = [None] * len(jobs)
+    if timings is not None:
+        timings[:] = [0.0] * len(jobs)
+    groups = {}
+    for i, j in enumerate(jobs):
+        dcap = min(j.max_chunks_per_slot, j.workload)
+        if dcap == 0:
+            continue
+        key = (_bucket(dcap + 1, step=64), _bucket(j.workload + 1, step=256))
+        groups.setdefault(key, []).append((i, j))
+    if not groups:
+        return out
+    T = state.cluster.T
+    with _x64_context(precision):
+        dtype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+        sd = _state_arrays(state, dtype)
+        for (m_pad, d1), live in groups.items():
+            t0 = time.perf_counter()
+            b_pad = _bucket(len(live), floor=1, step=8)
+            jds = [_job_arrays(j, T, m_pad, dtype) for _, j in live]
+            jds += [_reject_job_arrays(T, m_pad, dtype)] * (b_pad - len(live))
+            stacked = tuple(jnp.stack(cols) for cols in zip(*jds))
+            best_t, _, cost, d_left, d_slots, y, z = _decide_many(
+                sd, stacked, d1=d1)
+            best_t = np.asarray(best_t)
+            cost = np.asarray(cost)
+            d_left = np.asarray(d_left)
+            d_slots = np.asarray(d_slots)
+            y, z = np.asarray(y), np.asarray(z)
+            for bi, (i, job) in enumerate(live):
+                out[i] = _schedule_from_outputs(
+                    job, state, int(best_t[bi]), float(cost[bi]),
+                    int(d_left[bi]), d_slots[bi], y[bi], z[bi])
+            if timings is not None:
+                share = (time.perf_counter() - t0) / len(live)
+                for i, _ in live:
+                    timings[i] = share
+    return out

@@ -1,18 +1,21 @@
 """Alg. 2 — dual subroutine deriving the best schedule for one job.
 
-Two implementations with identical outputs (tests assert so):
+Implementations with identical outputs (tests assert so):
 
 * ``best_schedule_ref``  — loop-faithful transcription of the paper's
   pseudocode (COST_t greedy, DP_COST recursion).  The test oracle.
 * ``best_schedule``      — vectorized: COST_t rows for all (t, d) via
   sort + prefix sums (the greedy fills cheapest servers first, so its
-  cost is a prefix sum), DP via banded min-plus convolution.
+  cost is a prefix sum), DP via banded min-plus convolution.  With
+  ``use_jax=True`` the whole pipeline runs as one jit-compiled XLA
+  computation (``schedule_jax.best_schedule_fused``); with
+  ``rows_impl="loop"`` the seed's per-slot-loop COST-row builder is used
+  (kept only as the decision-latency benchmark baseline).
 
-Both return ``None`` when no schedule has positive payoff (job rejected).
+All return ``None`` when no schedule has positive payoff (job rejected).
 """
 from __future__ import annotations
 
-import math
 from typing import Optional, Tuple
 
 import numpy as np
@@ -143,23 +146,31 @@ def _extract(job: Job, state: PriceState, p: np.ndarray, q: np.ndarray,
 # Vectorized implementation
 # ---------------------------------------------------------------------------
 
-def _prefix_tables(prices: np.ndarray, headroom: np.ndarray, demand: np.ndarray,
-                   t0: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+# Per-server instance caps are clamped here before prefix-summing.  A job with
+# zero demand on a pool has unbounded per-server capacity; summing int64 max
+# across servers overflows and flips the pool's total capacity negative, which
+# silently rejected legal worker-only jobs in the seed implementation.
+_CAP_CLAMP = np.int64(1) << 40
+
+
+def _prefix_tables(prices: np.ndarray, headroom: np.ndarray, demand: np.ndarray
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Sorted per-slot unit costs + prefix sums of capacity and cost.
 
     Returns (ccap (T, S), ccost (T, S), scost (T, S)) where column j holds the
     cumulative capacity/cost over the j+1 cheapest servers at each slot.
+    Whole-array over (T, S, R): no Python loop over slots or resources.
     """
-    T = prices.shape[0]
     unit = (prices * demand[None, None, :]).sum(axis=2)   # (T, S)
-    cap = np.zeros(unit.shape, dtype=np.int64)
-    full = np.full(unit.shape[1], np.iinfo(np.int64).max, dtype=np.int64)
-    for t in range(t0, T):
-        c = full.copy()
-        for r in range(R):
-            if demand[r] > 0:
-                c = np.minimum(c, np.floor(headroom[t, :, r] / demand[r] + 1e-9).astype(np.int64))
-        cap[t] = np.maximum(c, 0)
+    pos = demand > 0
+    if pos.any():
+        with np.errstate(divide="ignore", invalid="ignore"):
+            per_r = np.floor(headroom[:, :, pos] / demand[pos][None, None, :]
+                             + 1e-9)
+        cap = np.minimum(per_r.min(axis=2), float(_CAP_CLAMP))
+        cap = np.maximum(cap, 0).astype(np.int64)
+    else:
+        cap = np.full(unit.shape, _CAP_CLAMP, dtype=np.int64)
     order = np.argsort(unit, axis=1, kind="stable")
     scost = np.take_along_axis(unit, order, axis=1)
     scap = np.take_along_axis(cap, order, axis=1)
@@ -175,11 +186,13 @@ def _greedy_cost_for_counts(ccap: np.ndarray, ccost: np.ndarray, scost: np.ndarr
     ccap/ccost/scost: (S,) prefix tables for ONE slot; counts: (M,) wanted
     instance totals.  Returns (M,) costs (inf where counts exceed capacity).
     """
-    total = ccap[-1] if ccap.size else 0
     out = np.full(counts.shape, INF)
-    ok = counts <= total
     cz = counts == 0
     out[cz] = 0.0
+    if ccap.size == 0:                      # empty server pool: only 0 fits
+        return out
+    total = ccap[-1]
+    ok = counts <= total
     idx = np.searchsorted(ccap, counts, side="left")   # first prefix covering
     idx = np.minimum(idx, len(ccap) - 1)
     prev_cap = np.where(idx > 0, ccap[np.maximum(idx - 1, 0)], 0)
@@ -190,15 +203,114 @@ def _greedy_cost_for_counts(ccap: np.ndarray, ccost: np.ndarray, scost: np.ndarr
     return out
 
 
+def _greedy_cost_rows(ccap: np.ndarray, ccost: np.ndarray, scost: np.ndarray,
+                      counts: np.ndarray) -> np.ndarray:
+    """Batched greedy cost: all slots at once.
+
+    ccap/ccost/scost: (T, S) prefix tables; counts: (M,) or (T, M) wanted
+    totals per slot.  Returns (T, M) costs.  The per-row searchsorted is
+    flattened into one global call by offsetting each row into a disjoint
+    integer range (caps are clamped below the offset stride).
+    """
+    T, S = ccap.shape
+    counts = np.broadcast_to(counts, (T, counts.shape[-1])
+                             if counts.ndim == 1 else counts.shape)
+    M = counts.shape[1]
+    out = np.full((T, M), INF)
+    out[counts == 0] = 0.0
+    if S == 0:                              # empty server pool: only 0 fits
+        return out
+    stride = np.int64(_CAP_CLAMP) * (S + 1)   # > any row's total capacity
+    base = np.arange(T, dtype=np.int64) * stride
+    flat = (ccap + base[:, None]).ravel()
+    idx = np.searchsorted(flat, (counts + base[:, None]).ravel(),
+                          side="left").reshape(T, M)
+    idx -= np.arange(T, dtype=np.int64)[:, None] * S
+    # gather from zero-prepended prefixes: index i yields prefix over i servers
+    pad_cap = np.concatenate([np.zeros((T, 1), np.int64), ccap], axis=1)
+    pad_cost = np.concatenate([np.zeros((T, 1)), ccost], axis=1)
+    prev_cap = np.take_along_axis(pad_cap, idx, axis=1)
+    prev_cost = np.take_along_axis(pad_cost, idx, axis=1)
+    marg = np.take_along_axis(scost, np.minimum(idx, S - 1), axis=1)
+    vals = prev_cost + (counts - prev_cap) * marg
+    sel = (counts <= ccap[:, -1:]) & (counts > 0)
+    out[sel] = vals[sel]
+    return out
+
+
+def workload_tables(job: Job, dcap: int) -> Tuple[np.ndarray, np.ndarray]:
+    """(W, Z): workers and PS targets for d = 0..dcap, vectorized.
+
+    Elementwise identical to ``job.workers_for`` / ``job.ps_for``.
+    """
+    ds = np.arange(dcap + 1, dtype=np.float64)
+    W = np.ceil(ds * job.quantum * job.chunk_time - 1e-9).astype(np.int64)
+    W[0] = 0
+    Z = np.ceil(W * job.worker_bw / job.ps_bw - 1e-9).astype(np.int64)
+    Z[W == 0] = 0
+    return W, Z
+
+
 def cost_t_rows(job: Job, state: PriceState, p: np.ndarray, q: np.ndarray,
                 dcap: int) -> np.ndarray:
-    """rows[t, d] = COST_t(t, d) for every slot and d in [0, dcap]."""
+    """rows[t, d] = COST_t(t, d) for every slot and d in [0, dcap].
+
+    Fully vectorized over (t, d): capacity tables, the cost sort, and the
+    prefix-sum greedy costs are whole-array ops — no per-slot Python loop.
+    """
+    T = state.cluster.T
+    a = job.arrival
+    wc_cap, wc_cost, wc_scost = _prefix_tables(
+        p, state.cluster.worker_caps[None] - state.g, job.worker_res)
+    ps_cap, ps_cost, ps_scost = _prefix_tables(
+        q, state.cluster.ps_caps[None] - state.v, job.ps_res)
+    W, Z = workload_tables(job, dcap)                        # (M,)
+    feas_n = W <= job.num_chunks
+    w_costs = _greedy_cost_rows(wc_cap, wc_cost, wc_scost, W)      # (T, M)
+    # PS deployed = min(target, W, pool capacity); feasible iff >= (b/B) W
+    pool = ps_cap[:, -1:] if ps_cap.shape[1] else np.zeros((T, 1), np.int64)
+    deploy = np.minimum(np.minimum(Z, W)[None, :], pool)           # (T, M)
+    feas_ps = deploy * job.ps_bw >= W[None, :] * job.worker_bw - 1e-9
+    z_costs = _greedy_cost_rows(ps_cap, ps_cost, ps_scost, deploy)
+    rows = np.where(feas_n[None, :] & feas_ps, w_costs + z_costs, INF)
+    rows[:, 0] = 0.0
+    rows[:a] = INF
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Seed baseline (per-slot Python loop) — kept verbatim for the decision-
+# latency benchmark so speedups stay measurable against the original path.
+# ---------------------------------------------------------------------------
+
+def _prefix_tables_loop(prices, headroom, demand, t0):
+    T = prices.shape[0]
+    unit = (prices * demand[None, None, :]).sum(axis=2)   # (T, S)
+    cap = np.zeros(unit.shape, dtype=np.int64)
+    full = np.full(unit.shape[1], _CAP_CLAMP, dtype=np.int64)
+    for t in range(t0, T):
+        c = full.copy()
+        for r in range(R):
+            if demand[r] > 0:
+                c = np.minimum(c, np.floor(headroom[t, :, r] / demand[r] + 1e-9).astype(np.int64))
+        cap[t] = np.maximum(c, 0)
+    order = np.argsort(unit, axis=1, kind="stable")
+    scost = np.take_along_axis(unit, order, axis=1)
+    scap = np.take_along_axis(cap, order, axis=1)
+    ccap = np.cumsum(scap, axis=1)
+    ccost = np.cumsum(scap * scost, axis=1)
+    return ccap, ccost, scost
+
+
+def cost_t_rows_loop(job: Job, state: PriceState, p: np.ndarray, q: np.ndarray,
+                     dcap: int) -> np.ndarray:
+    """Seed implementation of ``cost_t_rows``: Python loop over slots."""
     T = state.cluster.T
     a = job.arrival
     rows = np.full((T, dcap + 1), INF)
-    wc_cap, wc_cost, wc_scost = _prefix_tables(
+    wc_cap, wc_cost, wc_scost = _prefix_tables_loop(
         p, state.cluster.worker_caps[None] - state.g, job.worker_res, a)
-    ps_cap, ps_cost, ps_scost = _prefix_tables(
+    ps_cap, ps_cost, ps_scost = _prefix_tables_loop(
         q, state.cluster.ps_caps[None] - state.v, job.ps_res, a)
     ds = np.arange(dcap + 1)
     W = np.array([job.workers_for(int(d)) for d in ds])      # (M,)
@@ -206,7 +318,6 @@ def cost_t_rows(job: Job, state: PriceState, p: np.ndarray, q: np.ndarray,
     Z = np.array([job.ps_for(int(w)) for w in W])
     for t in range(a, T):
         w_costs = _greedy_cost_for_counts(wc_cap[t], wc_cost[t], wc_scost[t], W)
-        # PS deployed = min(target, W, pool capacity); feasible iff >= (b/B) W
         pool = ps_cap[t, -1] if ps_cap.shape[1] else 0
         deploy = np.minimum(np.minimum(Z, W), pool)
         feas_ps = deploy * job.ps_bw >= W * job.worker_bw - 1e-9
@@ -229,9 +340,18 @@ def minplus_band(prev: np.ndarray, row: np.ndarray) -> Tuple[np.ndarray, np.ndar
     return cand[np.arange(D + 1), arg], arg
 
 
-def best_schedule(job: Job, state: PriceState, *, use_jax: bool = False
-                  ) -> Optional[Schedule]:
-    """Vectorized Alg. 2 (numpy min-plus; optionally the JAX/Pallas path)."""
+def best_schedule(job: Job, state: PriceState, *, use_jax: bool = False,
+                  rows_impl: str = "fast") -> Optional[Schedule]:
+    """Vectorized Alg. 2.
+
+    ``use_jax=True`` delegates the whole pipeline to the fused jit engine in
+    ``schedule_jax`` (one XLA computation per decision).  ``rows_impl`` picks
+    the COST-row builder for the numpy path: ``"fast"`` (whole-array) or
+    ``"loop"`` (the seed per-slot baseline, kept for benchmarks).
+    """
+    if use_jax:
+        from .schedule_jax import best_schedule_fused
+        return best_schedule_fused(job, state)
     T = state.cluster.T
     a = job.arrival
     Dtot = job.workload
@@ -240,18 +360,15 @@ def best_schedule(job: Job, state: PriceState, *, use_jax: bool = False
         return None
     p = state.worker_prices()
     q = state.ps_prices()
-    rows = cost_t_rows(job, state, p, q, dcap)
-    if use_jax:
-        from .schedule_jax import dp_sweep_jax
-        cost_tab, split = dp_sweep_jax(rows[a:], Dtot)
-    else:
-        cost_tab = np.full((T - a, Dtot + 1), INF)
-        split = np.zeros((T - a, Dtot + 1), dtype=np.int64)
-        prev = np.full(Dtot + 1, INF)
-        prev[0] = 0.0
-        for i, t in enumerate(range(a, T)):
-            cost_tab[i], split[i] = minplus_band(prev, rows[t])
-            prev = cost_tab[i]
+    rows_fn = cost_t_rows_loop if rows_impl == "loop" else cost_t_rows
+    rows = rows_fn(job, state, p, q, dcap)
+    cost_tab = np.full((T - a, Dtot + 1), INF)
+    split = np.zeros((T - a, Dtot + 1), dtype=np.int64)
+    prev = np.full(Dtot + 1, INF)
+    prev[0] = 0.0
+    for i, t in enumerate(range(a, T)):
+        cost_tab[i], split[i] = minplus_band(prev, rows[t])
+        prev = cost_tab[i]
     best_payoff, best_i = 0.0, -1
     finite = cost_tab[:, Dtot] < INF
     for i in np.nonzero(finite)[0]:

@@ -20,6 +20,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 BLOCK_D = 512
 
@@ -81,3 +82,73 @@ def minplus_pallas(row: jax.Array, prev: jax.Array, *, interpret: bool = True):
         interpret=interpret,
     )(rowp, prevpad)
     return out[0, :d1], arg[0, :d1]
+
+
+# ---------------------------------------------------------------------------
+# Fused T-slot DP sweep: ONE kernel launch for the whole Alg. 2 recurrence
+#     cost_t[d] = min_{d'} rows[t, d'] + cost_{t-1}[d - d']
+# The grid iterates over slots (sequential "arbitrary" semantics on TPU); the
+# carried row cost_{t-1} lives in a VMEM scratch buffer across grid steps, so
+# the sweep costs one launch instead of T tiny ones under ``lax.scan``.
+# ---------------------------------------------------------------------------
+
+def _minplus_sweep_kernel(rows_ref, out_ref, arg_ref, prev_ref, *, dc1p: int,
+                          d1p: int):
+    """rows block: (1, dc1p); out/arg blocks: (1, d1p); prev scratch holds the
+    left-inf-padded carry: prev[k] = prev_ref[0, k + dc1p - 1]."""
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        lane = jax.lax.broadcasted_iota(jnp.int32, (1, dc1p + d1p), 1)
+        prev_ref[0, :] = jnp.where(lane[0] == dc1p - 1, 0.0, jnp.inf
+                                   ).astype(jnp.float32)
+
+    row = rows_ref[0, :]                       # (dc1p,), +inf beyond DC
+    best = jnp.full((d1p,), jnp.inf, jnp.float32)
+    arg = jnp.zeros((d1p,), jnp.int32)
+
+    def body(j, carry):
+        best, arg = carry
+        window = jax.lax.dynamic_slice(prev_ref[0, :], (dc1p - 1 - j,), (d1p,))
+        cand = row[j] + window
+        take = cand < best
+        return jnp.where(take, cand, best), jnp.where(take, j, arg)
+
+    best, arg = jax.lax.fori_loop(0, dc1p, body, (best, arg))
+    out_ref[0, :] = best
+    arg_ref[0, :] = arg
+    prev_ref[0, dc1p - 1:dc1p - 1 + d1p] = best     # carry to slot t+1
+
+
+@functools.partial(jax.jit, static_argnames=("d_total", "interpret"))
+def minplus_sweep_pallas(rows: jax.Array, d_total: int, *,
+                         interpret: bool = True):
+    """rows: (T, DC+1) float32 (+inf infeasible).  Returns
+    (cost (T, D+1) float32, split (T, D+1) int32) for the full DP sweep with
+    init carry [0, inf, ...] — one kernel launch for all T slots."""
+    T, dc1 = rows.shape
+    d1 = d_total + 1
+    dc1p = ((dc1 + 127) // 128) * 128
+    d1p = ((d1 + 127) // 128) * 128
+    rowsp = jnp.full((T, dc1p), jnp.inf, jnp.float32)
+    rowsp = jax.lax.dynamic_update_slice(
+        rowsp, rows.astype(jnp.float32), (0, 0))
+    out, arg = pl.pallas_call(
+        functools.partial(_minplus_sweep_kernel, dc1p=dc1p, d1p=d1p),
+        grid=(T,),
+        in_specs=[pl.BlockSpec((1, dc1p), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((1, d1p), lambda i: (i, 0)),
+            pl.BlockSpec((1, d1p), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, d1p), jnp.float32),
+            jax.ShapeDtypeStruct((T, d1p), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, dc1p + d1p), jnp.float32)],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(rowsp)
+    return out[:, :d1], arg[:, :d1]

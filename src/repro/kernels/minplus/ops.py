@@ -4,8 +4,8 @@ from __future__ import annotations
 
 import jax
 
-from .kernel import minplus_pallas
-from .ref import minplus_ref
+from .kernel import minplus_pallas, minplus_sweep_pallas
+from .ref import minplus_ref, minplus_sweep_ref
 
 
 def minplus(row: jax.Array, prev: jax.Array, use_pallas: bool = True):
@@ -13,3 +13,12 @@ def minplus(row: jax.Array, prev: jax.Array, use_pallas: bool = True):
         return minplus_ref(row, prev)
     interpret = jax.default_backend() != "tpu"
     return minplus_pallas(row, prev, interpret=interpret)
+
+
+def minplus_sweep(rows: jax.Array, d_total: int, use_pallas: bool = True):
+    """Full T-slot DP sweep.  Pallas: one kernel launch with the carry row in
+    VMEM scratch; ref: a ``lax.scan`` of per-slot min-plus convolutions."""
+    if not use_pallas:
+        return minplus_sweep_ref(rows, d_total)
+    interpret = jax.default_backend() != "tpu"
+    return minplus_sweep_pallas(rows, d_total, interpret=interpret)

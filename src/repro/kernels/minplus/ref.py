@@ -1,6 +1,8 @@
 """Pure-jnp oracle for the banded min-plus convolution."""
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -15,3 +17,118 @@ def minplus_ref(row: jax.Array, prev: jax.Array):
     cand = jnp.where(ids >= 0, cand, jnp.inf)
     arg = jnp.argmin(cand, axis=1).astype(jnp.int32)
     return jnp.take_along_axis(cand, arg[:, None], axis=1)[:, 0], arg
+
+
+# below this many candidate cells per slot the (D+1, DC+1) matrix inner is
+# cheaper than a window scan (scan steps have fixed per-iteration overhead)
+_MATRIX_CELLS = 32768
+
+
+def minplus_sweep_ref(rows: jax.Array, d_total: int):
+    """T-slot DP sweep: scan over slots, banded min-plus per slot.
+
+    rows: (T, DC+1); returns (cost (T, D+1), split (T, D+1) int32) for the
+    recurrence new_t[d] = min_d' rows[t, d'] + new_{t-1}[d - d'] with
+    new_{-1} = [0, inf, ...].  Dtype-preserving (float64 under x64 — the
+    fused engine's exactness relies on it); argmin keeps the smallest d'
+    like ``np.argmin``.
+
+    Two inner forms with identical outputs, chosen by static size: small
+    slots build the (D+1, DC+1) candidate matrix and argmin it; large slots
+    slide contiguous windows of the left-padded carry over a scan — ~4x
+    faster on CPU XLA than the gather matrix and O(D) memory.
+    """
+    d1 = d_total + 1
+    dc1 = rows.shape[1]
+    init = jnp.full((d1,), jnp.inf, rows.dtype).at[0].set(0.0)
+
+    if d1 * dc1 <= _MATRIX_CELLS:
+        ids = jnp.arange(d1)[:, None] - jnp.arange(dc1)[None, :]
+
+        def slot(prev, row):
+            prev_ext = jnp.append(prev, jnp.asarray(jnp.inf, prev.dtype))
+            cand = row[None, :] + prev_ext[jnp.where(ids >= 0, ids, -1)]
+            cand = jnp.where(ids >= 0, cand, jnp.inf)
+            arg = jnp.argmin(cand, axis=1).astype(jnp.int32)
+            new = jnp.take_along_axis(cand, arg[:, None], axis=1)[:, 0]
+            return new, (new, arg)
+    else:
+        def slot(prev, row):
+            # prev_pad[k] = prev[k - dc1]; window j starts at dc1 - j
+            prev_pad = jnp.concatenate(
+                [jnp.full((dc1,), jnp.inf, prev.dtype), prev])
+
+            def step(carry, j):
+                best, arg = carry
+                win = jax.lax.dynamic_slice(prev_pad, (dc1 - j,), (d1,))
+                cand = row[j] + win
+                take = cand < best
+                return (jnp.where(take, cand, best),
+                        jnp.where(take, j.astype(jnp.int32), arg)), None
+
+            (new, arg), _ = jax.lax.scan(
+                step, (jnp.full((d1,), jnp.inf, prev.dtype),
+                       jnp.zeros((d1,), jnp.int32)), jnp.arange(dc1))
+            return new, (new, arg)
+
+    _, (costs, args) = jax.lax.scan(slot, init, rows)
+    return costs, args
+
+
+# fully-unrolled chains above this band width blow up compile time; fall
+# back to dynamically-indexed blocks of this many taps per scan step
+_UNROLL_MAX = 512
+_CHAIN_BLOCK = 32
+
+
+def minplus_sweep_cost(rows: jax.Array, d_total: int) -> jax.Array:
+    """Cost-only T-slot DP sweep (no argmin carry): returns (T, D+1).
+
+    The fused engine's hot path: because each slot's body is an unrolled
+    chain of STATIC slices of the left-padded carry —
+    ``min_j row[j] + prev_pad[DC+1-j : …+D+1]`` — XLA fuses it into one
+    vectorised loop instead of a per-tap scan (~6x faster on CPU).  Split
+    decisions are recovered afterwards from the stored cost table: the
+    argmin over the same candidate values at the backtracked cells, which
+    reproduces the carried argmin exactly (first minimum wins in both).
+    """
+    d1 = d_total + 1
+    dc1 = rows.shape[1]
+    init = jnp.full((d1,), jnp.inf, rows.dtype).at[0].set(0.0)
+
+    if dc1 <= _UNROLL_MAX:
+        def slot(prev, row):
+            prev_pad = jnp.concatenate(
+                [jnp.full((dc1,), jnp.inf, prev.dtype), prev])
+            cands = [row[j] + jax.lax.slice(prev_pad, (dc1 - j,),
+                                            (dc1 - j + d1,))
+                     for j in range(dc1)]
+            new = functools.reduce(jnp.minimum, cands)
+            return new, new
+    else:
+        blk = _CHAIN_BLOCK
+        nb = (dc1 + blk - 1) // blk
+
+        def slot(prev, row):
+            rowp = jnp.concatenate(
+                [row, jnp.full((nb * blk - dc1,), jnp.inf, row.dtype)])
+            prev_pad = jnp.concatenate(
+                [jnp.full((nb * blk,), jnp.inf, prev.dtype), prev])
+
+            def step(best, b):
+                # taps j = b*blk + i share one dynamically-positioned window
+                base = nb * blk - b * blk
+                win = jax.lax.dynamic_slice(
+                    prev_pad, (base - (blk - 1),), (d1 + blk - 1,))
+                rb = jax.lax.dynamic_slice(rowp, (b * blk,), (blk,))
+                for i in range(blk):
+                    best = jnp.minimum(best, rb[i] + jax.lax.slice(
+                        win, (blk - 1 - i,), (blk - 1 - i + d1,)))
+                return best, None
+
+            new, _ = jax.lax.scan(
+                step, jnp.full((d1,), jnp.inf, prev.dtype), jnp.arange(nb))
+            return new, new
+
+    _, costs = jax.lax.scan(slot, init, rows)
+    return costs

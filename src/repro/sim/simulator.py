@@ -61,12 +61,16 @@ def simulate(cluster: ClusterSpec, jobs: Sequence[Job], scheduler: str = "oasis"
         osched = OASiS(cluster, params, impl=impl)
         completion: Dict[int, int] = {}
         for t in range(cluster.T):
+            batch = []
             for job in by_slot.get(t, []):
                 if quantum is not None:
                     q = quantum if quantum > 0 else max(
                         1, math.ceil(job.epochs * job.num_chunks / 1200))
                     job = dataclasses.replace(job, quantum=q)
-                s = osched.on_arrival(job)
+                batch.append(job)
+            # batched arrivals (vmapped engine under impl="jax"; exact
+            # sequential Alg. 1 semantics either way)
+            for job, s in zip(batch, osched.on_arrivals(batch)):
                 if s is not None:
                     completion[job.jid] = s.finish
             alloc = osched.allocation_at(t)

@@ -6,8 +6,8 @@ import pytest
 
 from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
-from repro.kernels.minplus.kernel import minplus_pallas
-from repro.kernels.minplus.ref import minplus_ref
+from repro.kernels.minplus.kernel import minplus_pallas, minplus_sweep_pallas
+from repro.kernels.minplus.ref import minplus_ref, minplus_sweep_ref
 from repro.kernels.ssd.ops import ssd_op
 from repro.kernels.ssd.ref import ssd_ref
 
@@ -50,6 +50,22 @@ def test_minplus_sweep(d1, dc1, inf_frac):
     o1, a1 = minplus_pallas(jnp.array(row), jnp.array(prev), interpret=True)
     o2, a2 = minplus_ref(jnp.array(row), jnp.array(prev))
     v1, v2 = np.asarray(o1), np.asarray(o2)
+    assert np.all((np.isinf(v1) & np.isinf(v2)) | (np.abs(v1 - v2) < 1e-5))
+    assert np.array_equal(np.asarray(a1), np.asarray(a2))
+
+
+@pytest.mark.parametrize("T,dc1,d1", [(3, 2, 6), (9, 17, 33), (16, 65, 300)])
+@pytest.mark.parametrize("inf_frac", [0.0, 0.4])
+def test_minplus_sweep_fused_kernel(T, dc1, d1, inf_frac):
+    """The single-launch T-slot sweep (grid over slots, carried row in VMEM
+    scratch) == a lax.scan of per-slot min-plus convolutions."""
+    rng = np.random.default_rng(T * d1)
+    rows = rng.random((T, dc1)).astype(np.float32)
+    rows[rng.random((T, dc1)) < inf_frac] = np.inf
+    rows[:, 0] = 0.0
+    c1, a1 = minplus_sweep_pallas(jnp.array(rows), d1 - 1, interpret=True)
+    c2, a2 = minplus_sweep_ref(jnp.array(rows), d1 - 1)
+    v1, v2 = np.asarray(c1), np.asarray(c2)
     assert np.all((np.isinf(v1) & np.isinf(v2)) | (np.abs(v1 - v2) < 1e-5))
     assert np.array_equal(np.asarray(a1), np.asarray(a2))
 

@@ -1,8 +1,15 @@
-"""Hypothesis property tests on the scheduler's invariants."""
+"""Hypothesis property tests on the scheduler's invariants.
+
+``hypothesis`` is an optional dev dependency (requirements-dev.txt); this
+module skips cleanly at collection when it is absent so ``pytest -x -q``
+still runs the rest of the suite.
+"""
 import math
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import best_schedule, price_params_from_jobs
