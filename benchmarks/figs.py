@@ -8,13 +8,14 @@ Fig.6 sensitivity to inaccurate U/L estimates.
 from __future__ import annotations
 
 import time
-from typing import List
+from typing import List, Optional
 
 import numpy as np
 
 from repro.core import OASiS, price_params_from_jobs
 from repro.core.offline_opt import offline_optimum
-from repro.sim import make_cluster, make_jobs, simulate
+from repro.sim import (make_cluster, make_jobs, scenarios, simulate,
+                       simulate_reference)
 
 SCHEDULERS = ["oasis", "fifo", "drf", "rrh", "dorm"]
 
@@ -114,8 +115,70 @@ def latency_table(T: int = 300, H: int = 50, K: int = 50, n: int = 20
     return rows
 
 
-def decision_latency(T: int = 96, H: int = 16, K: int = 16, n: int = 200
-                     ) -> List[str]:
+def sim_v2_speedup(T: int = 100, H: int = 20, K: int = 20, n: int = 60,
+                   seed: int = 3, stats_out: Optional[dict] = None
+                   ) -> List[str]:
+    """fig3-shaped workload: v1 per-slot loop (seed placement path) vs the
+    sim-v2 event engine, per reactive scheduler plus OASiS sim overhead
+    (wall minus decision time; OASiS decisions are scheduler work shared
+    by both drivers, so they are excluded from the engine's speedup)."""
+    rows = []
+    cluster = make_cluster(T=T, H=H, K=K)
+    jobs = make_jobs(n, T=T, seed=seed, small=False)
+    agg = {"v1": 0.0, "v2": 0.0}
+    stats = {} if stats_out is None else stats_out
+    for name in ("fifo", "drf", "rrh", "dorm"):
+        t0 = time.perf_counter()
+        a = simulate_reference(cluster, jobs, scheduler=name, check=False)
+        t1 = time.perf_counter()
+        b = simulate(cluster, jobs, scheduler=name, check=False)
+        t2 = time.perf_counter()
+        assert a.completion == b.completion, f"sim v2 diverged on {name}"
+        v1, v2 = t1 - t0, t2 - t1
+        agg["v1"] += v1
+        agg["v2"] += v2
+        stats[name] = {"v1_seconds": v1, "v2_seconds": v2,
+                       "speedup": v1 / max(v2, 1e-12)}
+        rows.append(f"sim_v2[{name}],{v2*1e6:.0f},{v1/max(v2,1e-12):.2f}")
+    for impl, fn in [("v1", simulate_reference), ("v2", simulate)]:
+        t0 = time.perf_counter()
+        r = fn(cluster, jobs, scheduler="oasis", check=False, quantum=0)
+        over = time.perf_counter() - t0 - sum(r.decision_seconds)
+        stats[f"oasis_overhead_{impl}_seconds"] = over
+        rows.append(f"sim_v2[oasis_overhead;{impl}],{over*1e6:.0f},")
+    speedup = agg["v1"] / max(agg["v2"], 1e-12)
+    stats["reactive_total"] = {"v1_seconds": agg["v1"], "v2_seconds": agg["v2"],
+                               "speedup": speedup}
+    rows.append(f"sim_v2[reactive_total],{agg['v2']*1e6:.0f},{speedup:.2f}")
+    return rows
+
+
+def fig3_scale(quick: bool = False, include_oasis: bool = False) -> List[str]:
+    """fig3 at 10x the paper setting (T=500, 100+100 servers, 2000 jobs) on
+    the sim-v2 engine; the v1 per-slot loop cannot finish this in
+    reasonable time (see sim_v2_speedup for the controlled comparison)."""
+    scheds = scenarios.ALL_SCHEDULERS if include_oasis else scenarios.REACTIVE
+    rows = []
+    for r in scenarios.run_scale(seed=0, quick=quick, schedulers=scheds):
+        rows.append(f"fig3_scale[{r.scheduler};{r.variant}],"
+                    f"{r.wall_seconds*1e6:.0f},{r.utility:.2f}")
+    return rows
+
+
+def scenario_table(quick: bool = False,
+                   names=("hetero", "cancel", "straggler", "misest")
+                   ) -> List[str]:
+    """One row per (scenario, scheduler, variant) from sim/scenarios.py."""
+    rows = []
+    for name in names:
+        for r in scenarios.run_scenario(name, seed=0, quick=quick):
+            rows.append(f"scenario[{r.scenario};{r.scheduler};{r.variant}],"
+                        f"{r.wall_seconds*1e6:.0f},{r.utility:.2f}")
+    return rows
+
+
+def decision_latency(T: int = 96, H: int = 16, K: int = 16, n: int = 200,
+                     stats_out: Optional[dict] = None) -> List[str]:
     """Per-decision scheduler latency (p50/p95 of ``decision_seconds``):
     seed per-slot-loop baseline vs vectorized numpy vs the fused jit engine.
 
@@ -128,7 +191,7 @@ def decision_latency(T: int = 96, H: int = 16, K: int = 16, n: int = 200
     rows = []
     cluster = make_cluster(T=T, H=H, K=K)
     jobs = make_jobs(n, T=T, seed=17, small=False)
-    stats = {}
+    stats = {} if stats_out is None else stats_out
     for impl in ("loop", "fast", "jax"):
         # every impl gets a discarded first run so the comparison is
         # symmetric (jit compiles; numpy warms allocator/page cache)
@@ -145,6 +208,7 @@ def decision_latency(T: int = 96, H: int = 16, K: int = 16, n: int = 200
                         f"{val:.6f}")
         if impl == "jax":
             cm = float(np.mean(cold.decision_seconds))
+            stats["jax_cold_mean_seconds"] = cm
             rows.append(f"decision_latency[jax;cold_mean],{cm*1e6:.0f},"
                         f"{cm:.6f}")
     for label in ("p50", "p95", "mean"):

@@ -21,7 +21,7 @@ from __future__ import annotations
 import json
 import sys
 from pathlib import Path
-from typing import Dict, Optional
+from typing import Dict
 
 CHIP_FLOPS = 197e12
 HBM_BW = 819e9

@@ -2,12 +2,20 @@
 
 Prints ``name,us_per_call,derived`` CSV rows:
   fig3_utility[...]   total job utility per scheduler x #jobs   (Fig. 3)
+  fig3_scale[...]     fig3-shaped workload at 10x paper scale (sim v2)
   fig4_timeliness[..] mean |completion - target| per scheduler  (Fig. 4)
   fig5_ratio[...]     OPT / OASiS on exact-solvable instances   (Fig. 5)
   fig6_estimate[...]  utility under mis-estimated U/L           (Fig. 6)
   latency[...]        per-decision scheduler latency            (fn. 4)
   decision_latency[.] loop vs fast vs fused-jax backend p50/p95
+  sim_v2[...]         event-engine vs v1 per-slot-loop wall clock
+  scenario[...]       sim-v2 scenario library (hetero/cancel/...)
   minplus[...]        scheduler DP kernel micro-benchmarks
+
+The ``decision`` section additionally writes machine-readable p50/p95
+per backend plus the sim-v2 wall-clock comparison to ``--json`` (default
+``BENCH_decision.json``) so the perf trajectory is tracked across PRs
+(CI uploads it as an artifact).
 
 ``--quick`` shrinks instance sizes.  The roofline table is a separate
 consumer of the dry-run artifacts: ``python -m benchmarks.roofline``.
@@ -15,11 +23,16 @@ consumer of the dry-run artifacts: ``python -m benchmarks.roofline``.
 from __future__ import annotations
 
 import argparse
+import json
 import os
+import platform
 import sys
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+SECTIONS = ("fig3", "fig4", "fig5", "fig6", "latency", "decision",
+            "simspeed", "scale", "scenarios", "kernels")
 
 
 def _kernel_micro() -> list:
@@ -55,13 +68,18 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="comma list: fig3,fig4,fig5,fig6,latency,decision,"
-                         "kernels")
+                    help="comma list: " + ",".join(SECTIONS))
+    ap.add_argument("--json", default="BENCH_decision.json",
+                    help="where the decision section writes its machine-"
+                         "readable stats (p50/p95 per backend + sim-v2 "
+                         "wall clock); empty string disables")
     args = ap.parse_args()
     from benchmarks import figs
 
-    which = set((args.only or "fig3,fig4,fig5,fig6,latency,decision,kernels"
-                 ).split(","))
+    which = set((args.only or ",".join(SECTIONS)).split(","))
+    unknown = which - set(SECTIONS)
+    if unknown:
+        ap.error(f"unknown --only section(s): {sorted(unknown)}")
     rows = []
     t_all = time.time()
     if "fig3" in which:
@@ -78,7 +96,31 @@ def main() -> None:
         rows += figs.latency_table(T=100 if args.quick else 300,
                                    n=10 if args.quick else 20)
     if "decision" in which:
-        rows += figs.decision_latency(n=60 if args.quick else 200)
+        dstats: dict = {}
+        sstats: dict = {}
+        rows += figs.decision_latency(n=60 if args.quick else 200,
+                                      stats_out=dstats)
+        rows += figs.sim_v2_speedup(
+            **(dict(T=60, n=40) if args.quick else {}), stats_out=sstats)
+        if args.json:
+            payload = {
+                "schema": "bench_decision/v1",
+                "quick": bool(args.quick),
+                "platform": platform.platform(),
+                "python": platform.python_version(),
+                "decision_seconds": dstats,
+                "sim_v2": sstats,
+            }
+            with open(args.json, "w") as fh:
+                json.dump(payload, fh, indent=2, sort_keys=True)
+            print(f"# wrote {args.json}", file=sys.stderr)
+    if "simspeed" in which and "decision" not in which:
+        rows += figs.sim_v2_speedup(
+            **(dict(T=60, n=40) if args.quick else {}))
+    if "scale" in which:
+        rows += figs.fig3_scale(quick=args.quick)
+    if "scenarios" in which:
+        rows += figs.scenario_table(quick=args.quick)
     if "kernels" in which:
         rows += _kernel_micro()
     print("name,us_per_call,derived")

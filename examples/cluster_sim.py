@@ -2,6 +2,12 @@
 scale and print a small ASCII chart.
 
     PYTHONPATH=src python examples/cluster_sim.py --jobs 60 --T 100
+
+Or drive one of the sim-v2 scenarios (heterogeneous fleets, mid-run
+cancellation, stragglers, U/L mis-estimation, 10x-paper scale):
+
+    PYTHONPATH=src python examples/cluster_sim.py --scenario cancel
+    PYTHONPATH=src python examples/cluster_sim.py --scenario straggler --quick
 """
 import argparse
 import os
@@ -12,6 +18,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 
 from repro.sim import make_cluster, make_jobs, simulate
+from repro.sim.scenarios import SCENARIOS, run_scenario
 
 
 def bar(v, vmax, width=40):
@@ -19,14 +26,7 @@ def bar(v, vmax, width=40):
     return "#" * n
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--jobs", type=int, default=60)
-    ap.add_argument("--T", type=int, default=100)
-    ap.add_argument("--servers", type=int, default=20)
-    ap.add_argument("--seeds", type=int, default=3)
-    args = ap.parse_args()
-
+def run_figs(args):
     totals = {}
     gaps = {}
     for seed in range(args.seeds):
@@ -45,11 +45,43 @@ def main():
     for k, v in sorted(means.items(), key=lambda kv: -kv[1]):
         print(f"{k:6s} {v:9.1f}  {bar(v, vmax)}")
 
-    print(f"\n== completion - target time (mean abs; Fig. 4) ==")
+    print("\n== completion - target time (mean abs; Fig. 4) ==")
     for k in means:
         g = gaps.get(k, [])
         print(f"{k:6s} {np.mean(np.abs(g)) if g else float('nan'):8.2f} "
               f"(n={len(g)})")
+
+
+def run_one_scenario(args):
+    rows = run_scenario(args.scenario, seed=args.seed, quick=args.quick)
+    print(f"== scenario: {args.scenario} "
+          f"(seed={args.seed}{', quick' if args.quick else ''}) ==")
+    vmax = max(r.utility for r in rows)
+    for r in rows:
+        extra = f" canceled={r.canceled}" if r.canceled else ""
+        print(f"{r.scheduler:6s} {r.variant:14s} {r.utility:9.1f} "
+              f"acc={r.accepted:4d} comp={r.completed:4d} "
+              f"util={r.utilization:5.2f} {r.wall_seconds:7.2f}s{extra}  "
+              f"{bar(r.utility, vmax, width=24)}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jobs", type=int, default=60)
+    ap.add_argument("--T", type=int, default=100)
+    ap.add_argument("--servers", type=int, default=20)
+    ap.add_argument("--seeds", type=int, default=3)
+    ap.add_argument("--scenario", default=None, choices=sorted(SCENARIOS),
+                    help="run a sim-v2 scenario instead of the Fig. 3/4 "
+                         "comparison")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quick", action="store_true",
+                    help="shrink the scenario instance")
+    args = ap.parse_args()
+    if args.scenario:
+        run_one_scenario(args)
+    else:
+        run_figs(args)
 
 
 if __name__ == "__main__":

@@ -21,10 +21,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import OASiS, job_from_arch, price_params_from_jobs
-from repro.data.pipeline import DataConfig, DataPipeline
+from repro.data.pipeline import DataConfig
 from repro.models import init_model
 from repro.models.config import ModelConfig
-from repro.runtime.elastic import ElasticTrainer, SlotPlan, schedule_to_plan
+from repro.runtime.elastic import ElasticTrainer, schedule_to_plan
 from repro.sim import make_cluster
 from repro.train.optimizer import OptConfig, init_opt
 from repro.train.steps import make_train_step

@@ -8,7 +8,6 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import numpy as np
 
 from repro.core import OASiS, price_params_from_jobs
 from repro.sim import make_cluster, make_jobs, simulate

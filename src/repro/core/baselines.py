@@ -15,12 +15,53 @@ import numpy as np
 from .types import ClusterSpec, Job, R
 
 
+# Placement backend switch: "fast" (whole-pool array ops, the default) or
+# "loop" (the seed's per-server Python scan, kept as the honest baseline
+# for `simulate_reference` / the sim-v2 speedup benchmark).  Both produce
+# bit-identical placements (tests/test_sim_v2.py::test_place_fast_equals_loop).
+PLACE_IMPL = "fast"
+
+
 def _place(count: int, free: np.ndarray, demand: np.ndarray) -> Optional[np.ndarray]:
     """Round-robin placement of ``count`` instances onto servers.
 
     free: (S, R) remaining capacity (mutated on success).  Returns per-server
     counts or None if the pool cannot host all instances.
     """
+    if PLACE_IMPL == "loop":
+        return _place_loop(count, free, demand)
+    return _place_fast(count, free, demand)
+
+
+def _place_fast(count: int, free: np.ndarray, demand: np.ndarray
+                ) -> Optional[np.ndarray]:
+    """Each round places one instance on every server (in index order) that
+    still fits the demand; rounds repeat until all instances are placed or
+    no server fits.  The whole round's fit mask is one array op — server
+    rows are independent, so checking before the round equals checking at
+    each visit, bit for bit, including the 1e-9 slack and the sequential
+    ``free -= demand`` float updates of the per-server loop."""
+    S = free.shape[0]
+    out = np.zeros(S, dtype=np.int64)
+    if count == 0:
+        return out
+    placed = 0
+    while placed < count:
+        fits = np.flatnonzero(np.all(free >= demand[None] - 1e-9, axis=1))
+        if fits.size == 0:
+            # rollback
+            free += out[:, None] * demand[None]
+            return None
+        take = fits[:count - placed]
+        free[take] -= demand[None]
+        out[take] += 1
+        placed += take.size
+    return out
+
+
+def _place_loop(count: int, free: np.ndarray, demand: np.ndarray
+                ) -> Optional[np.ndarray]:
+    """The seed's per-server scan (v1 baseline; see PLACE_IMPL)."""
     S = free.shape[0]
     out = np.zeros(S, dtype=np.int64)
     if count == 0:

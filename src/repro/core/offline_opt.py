@@ -9,7 +9,6 @@ generic solver; keep instances tiny.
 """
 from __future__ import annotations
 
-import math
 from typing import Sequence
 
 import numpy as np

@@ -21,7 +21,7 @@ from typing import Optional, Tuple
 import numpy as np
 
 from .pricing import PriceState
-from .types import ClusterSpec, Job, R, Schedule
+from .types import Job, R, Schedule
 
 INF = float("inf")
 

@@ -13,7 +13,7 @@ assignment is a pure function of (step, n_workers).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Optional
 
 import numpy as np
 

@@ -28,7 +28,7 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 
-from ..configs import ARCHS, all_cells, cells, get_config, norm_name
+from ..configs import ARCHS, cells, get_config, norm_name
 from ..models.config import ModelConfig
 from ..models.layers import shapes_tree
 from ..models.model import model_specs
@@ -91,7 +91,7 @@ def lower_cell(cfg: ModelConfig, shape_name: str, seq: int, gbatch: int,
     from ..train.steps import input_specs, make_train_step
     from ..serve.steps import decode_input_specs, make_decode_step, \
         make_prefill_step
-    from ..parallel.sharding import batch_sharding, cache_shardings, \
+    from ..parallel.sharding import cache_shardings, \
         param_shardings
     from jax.sharding import NamedSharding, PartitionSpec
 

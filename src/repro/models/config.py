@@ -5,7 +5,6 @@ dense / MoE / MLA-MoE / SSM (Mamba2 SSD) / hybrid (Zamba2) / enc-dec
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
 
 
 @dataclasses.dataclass(frozen=True)

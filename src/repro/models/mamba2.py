@@ -20,7 +20,6 @@ cleanly; only the small grouped B/C projections stay replicated:
 """
 from __future__ import annotations
 
-import math
 from typing import Dict, Optional, Tuple
 
 import jax

@@ -8,7 +8,6 @@ are stacked the same way and threaded through the scan.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax

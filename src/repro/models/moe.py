@@ -12,7 +12,7 @@ sharding.  Tokens beyond capacity are dropped (standard Switch-style).
 from __future__ import annotations
 
 import math
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -9,10 +9,8 @@ standard large-run recipe.
 from __future__ import annotations
 
 import math
-from typing import Any, Callable, Dict, Optional
+from typing import Callable, Dict, Optional
 
-import jax
-import numpy as np
 
 from ..ckpt import checkpoint as ckpt
 from ..data.pipeline import DataPipeline, PipelineState

@@ -20,15 +20,13 @@ the same code drives jax.distributed with per-pod process groups.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
-import numpy as np
 
 from ..ckpt import checkpoint as ckpt
 from ..core.types import Schedule
-from ..data.pipeline import DataConfig, DataPipeline, PipelineState
+from ..data.pipeline import DataConfig, DataPipeline
 
 
 @dataclasses.dataclass

@@ -16,7 +16,7 @@ a synchronous TPU mesh a straggler stalls every step.  Mitigations here:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import List
 
 import numpy as np
 

@@ -19,7 +19,7 @@ zeroed on admit — pass a reset hook for those families.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,2 +1,7 @@
-from .simulator import SimResult, simulate
+from . import engine, scenarios
+from .engine import SimResult
+from .simulator import simulate, simulate_reference
 from .workload import make_cluster, make_jobs
+
+__all__ = ["engine", "scenarios", "SimResult", "simulate",
+           "simulate_reference", "make_cluster", "make_jobs"]

@@ -1,0 +1,305 @@
+"""Event-driven trace simulator (sim v2).
+
+The v1 simulator (`sim/simulator.py`, kept as ``simulate_reference``) steps
+every slot in Python and re-plans / re-accounts per job per slot.  This
+engine only enters Python on *events* — arrival bursts, completions,
+cancellations — and does everything between events as whole-array numpy
+ops over dense per-job state:
+
+* **Reactive baselines** (FIFO/DRF/RRH/Dorm): between two events the
+  scheduler's ``step(t)`` output is constant (running jobs keep their
+  placement; waiting jobs face unchanged free capacity; DRF/Dorm repack
+  deterministically from an unchanged job set), so the engine replans only
+  at event slots and fast-forwards work progress with one vectorized
+  update: per-job completion slots are ``ceil(remaining / rate)`` over the
+  whole live set, and the clock jumps to the earliest completion or the
+  next event.
+* **OASiS**: schedules are committed at arrival, so arrivals are the only
+  plan events; per-slot GPU usage is accumulated into a dense ``(T,)``
+  tensor at commit time and capacity feasibility is one ``(T, H, R)``
+  array comparison against the price-state's allocation tensor instead of
+  a per-slot Python walk.
+
+On cancellation-free, unperturbed workloads the engine is equivalence-
+tested against the v1 loop (utilities, accept/complete counts, completion
+slots) in ``tests/test_sim_v2.py``.  Two scenario hooks go beyond v1:
+
+* ``cancellations``: ``{jid: slot}`` — the job departs mid-run at
+  ``slot``; its remaining allocation is released (OASiS: prices drop via
+  ``PriceState.release``) and it earns no utility.  A slot at/before the
+  job's arrival or at/after T is a no-op (the job runs, resp. finishes,
+  normally) — identically for every scheduler.
+* ``throughput``: ``fn(job, n_workers, slot) -> factor in (0, 1]`` — a
+  per-(job, slot) multiplicative work-rate perturbation (e.g. stragglers,
+  ``sim/scenarios.py``).  Under perturbation the engine advances slot by
+  slot (rates vary), still vectorized across jobs; an OASiS job whose
+  committed schedule under-delivers its total work is *not* completed and
+  earns nothing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.baselines import BASELINES, ReactiveScheduler
+from ..core.oasis import OASiS
+from ..core.pricing import PriceParams, price_params_from_jobs
+from ..core.types import ClusterSpec, Job
+
+ThroughputFn = Callable[[Job, int, int], float]
+
+
+@dataclasses.dataclass
+class SimResult:
+    name: str
+    total_utility: float
+    accepted: int
+    completed: int
+    n_jobs: int
+    completion: Dict[int, int]              # jid -> completion slot
+    target_gap: List[float]                 # (t_done - a) - gamma3 per job
+    decision_seconds: List[float]
+    utilization: float                      # mean worker-pool GPU utilization
+    canceled: int = 0                       # jobs departed mid-run (sim v2)
+
+
+def _with_quantum(job: Job, quantum: Optional[int]) -> Job:
+    """Workload quantization is a DP-granularity knob (``Job.workload``);
+    it is applied uniformly here but only the OASiS subroutine reads it —
+    reactive baselines schedule by ``total_work_slots``/``num_chunks``,
+    which are quantum-independent (asserted in tests/test_sim_v2.py)."""
+    if quantum is None:
+        return job
+    q = quantum if quantum > 0 else max(
+        1, math.ceil(job.epochs * job.num_chunks / 1200))
+    return dataclasses.replace(job, quantum=q)
+
+
+def _target_gaps(jmap: Dict[int, Job], completion: Dict[int, int]) -> List[float]:
+    gaps = []
+    for jid, tdone in completion.items():
+        u = jmap[jid].utility
+        if getattr(u, "gamma2", 0) > 0:
+            gaps.append((tdone - jmap[jid].arrival) - u.gamma3)
+    return gaps
+
+
+def _group_events(jobs: Sequence[Job], cancellations: Optional[Dict[int, int]],
+                  T: int) -> Tuple[Dict[int, List[Job]], Dict[int, List[int]]]:
+    by_slot: Dict[int, List[Job]] = {}
+    arrival = {}
+    for j in jobs:
+        if j.arrival >= T:          # v1 semantics: never seen by the sim
+            continue
+        by_slot.setdefault(j.arrival, []).append(j)
+        arrival[j.jid] = j.arrival
+    cancel_slot: Dict[int, List[int]] = {}
+    for jid, c in (cancellations or {}).items():
+        # a departure takes effect only for a job already admitted before
+        # slot c and still inside the horizon; cancelling at/before arrival
+        # or at/after T is a no-op (the job runs, resp. completes, normally)
+        if jid in arrival and arrival[jid] < c < T:
+            cancel_slot.setdefault(int(c), []).append(jid)
+    return by_slot, cancel_slot
+
+
+def _check_alloc(cluster: ClusterSpec, jmap: Dict[int, Job],
+                 alloc: Dict[int, tuple]) -> None:
+    """Whole-array capacity feasibility of one allocation snapshot."""
+    if not alloc:
+        return
+    ids = list(alloc)
+    ys = np.stack([alloc[j][0] for j in ids]).astype(float)        # (n, H)
+    wres = np.stack([jmap[j].worker_res for j in ids])             # (n, R)
+    assert np.all(ys.T @ wres <= cluster.worker_caps + 1e-6), \
+        "worker capacity violated"
+    zs = [(j, alloc[j][1]) for j in ids if alloc[j][1] is not None]
+    if zs:
+        zmat = np.stack([z for _, z in zs]).astype(float)
+        sres = np.stack([jmap[j].ps_res for j, _ in zs])
+        assert np.all(zmat.T @ sres <= cluster.ps_caps + 1e-6), \
+            "PS capacity violated"
+
+
+def run(cluster: ClusterSpec, jobs: Sequence[Job], scheduler: str = "oasis",
+        params: Optional[PriceParams] = None, impl: str = "fast",
+        fixed_workers: int = 8, check: bool = True,
+        quantum: Optional[int] = None,
+        cancellations: Optional[Dict[int, int]] = None,
+        throughput: Optional[ThroughputFn] = None) -> SimResult:
+    """Drive ``scheduler`` through the trace event-by-event.
+
+    Same contract as the v1 ``simulate`` plus the scenario hooks
+    documented in the module docstring.
+    """
+    if scheduler == "oasis":
+        return _run_oasis(cluster, jobs, params, impl, check, quantum,
+                          cancellations, throughput)
+    return _run_reactive(cluster, jobs, scheduler, fixed_workers, check,
+                         quantum, cancellations, throughput)
+
+
+# ---------------------------------------------------------------------------
+# OASiS (plan-ahead): arrivals and cancellations are the only events.
+# ---------------------------------------------------------------------------
+
+def _run_oasis(cluster: ClusterSpec, jobs: Sequence[Job],
+               params: Optional[PriceParams], impl: str, check: bool,
+               quantum: Optional[int],
+               cancellations: Optional[Dict[int, int]],
+               throughput: Optional[ThroughputFn]) -> SimResult:
+    T = cluster.T
+    jmap = {j.jid: j for j in jobs}
+    by_slot, cancel_slot = _group_events(jobs, cancellations, T)
+    params = params or price_params_from_jobs(jobs, cluster)
+    osched = OASiS(cluster, params, impl=impl)
+
+    total_gpu = max(float(cluster.worker_caps[:, 0].sum()), 1e-9)
+    gpu_slots = np.zeros(T)                     # GPU-units in use per slot
+    canceled: set = set()
+
+    for t in sorted(set(by_slot) | set(cancel_slot)):
+        for jid in cancel_slot.get(t, ()):
+            sched = osched.accepted.get(jid)
+            if sched is None or sched.finish < t or jid in canceled:
+                continue                        # finished / never admitted
+            tail_w = {tt: y for tt, y in sched.workers.items() if tt >= t}
+            tail_z = {tt: z for tt, z in sched.ps.items() if tt >= t}
+            osched.state.release(jmap[jid], tail_w, tail_z)
+            for tt, y in tail_w.items():
+                gpu_slots[tt] -= float(y.sum()) * jmap[jid].worker_res[0]
+            canceled.add(jid)
+        batch = [_with_quantum(job, quantum) for job in by_slot.get(t, ())]
+        for job, s in zip(batch, osched.on_arrivals(batch)):
+            if s is not None:
+                for tt, y in s.workers.items():
+                    gpu_slots[tt] += float(y.sum()) * job.worker_res[0]
+        if check:
+            assert np.all(osched.state.g <= cluster.worker_caps[None] + 1e-6), \
+                "worker capacity violated"
+            assert np.all(osched.state.v <= cluster.ps_caps[None] + 1e-6), \
+                "PS capacity violated"
+
+    completion: Dict[int, int] = {}
+    for jid, sched in osched.accepted.items():
+        if jid in canceled:
+            continue
+        if throughput is None:
+            completion[jid] = sched.finish
+            continue
+        # perturbed work accounting over the committed slots
+        job = jmap[jid]
+        slots = sorted(sched.workers)
+        w = np.array([float(sched.workers[tt].sum()) for tt in slots])
+        f = np.array([throughput(job, int(c), tt)
+                      for tt, c in zip(slots, w)])
+        cum = np.cumsum(w * f)
+        hit = np.flatnonzero(cum >= job.total_work_slots - 1e-9)
+        if hit.size:                            # else: under-delivered
+            completion[jid] = slots[int(hit[0])]
+
+    if not canceled and throughput is None:
+        total_utility = osched.total_utility    # bit-exact vs v1
+    else:
+        # evaluate utility at the *actual* completion slot (under
+        # perturbation it can differ from the committed finish), matching
+        # the reactive path's convention
+        total_utility = sum(jmap[jid].utility(tdone - jmap[jid].arrival)
+                            for jid, tdone in completion.items())
+    return SimResult(name="oasis", total_utility=total_utility,
+                     accepted=len(osched.accepted), completed=len(completion),
+                     n_jobs=len(jobs), completion=completion,
+                     target_gap=_target_gaps(jmap, completion),
+                     decision_seconds=osched.decision_seconds,
+                     utilization=float(np.mean(gpu_slots / total_gpu)) if T else 0.0,
+                     canceled=len(canceled))
+
+
+# ---------------------------------------------------------------------------
+# Reactive baselines: replan at events, fast-forward in between.
+# ---------------------------------------------------------------------------
+
+def _run_reactive(cluster: ClusterSpec, jobs: Sequence[Job], scheduler: str,
+                  fixed_workers: int, check: bool, quantum: Optional[int],
+                  cancellations: Optional[Dict[int, int]],
+                  throughput: Optional[ThroughputFn]) -> SimResult:
+    T = cluster.T
+    src = {j.jid: _with_quantum(j, quantum) for j in jobs}
+    jmap = dict(src)
+    by_slot, cancel_slot = _group_events(src.values(), cancellations, T)
+    rsched: ReactiveScheduler = BASELINES[scheduler](
+        cluster, fixed_workers=fixed_workers)
+
+    total_gpu = max(float(cluster.worker_caps[:, 0].sum()), 1e-9)
+    admitted: List[int] = []
+    remaining: Dict[int, float] = {}
+    completion: Dict[int, int] = {}
+    canceled: set = set()
+    total_utility = 0.0
+    util_sum = 0.0
+
+    events = sorted(set(by_slot) | set(cancel_slot))
+    ei = 0
+    t = events[0] if events else T
+    while t < T:
+        while ei < len(events) and events[ei] <= t:
+            ei += 1
+        for job in by_slot.pop(t, ()):
+            if rsched.on_arrival(job, t):
+                admitted.append(job.jid)
+                remaining[job.jid] = job.total_work_slots
+        for jid in cancel_slot.get(t, ()):
+            if jid in remaining:                # admitted, still running
+                rsched.on_completion(jid, t)    # drop from pool, no utility
+                del remaining[jid]
+                canceled.add(jid)
+        alloc = rsched.step(t)
+        if check:
+            _check_alloc(cluster, jmap, alloc)
+        ids = list(alloc)
+        counts = np.array([float(alloc[j][0].sum()) for j in ids])
+        gpu = float(counts @ np.array([jmap[j].worker_res[0] for j in ids])) \
+            if ids else 0.0
+        next_ev = events[ei] if ei < len(events) else T
+
+        if throughput is not None:
+            # rates vary per slot: advance one slot, vectorized across jobs
+            rates = counts * np.array(
+                [throughput(jmap[j], int(c), t) for j, c in zip(ids, counts)]) \
+                if ids else counts
+            span = 1
+        else:
+            rem = np.array([remaining[j] for j in ids])
+            active = counts > 0
+            slots_left = np.full(len(ids), np.inf)
+            if active.any():
+                slots_left[active] = np.maximum(
+                    np.ceil((rem[active] - 1e-9) / counts[active]), 1.0)
+            horizon = min(float(next_ev - t), float(T - t))
+            span = int(min(float(slots_left.min()) if ids else np.inf, horizon))
+            span = max(span, 1)
+            rates = counts
+
+        util_sum += (gpu / total_gpu) * span
+        t_end = t + span - 1                    # last slot run with this plan
+        done_now = []
+        for j, r in zip(ids, rates * span):
+            remaining[j] -= r
+            if remaining[j] <= 1e-9:
+                done_now.append(j)
+        for jid in done_now:
+            completion[jid] = t_end
+            total_utility += jmap[jid].utility(t_end - jmap[jid].arrival)
+            rsched.on_completion(jid, t_end)
+            del remaining[jid]
+        t += span
+    return SimResult(name=scheduler, total_utility=total_utility,
+                     accepted=len(admitted), completed=len(completion),
+                     n_jobs=len(jobs), completion=completion,
+                     target_gap=_target_gaps(jmap, completion),
+                     decision_seconds=[],
+                     utilization=util_sum / T if T else 0.0,
+                     canceled=len(canceled))

@@ -1,0 +1,239 @@
+"""Scenario library for sim v2 (paper Sec. V-A and beyond).
+
+Each scenario builds (cluster, jobs, per-run kwargs) for the event engine
+and is runnable from ``python -m benchmarks.run --only scenarios`` or
+``python examples/cluster_sim.py --scenario NAME``:
+
+* ``hetero``    — heterogeneous GPU cluster: 8-GPU C4-like, 4-GPU
+  mid-range, and 2-GPU high-memory worker classes instead of the paper's
+  uniform fleet.
+* ``cancel``    — a fraction of admitted jobs departs mid-run; the engine
+  releases their allocation (OASiS: dual prices drop) and they earn no
+  utility.
+* ``straggler`` — per-worker step-time perturbation with persistent slow
+  workers; throughput follows the synchronous-training model of
+  ``runtime/straggler.py`` (a slot is as fast as its slowest participating
+  worker) with and without EMA straggler detection + exclusion.
+* ``misest``    — OASiS under mis-estimated U/L price bounds, the Fig. 6
+  sweep, on the v2 engine.
+* ``scale``     — the fig3-shaped workload at T=500, 100+100 servers,
+  2000 jobs; far beyond the v1 per-slot loop's practical ceiling.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from ..core.pricing import price_params_from_jobs
+from ..core.types import ClusterSpec, Job
+from ..runtime.straggler import StragglerConfig, StragglerMonitor
+from . import engine
+from .workload import _P2_LIKE, make_cluster, make_jobs
+
+REACTIVE = ("fifo", "drf", "rrh", "dorm")
+ALL_SCHEDULERS = ("oasis",) + REACTIVE
+
+# worker-server classes for heterogeneous clusters
+# resource order: gpu, cpu, mem(GB), storage(GB), bw(Gbps)
+_GPU8 = np.array([8.0, 36.0, 60.0, 400.0, 25.0])     # the paper's C4-like
+_GPU4 = np.array([4.0, 24.0, 48.0, 300.0, 25.0])     # mid-range
+_GPU2_BIGMEM = np.array([2.0, 48.0, 192.0, 600.0, 50.0])
+
+
+def make_hetero_cluster(T: int = 100, H: int = 50, K: int = 50,
+                        mix=(0.4, 0.4, 0.2), seed: int = 0) -> ClusterSpec:
+    """A worker fleet mixing the three GPU server classes by ``mix``."""
+    rng = np.random.default_rng(seed)
+    classes = np.stack([_GPU8, _GPU4, _GPU2_BIGMEM])
+    rows = classes[rng.choice(3, size=H, p=np.asarray(mix) / sum(mix))]
+    ps = np.tile(_P2_LIKE, (K, 1))
+    ps[:, 0] = 0.0
+    return ClusterSpec(T=T, worker_caps=rows, ps_caps=ps)
+
+
+def cancellation_trace(jobs: Sequence[Job], frac: float = 0.25,
+                       seed: int = 0) -> Dict[int, int]:
+    """Pick ``frac`` of the jobs to depart mid-run, at a slot strictly
+    after arrival (the engine requires cancel_slot > arrival) and within
+    roughly the job's plausible lifetime."""
+    rng = np.random.default_rng(seed)
+    chosen = rng.choice(len(jobs), size=max(1, int(frac * len(jobs))),
+                        replace=False)
+    out = {}
+    for idx in chosen:
+        job = jobs[idx]
+        horizon = max(2, int(2 * job.min_duration))
+        out[job.jid] = job.arrival + int(rng.integers(1, horizon + 1))
+    return out
+
+
+class StragglerThroughput:
+    """Per-(job, slot) throughput factor from a per-worker step-time model.
+
+    Each job draws a persistent set of slow workers (``slow_frac`` of its
+    max pool, ``slowdown``x step time).  In a synchronous slot the job
+    progresses at the pace of its slowest participating worker, so the
+    undetected factor is ~1/slowdown whenever a slow worker participates.
+    With ``detect=True`` a ``runtime.straggler.StragglerMonitor`` sees the
+    per-worker step times; flagged workers are excluded from the next
+    slot's mesh (the paper-consistent down-scale mitigation), sacrificing
+    their work share to restore full-speed steps for the rest.
+    """
+
+    def __init__(self, seed: int = 0, slow_frac: float = 0.15,
+                 slowdown: float = 3.0, jitter: float = 0.05,
+                 detect: bool = True,
+                 cfg: Optional[StragglerConfig] = None):
+        self.seed = seed
+        self.slow_frac = slow_frac
+        self.slowdown = slowdown
+        self.jitter = jitter
+        self.detect = detect
+        self.cfg = cfg or StragglerConfig()
+        self._slow: Dict[int, np.ndarray] = {}
+        self._monitors: Dict[int, StragglerMonitor] = {}
+
+    def _job_state(self, job: Job):
+        if job.jid not in self._slow:
+            rng = np.random.default_rng((self.seed, job.jid))
+            self._slow[job.jid] = rng.random(job.num_chunks) < self.slow_frac
+            self._monitors[job.jid] = StragglerMonitor(job.num_chunks, self.cfg)
+        return self._slow[job.jid], self._monitors[job.jid]
+
+    def __call__(self, job: Job, n_workers: int, slot: int) -> float:
+        if n_workers <= 0:
+            return 1.0
+        slow, monitor = self._job_state(job)
+        n = min(n_workers, len(slow))
+        rng = np.random.default_rng((self.seed, job.jid, slot))
+        times = 1.0 + self.jitter * rng.random(n)
+        times[slow[:n]] *= self.slowdown
+        include = np.ones(n, dtype=bool)
+        if self.detect:
+            flagged = [w for w in monitor.stragglers() if w < n]
+            include[flagged] = False
+        for w in range(n):                      # monitor sees this slot
+            monitor.record(w, float(times[w]))
+        if not include.any():
+            include[:] = True                   # never stall completely
+        pace = float(times[include].max())      # synchronous: slowest wins
+        return min(1.0, include.sum() / (n * pace))
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioResult:
+    scenario: str
+    scheduler: str
+    variant: str
+    utility: float
+    accepted: int
+    completed: int
+    canceled: int
+    utilization: float
+    wall_seconds: float
+
+
+def _row(scenario: str, variant: str, r: engine.SimResult,
+         wall: float) -> ScenarioResult:
+    return ScenarioResult(scenario=scenario, scheduler=r.name, variant=variant,
+                          utility=r.total_utility, accepted=r.accepted,
+                          completed=r.completed, canceled=r.canceled,
+                          utilization=r.utilization, wall_seconds=wall)
+
+
+def _timed(scenario: str, variant: str, *args, **kw) -> ScenarioResult:
+    t0 = time.perf_counter()
+    r = engine.run(*args, **kw)
+    return _row(scenario, variant, r, time.perf_counter() - t0)
+
+
+def run_hetero(seed: int = 0, quick: bool = False) -> List[ScenarioResult]:
+    T, H, n = (60, 20, 40) if quick else (100, 50, 120)
+    cluster = make_hetero_cluster(T=T, H=H, K=H, seed=seed)
+    jobs = make_jobs(n, T=T, seed=seed, small=quick)
+    return [_timed("hetero", "mixed-fleet", cluster, jobs, scheduler=s,
+                   check=False, quantum=0 if s == "oasis" else None)
+            for s in ALL_SCHEDULERS]
+
+
+def run_cancel(seed: int = 0, quick: bool = False,
+               frac: float = 0.25) -> List[ScenarioResult]:
+    T, H, n = (60, 16, 40) if quick else (100, 40, 120)
+    cluster = make_cluster(T=T, H=H, K=H)
+    jobs = make_jobs(n, T=T, seed=seed, small=quick)
+    cancels = cancellation_trace(jobs, frac=frac, seed=seed)
+    rows = []
+    for s in ALL_SCHEDULERS:
+        q = 0 if s == "oasis" else None
+        rows.append(_timed("cancel", "none", cluster, jobs, scheduler=s,
+                           check=False, quantum=q))
+        rows.append(_timed("cancel", f"frac={frac}", cluster, jobs,
+                           scheduler=s, check=False, quantum=q,
+                           cancellations=cancels))
+    return rows
+
+
+def run_straggler(seed: int = 0, quick: bool = False,
+                  slow_frac: float = 0.15,
+                  slowdown: float = 3.0) -> List[ScenarioResult]:
+    T, H, n = (60, 16, 30) if quick else (100, 40, 100)
+    cluster = make_cluster(T=T, H=H, K=H)
+    jobs = make_jobs(n, T=T, seed=seed, small=quick)
+    rows = []
+    for s in ("oasis", "fifo", "drf"):
+        q = 0 if s == "oasis" else None
+        rows.append(_timed("straggler", "none", cluster, jobs, scheduler=s,
+                           check=False, quantum=q))
+        for detect, label in [(False, "undetected"), (True, "detected")]:
+            tp = StragglerThroughput(seed=seed, slow_frac=slow_frac,
+                                     slowdown=slowdown, detect=detect)
+            rows.append(_timed("straggler", label, cluster, jobs, scheduler=s,
+                               check=False, quantum=q, throughput=tp))
+    return rows
+
+
+def run_misest(seed: int = 0, quick: bool = False,
+               factors=(0.25, 0.5, 1.0, 2.0, 4.0)) -> List[ScenarioResult]:
+    T, H, n = (60, 16, 40) if quick else (100, 20, 60)
+    cluster = make_cluster(T=T, H=H, K=H)
+    jobs = make_jobs(n, T=T, seed=seed, small=quick)
+    exact = price_params_from_jobs(jobs, cluster)
+    return [_timed("misest", f"x{f}", cluster, jobs, scheduler="oasis",
+                   params=exact.scaled(f), check=False, quantum=0)
+            for f in factors]
+
+
+def run_scale(seed: int = 0, quick: bool = False,
+              schedulers: Sequence[str] = ("fifo", "rrh", "drf", "dorm"),
+              T: int = 500, H: int = 100, K: int = 100,
+              n: int = 2000) -> List[ScenarioResult]:
+    """The fig3-shaped workload an order of magnitude past the paper's
+    T=100 / 100-server / 200-job setting.  Reactive baselines by default;
+    pass ``schedulers=("oasis", ...)`` to include the (decision-bound)
+    OASiS run."""
+    if quick:
+        T, H, K, n = 150, 30, 30, 300
+    cluster = make_cluster(T=T, H=H, K=K)
+    jobs = make_jobs(n, T=T, seed=seed, small=False)
+    return [_timed("scale", f"T={T};n={n}", cluster, jobs, scheduler=s,
+                   check=True, quantum=0 if s == "oasis" else None)
+            for s in schedulers]
+
+
+SCENARIOS = {
+    "hetero": run_hetero,
+    "cancel": run_cancel,
+    "straggler": run_straggler,
+    "misest": run_misest,
+    "scale": run_scale,
+}
+
+
+def run_scenario(name: str, seed: int = 0,
+                 quick: bool = False, **kw) -> List[ScenarioResult]:
+    if name not in SCENARIOS:
+        raise KeyError(f"unknown scenario {name!r}; have {sorted(SCENARIOS)}")
+    return SCENARIOS[name](seed=seed, quick=quick, **kw)

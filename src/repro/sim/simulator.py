@@ -1,13 +1,12 @@
-"""Discrete-time trace-driven cluster simulator (paper Sec. V-A).
+"""Trace-driven cluster simulation (paper Sec. V-A).
 
-Drives either OASiS (plan-ahead) or a reactive baseline through T slots,
-accounts utilities at completion, and validates capacity feasibility of
-every allocation it executes (a scheduler bug = simulation error).
+``simulate`` is a thin wrapper over the event-driven sim-v2 engine
+(`sim/engine.py`); ``simulate_reference`` is the original per-slot Python
+loop, kept as the equivalence oracle (tests/test_sim_v2.py) and the
+baseline for the sim-v2 speedup benchmark (`benchmarks.figs.sim_v2_speedup`).
 """
 from __future__ import annotations
 
-import dataclasses
-import math
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
@@ -16,19 +15,28 @@ from ..core.baselines import BASELINES, ReactiveScheduler
 from ..core.oasis import OASiS
 from ..core.pricing import PriceParams, price_params_from_jobs
 from ..core.types import ClusterSpec, Job
+from . import engine
+from .engine import SimResult
+
+__all__ = ["SimResult", "simulate", "simulate_reference"]
 
 
-@dataclasses.dataclass
-class SimResult:
-    name: str
-    total_utility: float
-    accepted: int
-    completed: int
-    n_jobs: int
-    completion: Dict[int, int]              # jid -> completion slot
-    target_gap: List[float]                 # (t_done - a) - gamma3 per job
-    decision_seconds: List[float]
-    utilization: float                      # mean worker-pool GPU utilization
+def simulate(cluster: ClusterSpec, jobs: Sequence[Job], scheduler: str = "oasis",
+             params: Optional[PriceParams] = None, impl: str = "fast",
+             fixed_workers: int = 8, check: bool = True,
+             quantum: Optional[int] = None,
+             cancellations: Optional[Dict[int, int]] = None,
+             throughput: Optional[engine.ThroughputFn] = None) -> SimResult:
+    """Drive ``scheduler`` through T slots on the sim-v2 event engine.
+
+    Equivalent to the v1 per-slot loop (``simulate_reference``) on
+    cancellation-free, unperturbed workloads; ``cancellations`` and
+    ``throughput`` are sim-v2 scenario hooks (see ``sim/engine.py``).
+    """
+    return engine.run(cluster, jobs, scheduler=scheduler, params=params,
+                      impl=impl, fixed_workers=fixed_workers, check=check,
+                      quantum=quantum, cancellations=cancellations,
+                      throughput=throughput)
 
 
 def _check_capacity(cluster: ClusterSpec, jobs: Dict[int, Job],
@@ -44,10 +52,30 @@ def _check_capacity(cluster: ClusterSpec, jobs: Dict[int, Job],
     assert np.all(used_s <= cluster.ps_caps + 1e-6), "PS capacity violated"
 
 
-def simulate(cluster: ClusterSpec, jobs: Sequence[Job], scheduler: str = "oasis",
-             params: Optional[PriceParams] = None, impl: str = "fast",
-             fixed_workers: int = 8, check: bool = True,
-             quantum: Optional[int] = None) -> SimResult:
+def simulate_reference(cluster: ClusterSpec, jobs: Sequence[Job],
+                       scheduler: str = "oasis",
+                       params: Optional[PriceParams] = None, impl: str = "fast",
+                       fixed_workers: int = 8, check: bool = True,
+                       quantum: Optional[int] = None,
+                       seed_placement: bool = True) -> SimResult:
+    """The v1 per-slot simulation loop (equivalence oracle for sim v2).
+
+    ``seed_placement=True`` additionally runs the baselines' round-robin
+    placement through the seed's per-server Python scan, so this is the
+    pre-sim-v2 code path end to end (the honest baseline for
+    ``benchmarks.figs.sim_v2_speedup``; placements are bit-identical
+    either way).
+    """
+    from ..core import baselines as _baselines
+    if seed_placement and _baselines.PLACE_IMPL != "loop":
+        _baselines.PLACE_IMPL = "loop"
+        try:
+            return simulate_reference(cluster, jobs, scheduler=scheduler,
+                                      params=params, impl=impl,
+                                      fixed_workers=fixed_workers, check=check,
+                                      quantum=quantum, seed_placement=True)
+        finally:
+            _baselines.PLACE_IMPL = "fast"
     jmap = {j.jid: j for j in jobs}
     by_slot: Dict[int, List[Job]] = {}
     for j in jobs:
@@ -61,13 +89,8 @@ def simulate(cluster: ClusterSpec, jobs: Sequence[Job], scheduler: str = "oasis"
         osched = OASiS(cluster, params, impl=impl)
         completion: Dict[int, int] = {}
         for t in range(cluster.T):
-            batch = []
-            for job in by_slot.get(t, []):
-                if quantum is not None:
-                    q = quantum if quantum > 0 else max(
-                        1, math.ceil(job.epochs * job.num_chunks / 1200))
-                    job = dataclasses.replace(job, quantum=q)
-                batch.append(job)
+            batch = [engine._with_quantum(job, quantum)
+                     for job in by_slot.get(t, [])]
             # batched arrivals (vmapped engine under impl="jax"; exact
             # sequential Alg. 1 semantics either way)
             for job, s in zip(batch, osched.on_arrivals(batch)):

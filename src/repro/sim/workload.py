@@ -4,12 +4,11 @@ parameter ranges, Google-trace-style bursty arrivals, sigmoid utilities.
 """
 from __future__ import annotations
 
-import math
 from typing import List, Optional
 
 import numpy as np
 
-from ..core.types import ClusterSpec, Job, R, SigmoidUtility
+from ..core.types import ClusterSpec, Job, SigmoidUtility
 
 # resource order: gpu, cpu, mem(GB), storage(GB), bw(Gbps)
 _C4_LIKE = np.array([8.0, 36.0, 60.0, 400.0, 25.0])      # worker servers

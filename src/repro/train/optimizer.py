@@ -5,7 +5,7 @@ inherits the parameters' sharding (ZeRO-like under fsdp rules)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

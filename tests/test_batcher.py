@@ -3,7 +3,6 @@ request's output matches the same request decoded alone (batch purity)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_smoke
 from repro.models import decode_step, init_cache, init_model

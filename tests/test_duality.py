@@ -1,7 +1,6 @@
 """Primal-dual machinery tests (Appendix E): the allocation-cost
 relationship of Lemma 2 and the weak-duality sandwich of Lemma 1,
 measured on live instances via OASiS(track_duality=True)."""
-import numpy as np
 import pytest
 
 from repro.core import OASiS, price_params_from_jobs

@@ -4,7 +4,6 @@
 module skips cleanly at collection when it is absent so ``pytest -x -q``
 still runs the rest of the suite.
 """
-import math
 
 import numpy as np
 import pytest

@@ -9,7 +9,7 @@ import jax.numpy as jnp
 from repro.ckpt import checkpoint as ckpt
 from repro.data.pipeline import DataConfig, DataPipeline, PipelineState
 from repro.runtime.driver import FaultInjector, run_with_restarts
-from repro.runtime.elastic import dp_width, schedule_to_plan
+from repro.runtime.elastic import dp_width
 from repro.runtime.straggler import (BoundedStaleness, StragglerConfig,
                                      StragglerMonitor)
 from repro.train.compress import ErrorFeedback, quantize_int8, dequantize

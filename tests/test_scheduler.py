@@ -9,7 +9,7 @@ import pytest
 from repro.core import (OASiS, best_schedule, best_schedule_ref,
                         price_params_from_jobs)
 from repro.core.pricing import PriceState
-from repro.core.subroutine import cost_t_ref, cost_t_rows, minplus_band
+from repro.core.subroutine import cost_t_ref, cost_t_rows
 from repro.core.types import ClusterSpec, Job, SigmoidUtility
 from repro.sim import make_cluster, make_jobs
 

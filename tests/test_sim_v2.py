@@ -1,0 +1,212 @@
+"""sim v2 (event-driven engine): equivalence against the v1 per-slot loop,
+placement-backend equivalence, scenario hooks (cancellation, stragglers),
+and the quantum-knob contract."""
+import numpy as np
+import pytest
+
+from repro.core import baselines
+from repro.sim import (engine, make_cluster, make_jobs, simulate,
+                       simulate_reference)
+from repro.sim.scenarios import (StragglerThroughput, cancellation_trace,
+                                 make_hetero_cluster)
+
+ALL = ["oasis", "fifo", "drf", "rrh", "dorm"]
+
+
+def _assert_equivalent(a, b):
+    assert a.accepted == b.accepted
+    assert a.completed == b.completed
+    assert a.completion == b.completion
+    assert b.total_utility == pytest.approx(a.total_utility, rel=1e-9, abs=1e-9)
+    assert b.utilization == pytest.approx(a.utilization, rel=1e-9, abs=1e-12)
+    assert sorted(b.target_gap) == pytest.approx(sorted(a.target_gap))
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_engine_matches_v1_paper_scale(seed):
+    """The paper's simulation setting (T=100, 100 servers, up to 200 jobs;
+    job internals shrunk so Alg. 2 stays fast) — utilities, accept/complete
+    counts, and completion slots identical for OASiS and every baseline."""
+    cluster = make_cluster(T=100, H=50, K=50)
+    jobs = make_jobs(200, T=100, seed=seed, small=True)
+    for name in ALL:
+        kw = dict(quantum=0) if name == "oasis" else {}
+        a = simulate_reference(cluster, jobs, scheduler=name, check=True, **kw)
+        b = simulate(cluster, jobs, scheduler=name, check=True, **kw)
+        _assert_equivalent(a, b)
+
+
+def test_engine_matches_v1_full_size_jobs():
+    """One instance with full-size (paper-range) jobs, where allocations
+    span many slots and DRF/Dorm repack heavily."""
+    cluster = make_cluster(T=60, H=12, K=12)
+    jobs = make_jobs(40, T=60, seed=9, small=False)
+    for name in ALL:
+        kw = dict(quantum=0) if name == "oasis" else {}
+        a = simulate_reference(cluster, jobs, scheduler=name, check=True, **kw)
+        b = simulate(cluster, jobs, scheduler=name, check=True, **kw)
+        _assert_equivalent(a, b)
+
+
+def test_place_fast_equals_loop():
+    """The vectorized round-robin placement is bit-identical to the seed's
+    per-server scan, including partial-fit rollbacks."""
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        S = int(rng.integers(1, 12))
+        free = rng.uniform(0, 6, (S, 5))
+        demand = rng.uniform(0, 3, 5)
+        count = int(rng.integers(0, 12))
+        f1, f2 = free.copy(), free.copy()
+        a = baselines._place_loop(count, f1, demand)
+        b = baselines._place_fast(count, f2, demand)
+        assert (a is None) == (b is None)
+        if a is not None:
+            assert np.array_equal(a, b)
+        assert np.array_equal(f1, f2)
+
+
+def test_quantum_is_dp_only_knob():
+    """`quantum` coarsens the Alg. 2 DP workload; reactive baselines
+    schedule by total_work_slots/num_chunks, so their results must be
+    exactly quantum-invariant while OASiS actually consumes the knob."""
+    cluster = make_cluster(T=40, H=8, K=8)
+    jobs = make_jobs(25, T=40, seed=2, small=True)
+    for name in ["fifo", "drf", "rrh", "dorm"]:
+        a = simulate(cluster, jobs, scheduler=name, check=False)
+        b = simulate(cluster, jobs, scheduler=name, check=False, quantum=5)
+        assert a.total_utility == b.total_utility
+        assert a.completion == b.completion
+    # OASiS: the engine threads quantum through to Job.workload
+    big = make_jobs(6, T=40, seed=4, small=False)
+    r = simulate(cluster, big, scheduler="oasis", check=True, quantum=7)
+    assert r.accepted <= len(big)
+
+
+def test_cancellation_consistent_across_schedulers():
+    """Jobs that actually depart mid-run never appear in `completion`,
+    stay capacity-feasible (check=True), and the books balance:
+    completed + canceled <= accepted."""
+    cluster = make_cluster(T=60, H=10, K=10)
+    jobs = make_jobs(40, T=60, seed=5, small=True)
+    cancels = cancellation_trace(jobs, frac=0.3, seed=5)
+    hit_any = False
+    for name in ALL:
+        kw = dict(quantum=0) if name == "oasis" else {}
+        r = simulate(cluster, jobs, scheduler=name, check=True,
+                     cancellations=cancels, **kw)
+        hit_any = hit_any or r.canceled > 0
+        assert r.completed + r.canceled <= r.accepted
+        # a completed job either wasn't targeted or finished before the
+        # cancel slot — never after it
+        for jid, tdone in r.completion.items():
+            if jid in cancels:
+                assert tdone < cancels[jid]
+    assert hit_any
+
+
+def test_cancellation_releases_oasis_allocation():
+    """Single-job trace: cancelling mid-run must release the committed
+    tail (prices drop via PriceState.release), zero the utility, and
+    strictly lower the recorded utilization — with no other jobs there is
+    nothing to backfill the freed slots."""
+    from repro.core import price_params_from_jobs
+    cluster = make_cluster(T=40, H=6, K=6)
+    pool = make_jobs(10, T=20, seed=7, small=False)
+    job = pool[2]                  # admissible alone; runs >= 3 slots
+    assert job.min_duration >= 3
+    params = price_params_from_jobs(pool, cluster)
+    base = simulate(cluster, [job], scheduler="oasis", check=True, quantum=0,
+                    params=params)
+    assert base.accepted == 1 and base.completed == 1
+    tdone = base.completion[job.jid]
+    assert tdone >= job.arrival + 2
+    r = simulate(cluster, [job], scheduler="oasis", check=True, quantum=0,
+                 params=params, cancellations={job.jid: job.arrival + 1})
+    assert r.canceled == 1 and r.completed == 0
+    assert r.total_utility == 0.0
+    assert r.utilization < base.utilization
+
+
+def test_cancellation_boundary_slots_are_noops_everywhere():
+    """A cancel at/before arrival or at/after T must not fire, and the
+    rule must hold identically for OASiS and the reactive baselines."""
+    cluster = make_cluster(T=40, H=8, K=8)
+    jobs = make_jobs(15, T=30, seed=8, small=True)
+    for name in ALL:
+        kw = dict(quantum=0) if name == "oasis" else {}
+        base = simulate(cluster, jobs, scheduler=name, check=True, **kw)
+        noop = {j.jid: j.arrival for j in jobs[:5]}          # at arrival
+        noop.update({j.jid: cluster.T + 3 for j in jobs[5:10]})  # past horizon
+        r = simulate(cluster, jobs, scheduler=name, check=True,
+                     cancellations=noop, **kw)
+        assert r.canceled == 0
+        assert r.completion == base.completion
+        assert r.total_utility == pytest.approx(base.total_utility)
+
+
+def test_straggler_throughput_degrades_and_detection_helps():
+    cluster = make_cluster(T=50, H=10, K=10)
+    jobs = make_jobs(30, T=50, seed=3, small=True)
+    base = simulate(cluster, jobs, scheduler="fifo", check=False)
+    res = {}
+    for detect in (False, True):
+        tp = StragglerThroughput(seed=3, slow_frac=0.4, slowdown=4.0,
+                                 detect=detect)
+        res[detect] = simulate(cluster, jobs, scheduler="fifo", check=False,
+                               throughput=tp)
+        # factors are valid multipliers
+        j = jobs[0]
+        for slot in range(5):
+            assert 0.0 < tp(j, 4, slot) <= 1.0
+    assert res[False].total_utility <= base.total_utility + 1e-9
+    # excluding detected stragglers restores throughput -> no worse off
+    assert res[True].total_utility >= res[False].total_utility - 1e-9
+
+
+def test_straggler_perturbs_oasis_completions():
+    """A committed OASiS schedule that under-delivers its work is not
+    counted complete — completed <= accepted strictly under heavy
+    perturbation, and never below zero utility."""
+    cluster = make_cluster(T=50, H=10, K=10)
+    jobs = make_jobs(30, T=50, seed=6, small=True)
+    tp = StragglerThroughput(seed=6, slow_frac=0.5, slowdown=6.0, detect=False)
+    base = simulate(cluster, jobs, scheduler="oasis", check=True, quantum=0)
+    r = simulate(cluster, jobs, scheduler="oasis", check=True, quantum=0,
+                 throughput=tp)
+    assert r.accepted == base.accepted        # admission unchanged
+    assert r.completed <= base.completed
+    assert 0.0 <= r.total_utility <= base.total_utility + 1e-9
+
+
+def test_hetero_cluster_runs_all_schedulers():
+    cluster = make_hetero_cluster(T=40, H=12, K=12, seed=1)
+    assert set(np.unique(cluster.worker_caps[:, 0])) <= {2.0, 4.0, 8.0}
+    jobs = make_jobs(20, T=40, seed=1, small=True)
+    for name in ALL:
+        kw = dict(quantum=0) if name == "oasis" else {}
+        r = simulate(cluster, jobs, scheduler=name, check=True, **kw)
+        assert r.completed <= r.accepted <= len(jobs)
+        assert r.total_utility >= 0
+
+
+def test_arrivals_past_horizon_are_dropped_like_v1():
+    """Jobs arriving at/after T never enter the simulation (the v1 loop's
+    range(T) semantics) instead of crashing the plan-ahead subroutine."""
+    cluster = make_cluster(T=30, H=6, K=6)
+    jobs = make_jobs(20, T=60, seed=0, small=True)   # some arrivals >= 30
+    assert any(j.arrival >= cluster.T for j in jobs)
+    for name in ALL:
+        kw = dict(quantum=0) if name == "oasis" else {}
+        a = simulate_reference(cluster, jobs, scheduler=name, check=True, **kw)
+        b = simulate(cluster, jobs, scheduler=name, check=True, **kw)
+        _assert_equivalent(a, b)
+        assert b.accepted < len(jobs)
+
+
+def test_engine_idles_through_empty_traces():
+    cluster = make_cluster(T=30, H=4, K=4)
+    for name in ALL:
+        r = engine.run(cluster, [], scheduler=name, check=True)
+        assert r.accepted == r.completed == 0
+        assert r.utilization == 0.0

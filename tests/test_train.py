@@ -98,7 +98,6 @@ def test_grad_compress_training_still_converges():
 def test_elastic_trainer_changes_width(tmp_path):
     """ElasticTrainer follows a worker-count plan and keeps improving."""
     import numpy as np
-    from repro.core.types import Schedule
     from repro.runtime.elastic import ElasticTrainer, SlotPlan
 
     cfg = TINY

@@ -1,0 +1,76 @@
+"""Property-style (seeded) tests for the workload/cluster generator
+(sim/workload.py): arrival-process bounds and burstiness, and feasibility
+of every generated job on the generated cluster."""
+import numpy as np
+import pytest
+
+from repro.sim import make_cluster, make_jobs
+from repro.sim.workload import _arrivals
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+@pytest.mark.parametrize("T,n", [(50, 80), (100, 200)])
+def test_arrivals_stay_within_horizon(seed, T, n):
+    jobs = make_jobs(n, T=T, seed=seed)
+    arr = np.array([j.arrival for j in jobs])
+    assert np.all(arr >= 0)
+    assert np.all(arr < T)
+    assert np.all(arr[:-1] <= arr[1:]), "jobs are emitted in arrival order"
+
+
+def test_burst_windows_raise_rate():
+    """The nonhomogeneous process concentrates mass: burst windows carry a
+    x4 rate, and the final T//10 slots are damped to ~nothing — so the
+    busiest window must far exceed the uniform share and the tail must see
+    almost none of the arrivals."""
+    T, n = 200, 4000
+    rng = np.random.default_rng(42)
+    arr = _arrivals(n, T, rng)
+    counts = np.bincount(arr, minlength=T)
+    width = max(2, T // 20)
+    window = np.convolve(counts, np.ones(2 * width), mode="valid")
+    uniform_window = n * (2 * width) / T
+    assert window.max() > 2.0 * uniform_window, "no burst window detected"
+    tail = counts[-T // 10:].sum()
+    assert tail < 0.02 * n, f"tail arrivals not damped: {tail}/{n}"
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+@pytest.mark.parametrize("small", [True, False])
+def test_generated_jobs_feasible_on_generated_cluster(seed, small):
+    """Every job must be schedulable in principle: each worker/PS instance
+    fits on at least one server of the generated fleet, the per-job
+    parameter ranges hold, and the fastest possible duration fits the
+    horizon with room for the paper's target completion times."""
+    T = 60
+    cluster = make_cluster(T=T, H=10, K=10)
+    jobs = make_jobs(40, T=T, seed=seed, small=small)
+    for job in jobs:
+        # paper Table-I ranges
+        assert (1 <= job.epochs <= 200) and (1 <= job.num_chunks <= 100)
+        assert 0 < job.tau and 0 < job.grad_size
+        assert 0.1 <= job.worker_bw <= 5.0 and 5.0 <= job.ps_bw <= 20.0
+        # one worker fits on some worker server, one PS on some PS server
+        assert np.any(np.all(cluster.worker_caps >= job.worker_res[None] - 1e-9,
+                             axis=1)), "worker demand exceeds every server"
+        assert np.any(np.all(cluster.ps_caps >= job.ps_res[None] - 1e-9,
+                             axis=1)), "PS demand exceeds every server"
+        assert job.ps_res[0] == 0.0, "PS instances must not demand GPUs"
+        # normalization keeps per-chunk time << one slot (Sec. III-B) and
+        # the fastest duration within the paper's target band
+        assert job.min_duration <= 0.9 * job.epochs + 1
+        assert job.chunk_time <= 1.0 + 1e-9
+        # enough PS bandwidth exists to feed the max worker fleet
+        assert job.ps_for(job.num_chunks) <= job.num_chunks
+
+
+def test_jobs_complete_under_ample_capacity():
+    """On an oversized cluster a simple admit-all baseline finishes every
+    job — the generator never emits impossible work."""
+    from repro.sim import simulate
+    T = 80
+    cluster = make_cluster(T=T, H=40, K=40)
+    jobs = make_jobs(15, T=40, seed=11, small=True)
+    r = simulate(cluster, jobs, scheduler="dorm", check=True)
+    assert r.accepted == len(jobs)
+    assert r.completed == len(jobs)
