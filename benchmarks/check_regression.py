@@ -1,0 +1,129 @@
+"""Perf-regression gate over the tracked benchmark stats.
+
+Compares a freshly-generated ``BENCH_decision.json`` against the
+committed baseline and fails (exit 1) when any recorded p50 or
+wall-clock figure regressed by more than ``--ratio`` (default 2x).
+
+Compared leaves:
+
+* ``decision_seconds.<impl>.p50`` — per-backend decision latency
+* ``sim_v2.<sched>.v2_seconds`` and the ``oasis_overhead_v2_seconds``
+  figures — the event engine's wall clocks (the v1 baseline's wall
+  clock is informational, not a gate)
+* ``sim_scale.wall_seconds.<sched>`` — the 10x-scale run
+
+Sections are only compared when their configuration matches (``quick``
+flag for the decision sections; T/H/K/n_jobs dims for ``sim_scale``),
+so a quick CI run never gets diffed against a full-mode baseline.
+Improvements and missing sections are reported but never fail the gate.
+
+Usage::
+
+    python -m benchmarks.check_regression BASELINE FRESH [--ratio 2.0]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, Iterator, Tuple
+
+# baseline figures below this are treated as noise and skipped: a 2x
+# ratio on a sub-millisecond wall clock is scheduler jitter, not a
+# regression
+MIN_BASELINE_SECONDS = 1e-3
+
+
+def _leaves(doc: dict) -> Iterator[Tuple[str, float]]:
+    """Yield (path, value) for every gated numeric leaf in ``doc``."""
+    dec = doc.get("decision_seconds", {})
+    for impl, stats in sorted(dec.items()):
+        if isinstance(stats, dict) and "p50" in stats:
+            yield f"decision_seconds.{impl}.p50", float(stats["p50"])
+    sim = doc.get("sim_v2", {})
+    for key, stats in sorted(sim.items()):
+        if isinstance(stats, dict) and "v2_seconds" in stats:
+            yield f"sim_v2.{key}.v2_seconds", float(stats["v2_seconds"])
+        elif key.endswith("_v2_seconds") and isinstance(stats, (int, float)):
+            yield f"sim_v2.{key}", float(stats)
+    scale = doc.get("sim_scale", {})
+    for sched, wall in sorted(scale.get("wall_seconds", {}).items()):
+        yield f"sim_scale.wall_seconds.{sched}", float(wall)
+
+
+def _section_quick(doc: dict, section: str):
+    """Per-section quick flag (v2 schema), falling back to the v1
+    top-level flag for old baselines."""
+    sec = doc.get(section, {})
+    if isinstance(sec, dict) and "quick" in sec:
+        return bool(sec["quick"])
+    return bool(doc.get("quick"))
+
+
+def _config_mismatches(base: dict, fresh: dict) -> Dict[str, str]:
+    """Section prefixes whose configurations differ (skip those leaves)."""
+    skip: Dict[str, str] = {}
+    for section in ("decision_seconds", "sim_v2"):
+        bq, fq = _section_quick(base, section), _section_quick(fresh, section)
+        if bq != fq:
+            skip[f"{section}."] = (
+                f"quick flag differs (baseline={bq}, fresh={fq})")
+    bs, fs = base.get("sim_scale", {}), fresh.get("sim_scale", {})
+    dims = ("T", "H", "K", "n_jobs", "quick")
+    if bs and fs and any(bs.get(d) != fs.get(d) for d in dims):
+        skip["sim_scale."] = (
+            "dims differ (baseline "
+            + "/".join(str(bs.get(d)) for d in dims) + " vs fresh "
+            + "/".join(str(fs.get(d)) for d in dims) + ")")
+    return skip
+
+
+def check(base: dict, fresh: dict, ratio: float) -> int:
+    skip = _config_mismatches(base, fresh)
+    fresh_leaves = dict(_leaves(fresh))
+    failures = []
+    compared = 0
+    for path, bval in _leaves(base):
+        skipped = next((why for pre, why in skip.items()
+                        if path.startswith(pre)), None)
+        if skipped is not None:
+            print(f"SKIP  {path}: {skipped}")
+            continue
+        if path not in fresh_leaves:
+            print(f"MISS  {path}: not in fresh run (not gated)")
+            continue
+        if bval < MIN_BASELINE_SECONDS:
+            print(f"SKIP  {path}: baseline {bval:.2e}s below noise floor")
+            continue
+        fval = fresh_leaves[path]
+        r = fval / bval
+        compared += 1
+        mark = "FAIL" if r > ratio else "ok  "
+        print(f"{mark}  {path}: {bval:.4f}s -> {fval:.4f}s ({r:.2f}x)")
+        if r > ratio:
+            failures.append((path, r))
+    if failures:
+        print(f"\n{len(failures)} regression(s) beyond {ratio:.1f}x:")
+        for path, r in failures:
+            print(f"  {path}: {r:.2f}x")
+        return 1
+    print(f"\nno regressions beyond {ratio:.1f}x ({compared} figures compared)")
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", help="committed BENCH_decision.json")
+    ap.add_argument("fresh", help="freshly generated BENCH_decision.json")
+    ap.add_argument("--ratio", type=float, default=2.0,
+                    help="fail when fresh/baseline exceeds this (default 2)")
+    args = ap.parse_args()
+    with open(args.baseline) as fh:
+        base = json.load(fh)
+    with open(args.fresh) as fh:
+        fresh = json.load(fh)
+    sys.exit(check(base, fresh, args.ratio))
+
+
+if __name__ == "__main__":
+    main()

@@ -153,15 +153,30 @@ def sim_v2_speedup(T: int = 100, H: int = 20, K: int = 20, n: int = 60,
     return rows
 
 
-def fig3_scale(quick: bool = False, include_oasis: bool = False) -> List[str]:
+def fig3_scale(quick: bool = False, include_oasis: bool = False,
+               stats_out: Optional[dict] = None) -> List[str]:
     """fig3 at 10x the paper setting (T=500, 100+100 servers, 2000 jobs) on
     the sim-v2 engine; the v1 per-slot loop cannot finish this in
-    reasonable time (see sim_v2_speedup for the controlled comparison)."""
+    reasonable time (see sim_v2_speedup for the controlled comparison).
+
+    ``stats_out`` receives machine-readable per-scheduler wall clocks
+    plus the instance dimensions (the ``sim_scale`` record tracked in
+    ``BENCH_decision.json`` — see ``benchmarks.run --only simscale``).
+    """
     scheds = scenarios.ALL_SCHEDULERS if include_oasis else scenarios.REACTIVE
     rows = []
-    for r in scenarios.run_scale(seed=0, quick=quick, schedulers=scheds):
+    results = scenarios.run_scale(seed=0, quick=quick, schedulers=scheds)
+    for r in results:
         rows.append(f"fig3_scale[{r.scheduler};{r.variant}],"
                     f"{r.wall_seconds*1e6:.0f},{r.utility:.2f}")
+    if stats_out is not None:
+        dims = scenarios.SCALE_DIMS_QUICK if quick else scenarios.SCALE_DIMS
+        stats_out.update({
+            "T": dims["T"], "H": dims["H"], "K": dims["K"],
+            "n_jobs": dims["n"], "quick": bool(quick),
+            "wall_seconds": {r.scheduler: r.wall_seconds for r in results},
+            "utility": {r.scheduler: r.utility for r in results},
+        })
     return rows
 
 

@@ -12,13 +12,20 @@ Prints ``name,us_per_call,derived`` CSV rows:
   scenario[...]       sim-v2 scenario library (hetero/cancel/...)
   minplus[...]        scheduler DP kernel micro-benchmarks
 
-The ``decision`` section additionally writes machine-readable p50/p95
-per backend plus the sim-v2 wall-clock comparison to ``--json`` (default
-``BENCH_decision.json``) so the perf trajectory is tracked across PRs
-(CI uploads it as an artifact).
+Machine-readable perf tracking (``--json``, default
+``BENCH_decision.json``, schema ``bench_decision/v2``): the ``decision``
+section writes p50/p95 per backend plus the sim-v2 wall-clock
+comparison, and the ``simscale`` section times the 10x-scale fig3 run
+per reactive scheduler (``sim_scale``; always the full T=500 /
+100+100-server / 2000-job instance — it is the tracked configuration, so
+``--quick`` does not shrink it).  Sections *merge* into an existing
+``--json`` file, so the committed baseline can accumulate both records;
+CI regenerates the file and fails on >2x regressions via
+``python -m benchmarks.check_regression``.
 
-``--quick`` shrinks instance sizes.  The roofline table is a separate
-consumer of the dry-run artifacts: ``python -m benchmarks.roofline``.
+``--quick`` shrinks the other sections' instance sizes.  The roofline
+table is a separate consumer of the dry-run artifacts:
+``python -m benchmarks.roofline``.
 """
 from __future__ import annotations
 
@@ -32,7 +39,35 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 SECTIONS = ("fig3", "fig4", "fig5", "fig6", "latency", "decision",
-            "simspeed", "scale", "scenarios", "kernels")
+            "simspeed", "scale", "simscale", "scenarios", "kernels")
+
+
+def _merge_json(path: str, updates: dict) -> None:
+    """Merge freshly-measured sections into the tracked stats file.
+
+    Existing sections not re-measured this run are preserved, so e.g.
+    ``--only simscale`` does not drop the decision-latency record.  Each
+    section carries its own ``quick`` flag (sections can be measured
+    under different modes), so there is no top-level one."""
+    payload = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as fh:
+                prev = json.load(fh)
+            if str(prev.get("schema", "")).startswith("bench_decision/"):
+                payload = prev
+        except (OSError, ValueError):
+            pass
+    payload.pop("quick", None)                  # v1 leftover
+    payload.update(updates)
+    payload.update({
+        "schema": "bench_decision/v2",
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+    })
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=2, sort_keys=True)
+    print(f"# wrote {path}", file=sys.stderr)
 
 
 def _kernel_micro() -> list:
@@ -70,9 +105,11 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: " + ",".join(SECTIONS))
     ap.add_argument("--json", default="BENCH_decision.json",
-                    help="where the decision section writes its machine-"
-                         "readable stats (p50/p95 per backend + sim-v2 "
-                         "wall clock); empty string disables")
+                    help="tracked stats file (bench_decision/v2): the "
+                         "decision section records p50/p95 per backend + "
+                         "sim-v2 wall clock, simscale records the "
+                         "10x-scale per-scheduler wall clock; sections "
+                         "merge into an existing file; empty disables")
     args = ap.parse_args()
     from benchmarks import figs
 
@@ -95,6 +132,7 @@ def main() -> None:
     if "latency" in which:
         rows += figs.latency_table(T=100 if args.quick else 300,
                                    n=10 if args.quick else 20)
+    tracked: dict = {}
     if "decision" in which:
         dstats: dict = {}
         sstats: dict = {}
@@ -102,23 +140,20 @@ def main() -> None:
                                       stats_out=dstats)
         rows += figs.sim_v2_speedup(
             **(dict(T=60, n=40) if args.quick else {}), stats_out=sstats)
-        if args.json:
-            payload = {
-                "schema": "bench_decision/v1",
-                "quick": bool(args.quick),
-                "platform": platform.platform(),
-                "python": platform.python_version(),
-                "decision_seconds": dstats,
-                "sim_v2": sstats,
-            }
-            with open(args.json, "w") as fh:
-                json.dump(payload, fh, indent=2, sort_keys=True)
-            print(f"# wrote {args.json}", file=sys.stderr)
+        tracked["decision_seconds"] = {**dstats, "quick": bool(args.quick)}
+        tracked["sim_v2"] = {**sstats, "quick": bool(args.quick)}
     if "simspeed" in which and "decision" not in which:
         rows += figs.sim_v2_speedup(
             **(dict(T=60, n=40) if args.quick else {}))
     if "scale" in which:
         rows += figs.fig3_scale(quick=args.quick)
+    if "simscale" in which:
+        # the tracked 10x configuration: never shrunk by --quick
+        scstats: dict = {}
+        rows += figs.fig3_scale(quick=False, stats_out=scstats)
+        tracked["sim_scale"] = scstats
+    if args.json and tracked:
+        _merge_json(args.json, tracked)
     if "scenarios" in which:
         rows += figs.scenario_table(quick=args.quick)
     if "kernels" in which:

@@ -4,6 +4,22 @@ FIFO, DRF (dominant-resource fairness), RRH (risk-reward heuristic),
 and a Dorm-like utilization-maximizing repacker.  All are *reactive*
 slot-steppers sharing one interface so the simulator can drive any of
 them interchangeably with OASiS.
+
+Each scheduler carries two repack implementations:
+
+* ``step_reference`` — the seed's greedy loops, verbatim: one
+  ``_place(1, ...)`` call per chunk, O(jobs x chunks) interpreter
+  iterations per repack.  Kept as the equivalence oracle and the honest
+  v1 baseline (``simulate_reference`` pins it via ``REPACK_IMPL``).
+* ``step_kernel`` — the vectorized batch-round kernels from
+  ``core/repack.py`` (the default): dense ``(n, R)`` demand arrays,
+  masked whole-round passes, futile-retry elision.  Placement-for-
+  placement equal to the reference (``tests/test_repack.py``).
+
+``dirty`` tracks whether the next ``step`` can differ from the last one:
+arrivals and repack-relevant completions set it, no-op events (a
+completion with an empty wait queue under FIFO/RRH, a rejected RRH
+arrival) leave it unset so the sim engine can skip the repack entirely.
 """
 from __future__ import annotations
 
@@ -12,7 +28,9 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .types import ClusterSpec, Job, R
+from . import repack
+from .repack import DensePool, _place_fast, _place_loop  # noqa: F401  (re-export)
+from .types import ClusterSpec, Job
 
 
 # Placement backend switch: "fast" (whole-pool array ops, the default) or
@@ -20,6 +38,11 @@ from .types import ClusterSpec, Job, R
 # for `simulate_reference` / the sim-v2 speedup benchmark).  Both produce
 # bit-identical placements (tests/test_sim_v2.py::test_place_fast_equals_loop).
 PLACE_IMPL = "fast"
+
+# Repack backend switch: "kernel" (vectorized batch-round kernels from
+# core/repack.py, the default) or "reference" (the seed's greedy loops).
+# ``simulate_reference`` pins "reference" for the honest v1 code path.
+REPACK_IMPL = "kernel"
 
 
 def _place(count: int, free: np.ndarray, demand: np.ndarray) -> Optional[np.ndarray]:
@@ -33,64 +56,6 @@ def _place(count: int, free: np.ndarray, demand: np.ndarray) -> Optional[np.ndar
     return _place_fast(count, free, demand)
 
 
-def _place_fast(count: int, free: np.ndarray, demand: np.ndarray
-                ) -> Optional[np.ndarray]:
-    """Each round places one instance on every server (in index order) that
-    still fits the demand; rounds repeat until all instances are placed or
-    no server fits.  The whole round's fit mask is one array op — server
-    rows are independent, so checking before the round equals checking at
-    each visit, bit for bit, including the 1e-9 slack and the sequential
-    ``free -= demand`` float updates of the per-server loop."""
-    S = free.shape[0]
-    out = np.zeros(S, dtype=np.int64)
-    if count == 0:
-        return out
-    placed = 0
-    while placed < count:
-        fits = np.flatnonzero(np.all(free >= demand[None] - 1e-9, axis=1))
-        if fits.size == 0:
-            # rollback
-            free += out[:, None] * demand[None]
-            return None
-        take = fits[:count - placed]
-        free[take] -= demand[None]
-        out[take] += 1
-        placed += take.size
-    return out
-
-
-def _place_loop(count: int, free: np.ndarray, demand: np.ndarray
-                ) -> Optional[np.ndarray]:
-    """The seed's per-server scan (v1 baseline; see PLACE_IMPL)."""
-    S = free.shape[0]
-    out = np.zeros(S, dtype=np.int64)
-    if count == 0:
-        return out
-    placed = 0
-    for rounds in range(count):
-        progressed = False
-        for srv in range(S):
-            if placed >= count:
-                break
-            if np.all(free[srv] >= demand - 1e-9):
-                free[srv] -= demand
-                out[srv] += 1
-                placed += 1
-                progressed = True
-        if placed >= count:
-            break
-        if not progressed:
-            # rollback
-            for srv in range(S):
-                free[srv] += out[srv] * demand
-            return None
-    if placed < count:
-        for srv in range(S):
-            free[srv] += out[srv] * demand
-        return None
-    return out
-
-
 class ReactiveScheduler:
     """Base class: admit-all, allocate per slot."""
 
@@ -102,12 +67,14 @@ class ReactiveScheduler:
         self.jobs: Dict[int, Job] = {}
         self.unfinished: List[int] = []    # insertion == arrival order
         self.alloc: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        self.pool = DensePool(cluster.worker_caps.shape[1])
         self.dirty = True
 
     # -- events -------------------------------------------------------------
     def on_arrival(self, job: Job, t: int) -> bool:
         self.jobs[job.jid] = job
         self.unfinished.append(job.jid)
+        self.pool.add(job)
         self.dirty = True
         return True          # admit-all
 
@@ -115,13 +82,31 @@ class ReactiveScheduler:
         if jid in self.unfinished:
             self.unfinished.remove(jid)
         self.alloc.pop(jid, None)
-        self.dirty = True
+        self.pool.remove(jid)
+        # never clear an already-pending dirty (e.g. an arrival in the
+        # same event batch that has not been stepped yet)
+        self.dirty = self.dirty or self._completion_dirties()
+
+    def _completion_dirties(self) -> bool:
+        """Can this completion change the next ``step`` output?  Freed
+        capacity triggers a whole-set repack (DRF/Dorm) as long as
+        anything is still live; FIFO/RRH refine this to "something is
+        waiting" (running jobs keep their placement)."""
+        return bool(self.unfinished)
 
     def _counts(self, job: Job) -> Tuple[int, int]:
         n = min(self.fixed_workers, job.num_chunks)
         return n, job.ps_for(n)
 
     def step(self, t: int) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
+        if REPACK_IMPL == "reference":
+            return self.step_reference(t)
+        return self.step_kernel(t)
+
+    def step_reference(self, t: int) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
+        raise NotImplementedError
+
+    def step_kernel(self, t: int) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
         raise NotImplementedError
 
 
@@ -130,7 +115,12 @@ class FIFO(ReactiveScheduler):
 
     name = "fifo"
 
-    def step(self, t: int) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
+    def _completion_dirties(self) -> bool:
+        # running jobs keep their placement; only a waiting job can use
+        # the freed capacity
+        return any(j not in self.alloc for j in self.unfinished)
+
+    def step_reference(self, t: int) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
         free_w = self.cluster.worker_caps.astype(float).copy()
         free_s = self.cluster.ps_caps.astype(float).copy()
         out: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
@@ -159,13 +149,39 @@ class FIFO(ReactiveScheduler):
             out[jid] = (y, z)
         return out
 
+    def step_kernel(self, t: int) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
+        free_w = self.cluster.worker_caps.astype(float).copy()
+        free_s = self.cluster.ps_caps.astype(float).copy()
+        out: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        running = [j for j in self.unfinished if j in self.alloc]
+        repack.deduct_running(free_w, [self.alloc[j][0] for j in running],
+                              [self.jobs[j].worker_res for j in running])
+        repack.deduct_running(free_s, [self.alloc[j][1] for j in running],
+                              [self.jobs[j].ps_res for j in running])
+        out.update((j, self.alloc[j]) for j in running)
+        for jid in self.unfinished:
+            if jid in self.alloc:
+                continue
+            job = self.jobs[jid]
+            nw, nps = self._counts(job)
+            y = _place_fast(nw, free_w, job.worker_res)
+            if y is None:
+                break                        # FIFO head-of-line blocking
+            z = _place_fast(nps, free_s, job.ps_res)
+            if z is None:
+                free_w += y[:, None] * job.worker_res[None]
+                break
+            self.alloc[jid] = (y, z)
+            out[jid] = (y, z)
+        return out
+
 
 class DRF(ReactiveScheduler):
     """Dominant-resource max-min fairness via progressive filling."""
 
     name = "drf"
 
-    def step(self, t: int) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
+    def step_reference(self, t: int) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
         free_w = self.cluster.worker_caps.astype(float).copy()
         free_s = self.cluster.ps_caps.astype(float).copy()
         total_w = np.maximum(self.cluster.worker_caps.sum(axis=0), 1e-9)
@@ -201,6 +217,10 @@ class DRF(ReactiveScheduler):
             shares[jid] = float(dom)
         return {j: pl for j, pl in placements.items() if pl[0].sum() > 0}
 
+    def step_kernel(self, t: int) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
+        return repack.drf_repack(self.cluster.worker_caps, self.cluster.ps_caps,
+                                 self.pool, self.unfinished)
+
 
 class RRH(ReactiveScheduler):
     """Risk-reward heuristic [Irwin et al., HPDC'04 as used in the paper]:
@@ -214,6 +234,9 @@ class RRH(ReactiveScheduler):
         super().__init__(cluster, fixed_workers)
         self.delay_penalty = delay_penalty
         self.threshold = threshold
+        # jid -> (nw, nps, est duration, payoff-density denominator); the
+        # static parts of the resume-order key, precomputed at admission
+        self._meta: Dict[int, Tuple[int, int, int, float]] = {}
 
     def on_arrival(self, job: Job, t: int) -> bool:
         nw, _ = self._counts(job)
@@ -222,9 +245,20 @@ class RRH(ReactiveScheduler):
         reward = job.utility(est_dur) - self.delay_penalty * backlog
         if reward <= self.threshold:
             return False
+        nw, nps = self._counts(job)
+        self._meta[job.jid] = (nw, nps, est_dur,
+                               max(nw * job.worker_res.sum(), 1e-9))
         return super().on_arrival(job, t)
 
-    def step(self, t: int) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
+    def on_completion(self, jid: int, t: int) -> None:
+        super().on_completion(jid, t)
+        self._meta.pop(jid, None)
+
+    def _completion_dirties(self) -> bool:
+        # no paused job to resume -> freed capacity changes nothing
+        return any(j not in self.alloc for j in self.unfinished)
+
+    def step_reference(self, t: int) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
         free_w = self.cluster.worker_caps.astype(float).copy()
         free_s = self.cluster.ps_caps.astype(float).copy()
         out: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
@@ -257,6 +291,34 @@ class RRH(ReactiveScheduler):
             out[jid] = (y, z)
         return out
 
+    def step_kernel(self, t: int) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
+        free_w = self.cluster.worker_caps.astype(float).copy()
+        free_s = self.cluster.ps_caps.astype(float).copy()
+        out: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        running = [j for j in self.unfinished if j in self.alloc]
+        repack.deduct_running(free_w, [self.alloc[j][0] for j in running],
+                              [self.jobs[j].worker_res for j in running])
+        repack.deduct_running(free_s, [self.alloc[j][1] for j in running],
+                              [self.jobs[j].ps_res for j in running])
+        out.update((j, self.alloc[j]) for j in running)
+        waiting = [j for j in self.unfinished if j not in self.alloc]
+        order = repack.rrh_resume_order([self.jobs[j] for j in waiting],
+                                        [self._meta[j] for j in waiting], t)
+        for i in order:
+            jid = waiting[int(i)]
+            job = self.jobs[jid]
+            nw, nps, _, _ = self._meta[jid]
+            y = _place_fast(nw, free_w, job.worker_res)
+            if y is None:
+                continue
+            z = _place_fast(nps, free_s, job.ps_res)
+            if z is None:
+                free_w += y[:, None] * job.worker_res[None]
+                continue
+            self.alloc[jid] = (y, z)
+            out[jid] = (y, z)
+        return out
+
 
 class Dorm(ReactiveScheduler):
     """Dorm-like repacking: on each event maximize cluster utilization
@@ -264,7 +326,7 @@ class Dorm(ReactiveScheduler):
 
     name = "dorm"
 
-    def step(self, t: int) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
+    def step_reference(self, t: int) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
         free_w = self.cluster.worker_caps.astype(float).copy()
         free_s = self.cluster.ps_caps.astype(float).copy()
         placements = {jid: (np.zeros(self.cluster.H, dtype=np.int64),
@@ -291,6 +353,10 @@ class Dorm(ReactiveScheduler):
                 placements[jid] = (placements[jid][0] + y, placements[jid][1] + z)
                 progress = True
         return {j: pl for j, pl in placements.items() if pl[0].sum() > 0}
+
+    def step_kernel(self, t: int) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
+        return repack.dorm_repack(self.cluster.worker_caps, self.cluster.ps_caps,
+                                  self.pool, self.unfinished)
 
 
 BASELINES = {"fifo": FIFO, "drf": DRF, "rrh": RRH, "dorm": Dorm}

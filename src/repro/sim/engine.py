@@ -13,7 +13,13 @@ ops over dense per-job state:
   at event slots and fast-forwards work progress with one vectorized
   update: per-job completion slots are ``ceil(remaining / rate)`` over the
   whole live set, and the clock jumps to the earliest completion or the
-  next event.
+  next event.  Even at event slots the repack is skipped when the
+  scheduler's ``dirty`` flag says the event cannot change the plan (a
+  completion with an empty wait queue under FIFO/RRH, a rejected RRH
+  arrival): the previous allocation, pruned of departed jobs, is provably
+  what ``step`` would return.  The repacks themselves run on the
+  vectorized batch-round kernels of ``core/repack.py`` (placement-equal
+  to the seed's greedy loops, ``tests/test_repack.py``).
 * **OASiS**: schedules are committed at arrival, so arrivals are the only
   plan events; per-slot GPU usage is accumulated into a dense ``(T,)``
   tensor at commit time and capacity feasibility is one ``(T, H, R)``
@@ -31,10 +37,16 @@ slots) in ``tests/test_sim_v2.py``.  Two scenario hooks go beyond v1:
   normally) — identically for every scheduler.
 * ``throughput``: ``fn(job, n_workers, slot) -> factor in (0, 1]`` — a
   per-(job, slot) multiplicative work-rate perturbation (e.g. stragglers,
-  ``sim/scenarios.py``).  Under perturbation the engine advances slot by
-  slot (rates vary), still vectorized across jobs; an OASiS job whose
-  committed schedule under-delivers its total work is *not* completed and
-  earns nothing.
+  ``sim/scenarios.py``).  Under perturbation rates vary per slot; if the
+  fn declares itself ``stateless`` and provides ``rate_matrix(job,
+  n_workers, t0, h)``, the engine precomputes a ``(n_live,
+  horizon_chunk)`` rate matrix per plan span and detects completions via
+  row cumsums, consuming only the slots up to the earliest completion
+  (the discarded suffix is recomputed after the replan — safe exactly
+  because the fn is stateless).  Stateful fns (straggler detection) are
+  called per (job, slot) in the original order, one slot at a time, still
+  vectorized across jobs.  An OASiS job whose committed schedule
+  under-delivers its total work is *not* completed and earns nothing.
 """
 from __future__ import annotations
 
@@ -222,6 +234,10 @@ def _run_oasis(cluster: ClusterSpec, jobs: Sequence[Job],
 # Reactive baselines: replan at events, fast-forward in between.
 # ---------------------------------------------------------------------------
 
+# horizon chunk for the stateless-throughput rate matrix (slots per block)
+_RATE_BLOCK = 64
+
+
 def _run_reactive(cluster: ClusterSpec, jobs: Sequence[Job], scheduler: str,
                   fixed_workers: int, check: bool, quantum: Optional[int],
                   cancellations: Optional[Dict[int, int]],
@@ -241,6 +257,24 @@ def _run_reactive(cluster: ClusterSpec, jobs: Sequence[Job], scheduler: str,
     total_utility = 0.0
     util_sum = 0.0
 
+    # ``dirty`` gating: the scheduler tells us whether the last event can
+    # change its next repack (arrivals and repack-relevant completions
+    # set it; a completion with an empty wait queue under FIFO/RRH or a
+    # rejected RRH arrival leaves it unset).  On clean events the engine
+    # reuses the previous allocation — pruned of departed jobs — instead
+    # of repacking: between events capacity and the job set are unchanged
+    # so a fresh ``step`` provably returns the same placements.
+    cur_alloc: Dict[int, tuple] = {}
+    ids: List[int] = []
+    counts = np.zeros(0)
+    plan_gpu = 0.0
+    stale = True            # derived arrays need a rebuild (alloc changed)
+    # stateless throughput fns expose a vectorized per-slot factor matrix;
+    # stateful ones (e.g. straggler detection) must be called slot by slot
+    use_matrix = (throughput is not None
+                  and getattr(throughput, "stateless", False)
+                  and callable(getattr(throughput, "rate_matrix", None)))
+
     events = sorted(set(by_slot) | set(cancel_slot))
     ei = 0
     t = events[0] if events else T
@@ -256,38 +290,66 @@ def _run_reactive(cluster: ClusterSpec, jobs: Sequence[Job], scheduler: str,
                 rsched.on_completion(jid, t)    # drop from pool, no utility
                 del remaining[jid]
                 canceled.add(jid)
-        alloc = rsched.step(t)
-        if check:
-            _check_alloc(cluster, jmap, alloc)
-        ids = list(alloc)
-        counts = np.array([float(alloc[j][0].sum()) for j in ids])
-        gpu = float(counts @ np.array([jmap[j].worker_res[0] for j in ids])) \
-            if ids else 0.0
+                cur_alloc.pop(jid, None)
+                stale = True
+        if rsched.dirty:
+            cur_alloc = dict(rsched.step(t))
+            rsched.dirty = False
+            stale = True
+            if check:       # a pruned reuse stays feasible by construction
+                _check_alloc(cluster, jmap, cur_alloc)
+        if stale:
+            ids = list(cur_alloc)
+            counts = np.array([float(cur_alloc[j][0].sum()) for j in ids])
+            plan_gpu = float(counts @ np.array(
+                [jmap[j].worker_res[0] for j in ids])) if ids else 0.0
+            stale = False
         next_ev = events[ei] if ei < len(events) else T
+        horizon = min(next_ev, T) - t
 
-        if throughput is not None:
-            # rates vary per slot: advance one slot, vectorized across jobs
-            rates = counts * np.array(
-                [throughput(jmap[j], int(c), t) for j, c in zip(ids, counts)]) \
-                if ids else counts
-            span = 1
-        else:
+        if throughput is None:
             rem = np.array([remaining[j] for j in ids])
             active = counts > 0
             slots_left = np.full(len(ids), np.inf)
             if active.any():
                 slots_left[active] = np.maximum(
                     np.ceil((rem[active] - 1e-9) / counts[active]), 1.0)
-            horizon = min(float(next_ev - t), float(T - t))
-            span = int(min(float(slots_left.min()) if ids else np.inf, horizon))
+            span = int(min(float(slots_left.min()) if ids else np.inf,
+                           float(horizon)))
             span = max(span, 1)
-            rates = counts
+            consumed = counts * span
+        elif use_matrix and ids:
+            # whole-block rate matrix: factors for every (live job, slot)
+            # in one pass, completion detection via row cumsums; only the
+            # slots up to the earliest completion are consumed, the rest
+            # are recomputed after the replan (the fn is stateless)
+            h = min(horizon, _RATE_BLOCK)
+            M = np.empty((len(ids), h))
+            for i, jid_ in enumerate(ids):
+                M[i] = throughput.rate_matrix(jmap[jid_], int(counts[i]), t, h)
+            M *= counts[:, None]
+            cum = np.cumsum(M, axis=1)
+            rem = np.array([remaining[j] for j in ids])
+            hits = cum >= rem[:, None] - 1e-9
+            first = np.where(hits.any(axis=1), hits.argmax(axis=1), h)
+            k = int(first.min())
+            span = k + 1 if k < h else h
+            consumed = cum[:, span - 1]
+        elif use_matrix:
+            span = min(horizon, _RATE_BLOCK)
+            consumed = counts                   # no live jobs: empty array
+        else:
+            # stateful fn: advance one slot, still vectorized across jobs
+            consumed = counts * np.array(
+                [throughput(jmap[j], int(c), t) for j, c in zip(ids, counts)]) \
+                if ids else counts
+            span = 1
 
-        util_sum += (gpu / total_gpu) * span
+        util_sum += (plan_gpu / total_gpu) * span
         t_end = t + span - 1                    # last slot run with this plan
         done_now = []
-        for j, r in zip(ids, rates * span):
-            remaining[j] -= r
+        for j, used in zip(ids, consumed):
+            remaining[j] -= used
             if remaining[j] <= 1e-9:
                 done_now.append(j)
         for jid in done_now:
@@ -295,6 +357,8 @@ def _run_reactive(cluster: ClusterSpec, jobs: Sequence[Job], scheduler: str,
             total_utility += jmap[jid].utility(t_end - jmap[jid].arrival)
             rsched.on_completion(jid, t_end)
             del remaining[jid]
+            cur_alloc.pop(jid, None)
+            stale = True
         t += span
     return SimResult(name=scheduler, total_utility=total_utility,
                      accepted=len(admitted), completed=len(completion),

@@ -95,6 +95,10 @@ class StragglerThroughput:
         self.cfg = cfg or StragglerConfig()
         self._slow: Dict[int, np.ndarray] = {}
         self._monitors: Dict[int, StragglerMonitor] = {}
+        # without detection the factor is a pure function of (job, slot):
+        # the engine may then precompute whole (n_live, horizon) rate
+        # blocks via ``rate_matrix`` instead of calling per job per slot
+        self.stateless = not detect
 
     def _job_state(self, job: Job):
         if job.jid not in self._slow:
@@ -121,6 +125,32 @@ class StragglerThroughput:
             include[:] = True                   # never stall completely
         pace = float(times[include].max())      # synchronous: slowest wins
         return min(1.0, include.sum() / (n * pace))
+
+    def rate_matrix(self, job: Job, n_workers: int, t0: int,
+                    h: int) -> np.ndarray:
+        """Factors for slots ``[t0, t0 + h)`` at a fixed worker count.
+
+        Only valid when ``stateless`` (detect=False): the draws are seeded
+        per (job, slot), so the values equal ``__call__`` slot by slot and
+        are independent of block boundaries — the engine may discard and
+        recompute any suffix after a replan.  (The monitor bookkeeping
+        ``__call__`` performs is skipped; nothing reads it undetected.)
+        """
+        if not self.stateless:
+            raise RuntimeError("rate_matrix requires detect=False")
+        if n_workers <= 0:
+            return np.ones(h)
+        slow, _ = self._job_state(job)
+        n = min(n_workers, len(slow))
+        sl = slow[:n]
+        out = np.empty(h)
+        for i in range(h):
+            rng = np.random.default_rng((self.seed, job.jid, t0 + i))
+            times = 1.0 + self.jitter * rng.random(n)
+            times[sl] *= self.slowdown
+            pace = float(times.max())
+            out[i] = min(1.0, n / (n * pace))
+        return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -206,16 +236,24 @@ def run_misest(seed: int = 0, quick: bool = False,
             for f in factors]
 
 
+# the tracked 10x-scale instance (and its --quick shrink); the benchmark
+# harness records these dims alongside the wall clocks in
+# BENCH_decision.json, so they live here, next to the code that uses them
+SCALE_DIMS = {"T": 500, "H": 100, "K": 100, "n": 2000}
+SCALE_DIMS_QUICK = {"T": 150, "H": 30, "K": 30, "n": 300}
+
+
 def run_scale(seed: int = 0, quick: bool = False,
               schedulers: Sequence[str] = ("fifo", "rrh", "drf", "dorm"),
-              T: int = 500, H: int = 100, K: int = 100,
-              n: int = 2000) -> List[ScenarioResult]:
+              T: int = SCALE_DIMS["T"], H: int = SCALE_DIMS["H"],
+              K: int = SCALE_DIMS["K"],
+              n: int = SCALE_DIMS["n"]) -> List[ScenarioResult]:
     """The fig3-shaped workload an order of magnitude past the paper's
     T=100 / 100-server / 200-job setting.  Reactive baselines by default;
     pass ``schedulers=("oasis", ...)`` to include the (decision-bound)
     OASiS run."""
     if quick:
-        T, H, K, n = 150, 30, 30, 300
+        T, H, K, n = (SCALE_DIMS_QUICK[k] for k in ("T", "H", "K", "n"))
     cluster = make_cluster(T=T, H=H, K=K)
     jobs = make_jobs(n, T=T, seed=seed, small=False)
     return [_timed("scale", f"T={T};n={n}", cluster, jobs, scheduler=s,

@@ -60,22 +60,26 @@ def simulate_reference(cluster: ClusterSpec, jobs: Sequence[Job],
                        seed_placement: bool = True) -> SimResult:
     """The v1 per-slot simulation loop (equivalence oracle for sim v2).
 
-    ``seed_placement=True`` additionally runs the baselines' round-robin
-    placement through the seed's per-server Python scan, so this is the
-    pre-sim-v2 code path end to end (the honest baseline for
-    ``benchmarks.figs.sim_v2_speedup``; placements are bit-identical
-    either way).
+    ``seed_placement=True`` additionally pins the baselines' greedy repack
+    loops (``step_reference``) and runs their round-robin placement
+    through the seed's per-server Python scan, so this is the pre-sim-v2
+    code path end to end (the honest baseline for
+    ``benchmarks.figs.sim_v2_speedup``; placements are identical to the
+    vectorized kernels either way, see ``tests/test_repack.py``).
     """
     from ..core import baselines as _baselines
-    if seed_placement and _baselines.PLACE_IMPL != "loop":
+    if seed_placement and (_baselines.PLACE_IMPL != "loop"
+                           or _baselines.REPACK_IMPL != "reference"):
+        saved = (_baselines.PLACE_IMPL, _baselines.REPACK_IMPL)
         _baselines.PLACE_IMPL = "loop"
+        _baselines.REPACK_IMPL = "reference"
         try:
             return simulate_reference(cluster, jobs, scheduler=scheduler,
                                       params=params, impl=impl,
                                       fixed_workers=fixed_workers, check=check,
                                       quantum=quantum, seed_placement=True)
         finally:
-            _baselines.PLACE_IMPL = "fast"
+            _baselines.PLACE_IMPL, _baselines.REPACK_IMPL = saved
     jmap = {j.jid: j for j in jobs}
     by_slot: Dict[int, List[Job]] = {}
     for j in jobs:

@@ -1,0 +1,295 @@
+"""Vectorized repack kernels (core/repack.py) vs the greedy reference
+loops (``step_reference``): exact placement equality on seeded
+paper-scale instances and randomized adversarial instances, the engine's
+``dirty``-gated repack skipping, and the stateless throughput
+rate-matrix contract."""
+import numpy as np
+import pytest
+
+from repro.core import baselines
+from repro.core.baselines import BASELINES, DRF, FIFO, RRH
+from repro.core.types import ClusterSpec, Job, SigmoidUtility
+from repro.sim import engine, make_cluster, make_jobs, simulate
+from repro.sim.scenarios import StragglerThroughput, make_hetero_cluster
+
+REACTIVE = ["fifo", "drf", "rrh", "dorm"]
+
+
+def _assert_steps_equal(a, b, ctx):
+    assert set(a) == set(b), f"{ctx}: placed-job sets differ"
+    for jid in a:
+        assert np.array_equal(a[jid][0], b[jid][0]), f"{ctx}: y differs jid={jid}"
+        assert np.array_equal(a[jid][1], b[jid][1]), f"{ctx}: z differs jid={jid}"
+
+
+def _replay_compare(cluster, jobs, name, fixed_workers=8, churn_seed=None):
+    """Drive a kernel-backed and a reference-backed scheduler through the
+    same event sequence and assert every repack's placements are exactly
+    equal.  Completions follow the kernel's own allocation (identical to
+    the reference's by the running equality); ``churn_seed`` adds random
+    mid-run completions to exercise pool removal."""
+    A = BASELINES[name](cluster, fixed_workers=fixed_workers)
+    B = BASELINES[name](cluster, fixed_workers=fixed_workers)
+    by_slot = {}
+    for j in jobs:
+        if j.arrival < cluster.T:
+            by_slot.setdefault(j.arrival, []).append(j)
+    remaining = {}
+    rng = np.random.default_rng(churn_seed) if churn_seed is not None else None
+    steps = 0
+    for t in range(cluster.T):
+        for job in by_slot.get(t, ()):
+            ra, rb = A.on_arrival(job, t), B.on_arrival(job, t)
+            assert ra == rb
+            if ra:
+                remaining[job.jid] = job.total_work_slots
+        a = A.step_kernel(t)
+        b = B.step_reference(t)
+        _assert_steps_equal(a, b, f"{name} t={t}")
+        steps += 1
+        done = []
+        for jid, (y, _) in a.items():
+            remaining[jid] -= float(y.sum())
+            if remaining[jid] <= 1e-9:
+                done.append(jid)
+        if rng is not None and remaining and rng.random() < 0.3:
+            jid = list(remaining)[int(rng.integers(len(remaining)))]
+            if jid not in done:
+                done.append(jid)
+        for jid in done:
+            A.on_completion(jid, t)
+            B.on_completion(jid, t)
+            del remaining[jid]
+    assert steps == cluster.T
+
+
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("name", ["drf", "dorm", "rrh"])
+def test_kernel_placements_equal_reference_paper_scale(seed, name):
+    """The acceptance instances: fig3-shaped T=100, 50+50 servers, 200
+    jobs (small internals), five seeds — every repack's placements from
+    the vectorized kernels equal ``step_reference`` exactly."""
+    cluster = make_cluster(T=100, H=50, K=50)
+    jobs = make_jobs(200, T=100, seed=seed, small=True)
+    _replay_compare(cluster, jobs, name)
+
+
+@pytest.mark.parametrize("name", REACTIVE)
+def test_kernel_placements_equal_reference_full_size(name):
+    """Full-size (paper-range) jobs, where DRF/Dorm repack hundreds of
+    chunks per event and PS placements span servers."""
+    cluster = make_cluster(T=60, H=12, K=12)
+    jobs = make_jobs(30, T=60, seed=3, small=False)
+    _replay_compare(cluster, jobs, name, churn_seed=1)
+
+
+@pytest.mark.parametrize("name", REACTIVE)
+def test_kernel_placements_equal_reference_hetero_fleet(name):
+    """Heterogeneous worker fleet: per-server capacities differ, so
+    first-fit cursors and block envelopes see non-uniform rows."""
+    cluster = make_hetero_cluster(T=50, H=17, K=9, seed=4)
+    jobs = make_jobs(40, T=50, seed=4, small=False)
+    _replay_compare(cluster, jobs, name, churn_seed=2)
+
+
+def _random_instance(rng, tight_ps=False, tight_pool=False):
+    H = int(rng.integers(1, 7))
+    K = int(rng.integers(1, 7))
+    scale = 0.35 if tight_pool else 1.0
+    wcaps = rng.uniform(0.5, 8.0, (H, 5)) * scale
+    scaps = rng.uniform(0.05 if tight_ps else 0.5, 6.0, (K, 5)) * \
+        (0.25 if tight_ps else 1.0)
+    cluster = ClusterSpec(T=8, worker_caps=wcaps, ps_caps=scaps)
+    jobs = []
+    for jid in range(int(rng.integers(1, 9))):
+        w = rng.uniform(0, 3.0, 5)
+        if rng.random() < 0.3:
+            w[rng.integers(0, 5)] = 0.0        # zero-demand resources
+        s = rng.uniform(0, 2.0, 5)
+        jobs.append(Job(
+            jid=jid, arrival=0, epochs=1,
+            num_chunks=int(rng.integers(1, 7)),
+            minibatches_per_chunk=5, tau=0.01, grad_size=0.1,
+            worker_bw=float(rng.uniform(0.1, 5.0)),
+            ps_bw=float(rng.uniform(0.2, 8.0)),
+            worker_res=w, ps_res=s,
+            utility=SigmoidUtility(10.0, 0.1, 4.0)))
+    return cluster, jobs
+
+
+@pytest.mark.parametrize("mode", ["plain", "tight_ps", "tight_pool"])
+def test_kernel_equals_reference_randomized(mode):
+    """300 randomized instances per regime: ``tight_ps`` forces
+    PS-placement rollbacks (worker success then PS failure), and
+    ``tight_pool`` forces full-pool rejections; placements must match
+    the reference exactly in every case."""
+    rng = np.random.default_rng({"plain": 0, "tight_ps": 1, "tight_pool": 2}[mode])
+    saw_placement = saw_rejection = False
+    for _ in range(300):
+        cluster, jobs = _random_instance(
+            rng, tight_ps=mode == "tight_ps", tight_pool=mode == "tight_pool")
+        for name in ("drf", "dorm"):
+            A = BASELINES[name](cluster)
+            B = BASELINES[name](cluster)
+            for j in jobs:
+                A.on_arrival(j, 0)
+                B.on_arrival(j, 0)
+            a = A.step_kernel(0)
+            b = B.step_reference(0)
+            _assert_steps_equal(a, b, f"{name} {mode}")
+            saw_placement = saw_placement or bool(a)
+            placed = sum(int(y.sum()) for y, _ in a.values())
+            wanted = sum(j.num_chunks for j in jobs)
+            saw_rejection = saw_rejection or placed < wanted
+    assert saw_placement and saw_rejection   # both regimes actually exercised
+
+
+def test_kernel_ps_rollback_exact():
+    """A hand-built instance where the worker chunk fits but the PS
+    demand cannot be placed: the kernel must roll the worker placement
+    back and block the job, exactly like the reference."""
+    wcaps = np.full((2, 5), 10.0)
+    scaps = np.full((1, 5), 1.0)               # PS pool too small
+    cluster = ClusterSpec(T=4, worker_caps=wcaps, ps_caps=scaps)
+    j0 = Job(jid=0, arrival=0, epochs=1, num_chunks=3,
+             minibatches_per_chunk=5, tau=0.01, grad_size=0.1,
+             worker_bw=4.0, ps_bw=4.0,          # 1 PS per worker chunk
+             worker_res=np.full(5, 1.0), ps_res=np.full(5, 2.0),
+             utility=SigmoidUtility(10.0, 0.1, 4.0))
+    for name in ("drf", "dorm"):
+        A = BASELINES[name](cluster)
+        B = BASELINES[name](cluster)
+        A.on_arrival(j0, 0)
+        B.on_arrival(j0, 0)
+        a, b = A.step_kernel(0), B.step_reference(0)
+        _assert_steps_equal(a, b, name)
+        assert a == {}                          # PS rollback blocked the job
+
+
+def test_engine_paper_scale_end_to_end_matches_reference_impl():
+    """Engine runs with the kernel vs the reference repack implementation
+    produce identical results (utilities, completion slots)."""
+    cluster = make_cluster(T=60, H=10, K=10)
+    jobs = make_jobs(50, T=60, seed=11, small=True)
+    for name in REACTIVE:
+        a = simulate(cluster, jobs, scheduler=name, check=True)
+        assert baselines.REPACK_IMPL == "kernel"
+        baselines.REPACK_IMPL = "reference"
+        try:
+            b = simulate(cluster, jobs, scheduler=name, check=True)
+        finally:
+            baselines.REPACK_IMPL = "kernel"
+        assert a.completion == b.completion
+        assert a.total_utility == pytest.approx(b.total_utility, abs=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# dirty wiring: no-op events must not trigger repacks.
+# ---------------------------------------------------------------------------
+
+def _counting(name, calls):
+    base = BASELINES[name]
+
+    class Counting(base):
+        def step(self, t):
+            calls.append(t)
+            return super().step(t)
+
+    return Counting
+
+
+@pytest.mark.parametrize("name", ["fifo", "rrh"])
+def test_noop_completion_skips_repack(name, monkeypatch):
+    """With ample capacity nothing ever waits under FIFO/RRH, so the only
+    repacks are at arrival slots: completions must not add any."""
+    calls = []
+    monkeypatch.setitem(BASELINES, name, _counting(name, calls))
+    cluster = make_cluster(T=80, H=40, K=40)
+    jobs = make_jobs(8, T=40, seed=5, small=True)
+    r = engine.run(cluster, jobs, scheduler=name, check=True)
+    assert r.completed == r.accepted > 0
+    arrival_slots = {j.arrival for j in jobs if j.arrival < cluster.T}
+    assert set(calls) <= arrival_slots          # no completion-slot repacks
+    assert len(calls) <= len(arrival_slots)
+
+
+def test_waiting_queue_completion_still_repacks(monkeypatch):
+    """The converse guard: when jobs are queued, a completion must mark
+    the scheduler dirty and trigger a repack (otherwise waiting jobs
+    would never start)."""
+    calls = []
+    monkeypatch.setitem(BASELINES, "fifo", _counting("fifo", calls))
+    cluster = make_cluster(T=100, H=2, K=2)     # tiny pool: queue builds
+    jobs = make_jobs(12, T=30, seed=7, small=True)
+    r = engine.run(cluster, jobs, scheduler="fifo", check=True)
+    arrival_slots = {j.arrival for j in jobs if j.arrival < cluster.T}
+    assert set(calls) - arrival_slots           # some repack at a completion
+    assert r.completed > 0
+
+
+def test_dirty_flag_contract_unit():
+    """Scheduler-level contract of the three no-op cases."""
+    cluster = make_cluster(T=40, H=20, K=20)
+    jobs = make_jobs(6, T=20, seed=1, small=True)
+    # FIFO: completion with an empty wait queue leaves dirty unset
+    f = FIFO(cluster)
+    for j in jobs:
+        f.on_arrival(j, 0)
+    assert f.dirty
+    f.step(0)
+    f.dirty = False
+    running = [j for j in jobs if j.jid in f.alloc]
+    assert running
+    f.on_completion(running[0].jid, 1)
+    assert not f.dirty                          # nothing was waiting
+    # RRH: a rejected arrival leaves dirty unset
+    r = RRH(cluster, threshold=float("inf"))
+    r.dirty = False
+    assert r.on_arrival(jobs[0], 0) is False
+    assert not r.dirty
+    # DRF: any completion with live jobs dirties
+    d = DRF(cluster)
+    for j in jobs:
+        d.on_arrival(j, 0)
+    d.step(0)
+    d.dirty = False
+    d.on_completion(jobs[0].jid, 1)
+    assert d.dirty
+
+
+# ---------------------------------------------------------------------------
+# stateless throughput rate matrix.
+# ---------------------------------------------------------------------------
+
+def test_rate_matrix_equals_call_and_engine_paths_agree():
+    cluster = make_cluster(T=50, H=10, K=10)
+    jobs = make_jobs(30, T=50, seed=3, small=True)
+    tp = StragglerThroughput(seed=3, slow_frac=0.4, slowdown=4.0, detect=False)
+    assert tp.stateless
+    job = jobs[0]
+    mat = tp.rate_matrix(job, 4, 7, 9)
+    ref = [StragglerThroughput(seed=3, slow_frac=0.4, slowdown=4.0,
+                               detect=False)(job, 4, 7 + i) for i in range(9)]
+    assert np.allclose(mat, ref, rtol=0, atol=0)    # bit-equal draws
+    assert np.all((0.0 < mat) & (mat <= 1.0))
+    # engine: matrix path (stateless) vs per-slot column path (plain fn)
+    a = simulate(cluster, jobs, scheduler="fifo", check=False, throughput=tp)
+    plain = StragglerThroughput(seed=3, slow_frac=0.4, slowdown=4.0,
+                                detect=False)
+    col = lambda job, n, t: plain(job, n, t)        # no .stateless attr
+    b = simulate(cluster, jobs, scheduler="fifo", check=False, throughput=col)
+    assert a.completion == b.completion
+    assert a.total_utility == pytest.approx(b.total_utility, rel=1e-9)
+
+
+def test_rate_matrix_requires_stateless():
+    tp = StragglerThroughput(seed=0, detect=True)
+    assert not tp.stateless
+    job = make_jobs(1, T=10, seed=0, small=True)[0]
+    with pytest.raises(RuntimeError):
+        tp.rate_matrix(job, 2, 0, 4)
+
+
+# The hypothesis property tests for the kernels live in
+# tests/test_repack_property.py (whole-module skip when hypothesis is
+# absent, per the repo convention) so this module always runs.

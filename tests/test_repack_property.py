@@ -1,0 +1,107 @@
+"""Hypothesis property tests for the vectorized repack kernels
+(core/repack.py) against the greedy reference loops.
+
+``hypothesis`` is an optional dev dependency (requirements-dev.txt); this
+module skips cleanly at collection when it is absent so ``pytest -x -q``
+still runs the rest of the suite (tests/test_repack.py carries the
+always-on randomized equivalence coverage).
+"""
+import math
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import baselines
+from repro.core.baselines import BASELINES
+from repro.core.types import ClusterSpec, Job, SigmoidUtility
+
+
+def _assert_steps_equal(a, b, ctx):
+    assert set(a) == set(b), f"{ctx}: placed-job sets differ"
+    for jid in a:
+        assert np.array_equal(a[jid][0], b[jid][0]), f"{ctx}: y differs jid={jid}"
+        assert np.array_equal(a[jid][1], b[jid][1]), f"{ctx}: z differs jid={jid}"
+
+
+@st.composite
+def _hyp_instance(draw):
+    """Arbitrary heterogeneous instances: tiny pools force full-pool
+    rejection, tiny PS capacities force PS-placement rollback, zero
+    demands and zero capacities hit the degenerate fit paths."""
+    H = draw(st.integers(1, 5))
+    K = draw(st.integers(1, 5))
+    caps = st.floats(0.0, 8.0, allow_nan=False, width=64)
+    wcaps = np.array([[draw(caps) for _ in range(5)] for _ in range(H)])
+    scaps = np.array([[draw(caps) for _ in range(5)] for _ in range(K)])
+    n = draw(st.integers(1, 6))
+    dem = st.floats(0.0, 4.0, allow_nan=False, width=64)
+    jobs = []
+    for jid in range(n):
+        jobs.append(Job(
+            jid=jid, arrival=0, epochs=1,
+            num_chunks=draw(st.integers(1, 5)),
+            minibatches_per_chunk=3, tau=0.01, grad_size=0.1,
+            worker_bw=draw(st.floats(0.1, 5.0, allow_nan=False)),
+            ps_bw=draw(st.floats(0.1, 8.0, allow_nan=False)),
+            worker_res=np.array([draw(dem) for _ in range(5)]),
+            ps_res=np.array([draw(dem) for _ in range(5)]),
+            utility=SigmoidUtility(10.0, 0.1, 4.0)))
+    return ClusterSpec(T=4, worker_caps=wcaps, ps_caps=scaps), jobs
+
+
+@settings(max_examples=120, deadline=None)
+@given(inst=_hyp_instance(), name=st.sampled_from(["drf", "dorm", "rrh",
+                                                   "fifo"]))
+def test_kernel_equals_reference(inst, name):
+    """Property: on arbitrary capacities/demands (including zero demands,
+    over-demand rejection, and PS-rollback territory) the kernel step
+    equals the reference step exactly, and both leave consistent
+    scheduler state for a follow-up event."""
+    cluster, jobs = inst
+    A = BASELINES[name](cluster)
+    B = BASELINES[name](cluster)
+    for j in jobs:
+        ra, rb = A.on_arrival(j, 0), B.on_arrival(j, 0)
+        assert ra == rb
+    a, b = A.step_kernel(0), B.step_reference(0)
+    _assert_steps_equal(a, b, name)
+    # follow-up event: complete one placed job (if any) and re-step
+    if a:
+        jid = next(iter(a))
+        A.on_completion(jid, 1)
+        B.on_completion(jid, 1)
+        _assert_steps_equal(A.step_kernel(1), B.step_reference(1),
+                            f"{name} post-completion")
+
+
+@settings(max_examples=60, deadline=None)
+@given(count=st.integers(0, 9),
+       free=st.lists(st.lists(st.floats(0, 5, allow_nan=False, width=64),
+                              min_size=3, max_size=3), min_size=1, max_size=6),
+       demand=st.lists(st.floats(0, 3, allow_nan=False, width=64),
+                       min_size=3, max_size=3))
+def test_place_fast_equals_loop(count, free, demand):
+    f1 = np.array(free)
+    f2 = f1.copy()
+    d = np.array(demand)
+    a = baselines._place_loop(count, f1, d)
+    b = baselines._place_fast(count, f2, d)
+    assert (a is None) == (b is None)
+    if a is not None:
+        assert np.array_equal(a, b)
+    assert np.array_equal(f1, f2)
+
+
+@settings(max_examples=40, deadline=None)
+@given(b=st.floats(0.1, 5.0, allow_nan=False),
+       B=st.floats(0.1, 8.0, allow_nan=False), c=st.integers(1, 50))
+def test_ps_for_scalar_matches_job(b, B, c):
+    from repro.core.repack import _ps_for
+    job = Job(jid=0, arrival=0, epochs=1, num_chunks=4,
+              minibatches_per_chunk=1, tau=0.01, grad_size=0.1,
+              worker_bw=b, ps_bw=B, worker_res=np.ones(5), ps_res=np.ones(5),
+              utility=SigmoidUtility(1.0, 0.0, 1.0))
+    assert _ps_for(c, b, B) == job.ps_for(c) == math.ceil(c * b / B - 1e-9)
