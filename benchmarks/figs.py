@@ -159,16 +159,23 @@ def fig3_scale(quick: bool = False, include_oasis: bool = False,
     the sim-v2 engine; the v1 per-slot loop cannot finish this in
     reasonable time (see sim_v2_speedup for the controlled comparison).
 
-    ``stats_out`` receives machine-readable per-scheduler wall clocks
-    plus the instance dimensions (the ``sim_scale`` record tracked in
-    ``BENCH_decision.json`` — see ``benchmarks.run --only simscale``).
-    """
+    ``include_oasis=True`` adds the paper's own scheduler on the fused jit
+    engine + device-resident price state (``impl="jax"``).  ``stats_out``
+    receives machine-readable per-scheduler wall clocks, utilities, and —
+    for plan-ahead schedulers — per-decision latency stats (the
+    ``sim_scale`` record tracked in ``BENCH_decision.json`` — see
+    ``benchmarks.run --only simscale``)."""
     scheds = scenarios.ALL_SCHEDULERS if include_oasis else scenarios.REACTIVE
     rows = []
     results = scenarios.run_scale(seed=0, quick=quick, schedulers=scheds)
     for r in results:
         rows.append(f"fig3_scale[{r.scheduler};{r.variant}],"
                     f"{r.wall_seconds*1e6:.0f},{r.utility:.2f}")
+        if r.decision_p50 is not None:
+            rows.append(f"fig3_scale[{r.scheduler};decision_p50],"
+                        f"{r.decision_p50*1e6:.0f},{r.decision_p50:.6f}")
+            rows.append(f"fig3_scale[{r.scheduler};decision_mean],"
+                        f"{r.decision_mean*1e6:.0f},{r.decision_mean:.6f}")
     if stats_out is not None:
         dims = scenarios.SCALE_DIMS_QUICK if quick else scenarios.SCALE_DIMS
         stats_out.update({
@@ -176,6 +183,10 @@ def fig3_scale(quick: bool = False, include_oasis: bool = False,
             "n_jobs": dims["n"], "quick": bool(quick),
             "wall_seconds": {r.scheduler: r.wall_seconds for r in results},
             "utility": {r.scheduler: r.utility for r in results},
+            "decision": {r.scheduler: {"p50": r.decision_p50,
+                                       "mean": r.decision_mean,
+                                       "p95": r.decision_p95}
+                         for r in results if r.decision_p50 is not None},
         })
     return rows
 

@@ -16,12 +16,16 @@ Machine-readable perf tracking (``--json``, default
 ``BENCH_decision.json``, schema ``bench_decision/v2``): the ``decision``
 section writes p50/p95 per backend plus the sim-v2 wall-clock
 comparison, and the ``simscale`` section times the 10x-scale fig3 run
-per reactive scheduler (``sim_scale``; always the full T=500 /
-100+100-server / 2000-job instance — it is the tracked configuration, so
-``--quick`` does not shrink it).  Sections *merge* into an existing
-``--json`` file, so the committed baseline can accumulate both records;
-CI regenerates the file and fails on >2x regressions via
-``python -m benchmarks.check_regression``.
+per scheduler *including OASiS itself* on the fused jit engine +
+device-resident price state (``sim_scale``: wall clock, utility, and
+decision p50/mean; always the full T=500 / 100+100-server / 2000-job
+instance — it is the tracked configuration, so ``--quick`` does not
+shrink it).  ``simscale_quick`` records the shrunk instance with the
+oasis column as a separate ``sim_scale_quick`` section — the CI smoke
+that exercises the streaming decision pipeline on every PR.  Sections
+*merge* into an existing ``--json`` file, so the committed baseline can
+accumulate all records; CI regenerates the file and fails on >2x
+regressions via ``python -m benchmarks.check_regression``.
 
 ``--quick`` shrinks the other sections' instance sizes.  The roofline
 table is a separate consumer of the dry-run artifacts:
@@ -39,7 +43,8 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 SECTIONS = ("fig3", "fig4", "fig5", "fig6", "latency", "decision",
-            "simspeed", "scale", "simscale", "scenarios", "kernels")
+            "simspeed", "scale", "simscale", "simscale_quick", "scenarios",
+            "kernels")
 
 
 def _merge_json(path: str, updates: dict) -> None:
@@ -148,10 +153,21 @@ def main() -> None:
     if "scale" in which:
         rows += figs.fig3_scale(quick=args.quick)
     if "simscale" in which:
-        # the tracked 10x configuration: never shrunk by --quick
+        # the tracked 10x configuration (incl. the oasis column on the
+        # fused jit engine): never shrunk by --quick
         scstats: dict = {}
-        rows += figs.fig3_scale(quick=False, stats_out=scstats)
+        rows += figs.fig3_scale(quick=False, include_oasis=True,
+                                stats_out=scstats)
         tracked["sim_scale"] = scstats
+    if "simscale_quick" in which:
+        # CI smoke: the shrunk scale instance with the oasis column, so the
+        # device-resident decision pipeline is exercised on every PR; kept
+        # as a separate record (sim_scale_quick) so it is never diffed
+        # against the full-instance baseline
+        qstats: dict = {}
+        rows += figs.fig3_scale(quick=True, include_oasis=True,
+                                stats_out=qstats)
+        tracked["sim_scale_quick"] = qstats
     if args.json and tracked:
         _merge_json(args.json, tracked)
     if "scenarios" in which:

@@ -8,6 +8,14 @@ cancellation, stragglers, U/L mis-estimation, 10x-paper scale):
 
     PYTHONPATH=src python examples/cluster_sim.py --scenario cancel
     PYTHONPATH=src python examples/cluster_sim.py --scenario straggler --quick
+
+The scale scenario (alias ``scale10x``) accepts ``--scheduler`` to run a
+single scheduler — including OASiS itself on the fused jit engine against
+the device-resident price state — and prints per-decision latency
+percentiles for plan-ahead schedulers:
+
+    PYTHONPATH=src python examples/cluster_sim.py --scenario scale10x \
+        --scheduler oasis --quick
 """
 import argparse
 import os
@@ -18,7 +26,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 
 from repro.sim import make_cluster, make_jobs, simulate
-from repro.sim.scenarios import SCENARIOS, run_scenario
+from repro.sim.scenarios import ALL_SCHEDULERS, SCENARIOS, run_scenario
 
 
 def bar(v, vmax, width=40):
@@ -53,7 +61,11 @@ def run_figs(args):
 
 
 def run_one_scenario(args):
-    rows = run_scenario(args.scenario, seed=args.seed, quick=args.quick)
+    name = "scale" if args.scenario == "scale10x" else args.scenario
+    kw = {}
+    if args.scheduler:
+        kw["schedulers"] = (args.scheduler,)
+    rows = run_scenario(name, seed=args.seed, quick=args.quick, **kw)
     print(f"== scenario: {args.scenario} "
           f"(seed={args.seed}{', quick' if args.quick else ''}) ==")
     vmax = max(r.utility for r in rows)
@@ -63,6 +75,14 @@ def run_one_scenario(args):
               f"acc={r.accepted:4d} comp={r.completed:4d} "
               f"util={r.utilization:5.2f} {r.wall_seconds:7.2f}s{extra}  "
               f"{bar(r.utility, vmax, width=24)}")
+    decided = [r for r in rows if r.decision_p50 is not None]
+    if decided:
+        print("\n== per-decision latency (plan-ahead schedulers) ==")
+        for r in decided:
+            print(f"{r.scheduler:6s} {r.variant:14s} "
+                  f"p50={r.decision_p50*1e3:8.2f}ms "
+                  f"p95={r.decision_p95*1e3:8.2f}ms "
+                  f"mean={r.decision_mean*1e3:8.2f}ms")
 
 
 def main():
@@ -71,13 +91,21 @@ def main():
     ap.add_argument("--T", type=int, default=100)
     ap.add_argument("--servers", type=int, default=20)
     ap.add_argument("--seeds", type=int, default=3)
-    ap.add_argument("--scenario", default=None, choices=sorted(SCENARIOS),
+    ap.add_argument("--scenario", default=None,
+                    choices=sorted(SCENARIOS) + ["scale10x"],
                     help="run a sim-v2 scenario instead of the Fig. 3/4 "
-                         "comparison")
+                         "comparison (scale10x = alias for scale)")
+    ap.add_argument("--scheduler", default=None,
+                    choices=list(ALL_SCHEDULERS),
+                    help="scale scenario only: run this single scheduler "
+                         "(oasis uses the fused jit engine)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--quick", action="store_true",
                     help="shrink the scenario instance")
     args = ap.parse_args()
+    if args.scheduler and args.scenario not in ("scale", "scale10x"):
+        ap.error("--scheduler only applies to --scenario scale/scale10x "
+                 f"(got --scenario {args.scenario})")
     if args.scenario:
         run_one_scenario(args)
     else:

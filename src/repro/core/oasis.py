@@ -1,8 +1,17 @@
-"""Alg. 1 — OASiS online admission + scheduling loop."""
+"""Alg. 1 — OASiS online admission + scheduling loop.
+
+With ``impl="jax"`` decisions stream through the persistent fused engine
+(`core/schedule_jax.py`): compiled executables are keyed by shape bucket
+and read dual prices directly from the device-resident ``PriceState``
+(`core/pricing.py`), whose ``commit``/``release`` apply jit slot-window
+adds instead of re-uploading the full allocation tables per accepted job.
+"""
 from __future__ import annotations
 
 import time
 from typing import Dict, List, Optional
+
+import numpy as np
 
 from .pricing import PriceParams, PriceState
 from .subroutine import best_schedule, best_schedule_ref
@@ -101,12 +110,21 @@ class OASiS:
             self.rejected.append(job.jid)
             return None
         if self.track_duality:
-            p0 = self.state.worker_prices()
-            q0 = self.state.ps_prices()
+            # prices move only inside the committed slot window, so the
+            # Lemma-2 increments are computed from those slots alone
+            # (elementwise prices: unchanged entries difference to exactly
+            # 0.0) instead of materializing the full (T,H,R)+(T,K,R)
+            # exponential tables twice per accepted job
+            w_slots = np.fromiter(sched.workers.keys(), dtype=np.int64,
+                                  count=len(sched.workers))
+            z_slots = np.fromiter(sched.ps.keys(), dtype=np.int64,
+                                  count=len(sched.ps))
+            p0 = self.state.worker_prices_at(w_slots)
+            q0 = self.state.ps_prices_at(z_slots)
         self.state.commit(job, sched.workers, sched.ps)
         if self.track_duality:
-            p1 = self.state.worker_prices()
-            q1 = self.state.ps_prices()
+            p1 = self.state.worker_prices_at(w_slots)
+            q1 = self.state.ps_prices_at(z_slots)
             # ΔD = mu_i + Σ (p' - p) c_h + Σ (q' - q) c_k   (Lemma 2)
             d_delta = sched.payoff
             d_delta += float(((p1 - p0) *

@@ -9,10 +9,33 @@ Prices are maintained per (slot t, server, resource r):
 min unit-time-unit-resource utility scaled by 1/(4*eta).  In the online
 setting the exact values need future knowledge, so the operator supplies
 *estimates* (benchmarks/fig6 sweeps their accuracy).
+
+``PriceState`` keeps the allocation tensors in two representations:
+
+* a **host mirror** (numpy float64) — the source of truth for the numpy
+  backends (``ref``/``fast``/``loop``) and for all read access via the
+  ``g``/``v`` properties; always kept in sync by ``commit``/``release``
+  with the same IEEE ops the pre-device implementation used, so the
+  equivalence suites pin identical semantics;
+* a **device residency** (jax arrays), materialised lazily on the first
+  ``device_state()`` call (one full host→device upload, counted in
+  ``device_uploads``) and then maintained *incrementally*: each
+  ``commit``/``release`` streams only the committed slot window to the
+  device and applies it with a jit-compiled dense window add (buffers
+  donated off-CPU).  The fused jax engine reads prices directly from
+  this resident state, so a long simulation performs O(1) full-state
+  uploads instead of one per accepted job.
+
+Reading the ``g``/``v`` properties hands out the mutable host arrays, so
+it conservatively drops the device residency (the caller may write); the
+jax hot path never touches them — it goes through ``device_state``,
+``capacity_ok`` and ``gpu_slot_usage`` instead.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import functools
 import math
 from typing import Sequence
 
@@ -112,50 +135,268 @@ def price_params_from_jobs(jobs: Sequence[Job], cluster: ClusterSpec,
     return PriceParams(U1=U1, U2=U2, L1=L1, L2=L2)
 
 
+def size_bucket(n: int, floor: int = 32, step: int = 64) -> int:
+    """Size bucket: powers of two up to ``step``, then multiples of ``step``.
+
+    Shared by the fused engine's shape buckets and the price-state's
+    commit-window buckets: balances jit recompiles (few distinct shapes)
+    against padded work (cost is linear in each padded axis)."""
+    b = floor
+    while b < n and b < step:
+        b *= 2
+    if b >= n:
+        return b
+    return ((n + step - 1) // step) * step
+
+
+def _pool_prices(alloc: np.ndarray, caps: np.ndarray, U: np.ndarray,
+                 L: float) -> np.ndarray:
+    """Exponential dual price table  L * (U/L)^(alloc/caps)  (eq. 22/25).
+
+    ``alloc``: (..., S, R) allocation entries; ``caps``: (S, R).  Shared by
+    the full-table ``worker_prices``/``ps_prices`` and the slot-window
+    reads used by duality tracking — entries are priced elementwise, so a
+    window evaluation is bit-identical to the same entries of the full
+    table."""
+    c = np.maximum(caps, 1e-12)
+    ratio = np.maximum(U / L, 1.0 + 1e-9)
+    return L * ratio ** (alloc / c)
+
+
+@functools.lru_cache(maxsize=None)
+def _window_add_jit(donate: bool):
+    """jit'd dense slot-window add: buf[t0:t0+win] += delta (win static per
+    compile via delta's shape, t0 dynamic).  Donated buffers where the
+    backend supports it (donation on CPU only triggers a warning)."""
+    import jax
+
+    import jax.numpy as jnp
+
+    def _add(buf, delta, t0):
+        start = (t0,) + (jnp.zeros_like(t0),) * (buf.ndim - 1)
+        cur = jax.lax.dynamic_slice(buf, start, delta.shape)
+        return jax.lax.dynamic_update_slice(buf, cur + delta, start)
+
+    return jax.jit(_add, donate_argnums=(0,) if donate else ())
+
+
+def _x64_if(dtype) -> contextlib.AbstractContextManager:
+    """enable_x64 context when the device dtype is float64 (CPU policy) —
+    keeps uploads/window ops from being canonicalized down to float32."""
+    if np.dtype(dtype) == np.float64:
+        from jax.experimental import enable_x64
+        return enable_x64(True)
+    return contextlib.nullcontext()
+
+
 class PriceState:
-    """Allocations g_h^r(t), v_k^r(t) and the derived price tables."""
+    """Allocations g_h^r(t), v_k^r(t) and the derived price tables.
+
+    Host mirror + lazily-materialised device residency (module docstring);
+    ``device_uploads`` counts full host→device state syncs — O(1) per
+    simulation on the jax path, not O(accepted jobs)."""
 
     def __init__(self, cluster: ClusterSpec, params: PriceParams):
         self.cluster = cluster
         self.params = params
         T, H, K = cluster.T, cluster.H, cluster.K
-        self.g = np.zeros((T, H, R))   # allocated on worker servers
-        self.v = np.zeros((T, K, R))   # allocated on PS servers
-        # bumped on every commit/release; lets the jit engine cache its
-        # device-side copy of (g, v) between allocation changes
+        self._g_host = np.zeros((T, H, R))   # allocated on worker servers
+        self._v_host = np.zeros((T, K, R))   # allocated on PS servers
+        # bumped on every commit/release (consumers may key caches on it)
         self.version = 0
+        # device residency: (g_dev, v_dev) jax arrays or None; static side
+        # tables (caps + price params) cached per dtype
+        self._dev = None
+        self._dev_dtype = None
+        self._dev_static = {}
+        self._commits_since_sync = 0
+        self.device_uploads = 0
+
+    # -- host views --------------------------------------------------------
+    @property
+    def g(self) -> np.ndarray:
+        """Worker-pool allocation (T, H, R), host numpy.  Hands out the
+        mutable mirror, so the device residency is conservatively dropped
+        (re-uploaded on next ``device_state``)."""
+        self._dev = None
+        return self._g_host
+
+    @g.setter
+    def g(self, value: np.ndarray) -> None:
+        self._g_host = np.asarray(value, dtype=np.float64)
+        self._dev = None
+
+    @property
+    def v(self) -> np.ndarray:
+        self._dev = None
+        return self._v_host
+
+    @v.setter
+    def v(self, value: np.ndarray) -> None:
+        self._v_host = np.asarray(value, dtype=np.float64)
+        self._dev = None
 
     # -- price tables -----------------------------------------------------
     def worker_prices(self) -> np.ndarray:
         """p (T, H, R) with p = L1 * (U1/L1)^(g/c)."""
-        c = np.maximum(self.cluster.worker_caps[None], 1e-12)
-        ratio = np.maximum(self.params.U1[None, None] / self.params.L1, 1.0 + 1e-9)
-        return self.params.L1 * ratio ** (self.g / c)
+        return _pool_prices(self._g_host, self.cluster.worker_caps[None],
+                            self.params.U1[None, None], self.params.L1)
 
     def ps_prices(self) -> np.ndarray:
-        c = np.maximum(self.cluster.ps_caps[None], 1e-12)
-        ratio = np.maximum(self.params.U2[None, None] / self.params.L2, 1.0 + 1e-9)
-        return self.params.L2 * ratio ** (self.v / c)
+        return _pool_prices(self._v_host, self.cluster.ps_caps[None],
+                            self.params.U2[None, None], self.params.L2)
+
+    def worker_prices_at(self, slots: np.ndarray) -> np.ndarray:
+        """Price entries for ``slots`` only, (n, H, R) — bit-identical to
+        ``worker_prices()[slots]`` without materializing the full table.
+        Read-only (keeps the device residency)."""
+        return _pool_prices(self._g_host[slots], self.cluster.worker_caps[None],
+                            self.params.U1[None, None], self.params.L1)
+
+    def ps_prices_at(self, slots: np.ndarray) -> np.ndarray:
+        return _pool_prices(self._v_host[slots], self.cluster.ps_caps[None],
+                            self.params.U2[None, None], self.params.L2)
 
     # -- bookkeeping (Alg. 1 lines 7-10) -----------------------------------
-    def commit(self, job: Job, workers: dict, ps: dict) -> None:
-        for t, y in workers.items():
-            self.g[t] += y[:, None] * job.worker_res[None, :]
-        for t, z in ps.items():
-            self.v[t] += z[:, None] * job.ps_res[None, :]
+    def _window_delta(self, alloc: dict, res: np.ndarray, T: int,
+                      sign: float):
+        """Dense (win, S, R) slot-window delta for one commit/release.
+
+        The window spans [t0, t0+win) with ``win`` bucketed (few distinct
+        jit shapes); slots inside the window but absent from ``alloc``
+        carry an exact 0.0 delta."""
+        ts = np.fromiter(alloc.keys(), dtype=np.int64, count=len(alloc))
+        t0, t1 = int(ts.min()), int(ts.max())
+        win = min(size_bucket(t1 - t0 + 1, floor=8, step=64), T)
+        t0 = min(t0, T - win)
+        counts = np.stack([alloc[int(t)] for t in ts]).astype(np.float64)
+        delta = np.zeros((win, counts.shape[1], R))
+        delta[ts - t0] = sign * (counts[:, :, None] * res[None, None, :])
+        return t0, delta
+
+    def _apply(self, workers: dict, ps: dict, wres: np.ndarray,
+               sres: np.ndarray, sign: float) -> None:
+        T = self.cluster.T
+        deltas = []
+        if workers and self.cluster.H:
+            deltas.append((0, self._g_host) + self._window_delta(
+                workers, wres, T, sign))
+        if ps and self.cluster.K:
+            deltas.append((1, self._v_host) + self._window_delta(
+                ps, sres, T, sign))
+        for _, host, t0, delta in deltas:
+            host[t0:t0 + delta.shape[0]] += delta
+        if self._dev is not None and deltas:
+            if np.dtype(self._dev_dtype) != np.float64 and (
+                    sign < 0
+                    or self._commits_since_sync >= self._F32_RESYNC_EVERY):
+                # float32 residency (GPU/TPU): incremental adds round per
+                # commit, so the residency slowly drifts from the float64
+                # mirror, and (g + d) - d is not exact at all, so a
+                # release would leave phantom allocation behind.  Resync
+                # from the mirror on every release (rare: cancellations /
+                # fault handling) and every _F32_RESYNC_EVERY commits —
+                # the drift stays bounded at O(uploads) ~
+                # O(accepts / 256 + cancels), not O(accepted jobs).
+                self._dev = None
+            else:
+                self._device_apply(deltas)
+                self._commits_since_sync += 1
         self.version += 1
+
+    def _device_apply(self, deltas) -> None:
+        """Stream the slot-window deltas to the resident device arrays."""
+        import jax
+        import jax.numpy as jnp
+        add = _window_add_jit(jax.default_backend() != "cpu")
+        dev = list(self._dev)
+        with _x64_if(self._dev_dtype):
+            for pool, _, t0, delta in deltas:
+                dev[pool] = add(dev[pool],
+                                jnp.asarray(delta, self._dev_dtype),
+                                np.int32(t0))
+        self._dev = tuple(dev)
+
+    def commit(self, job: Job, workers: dict, ps: dict) -> None:
+        self._apply(workers, ps, job.worker_res, job.ps_res, 1.0)
 
     def release(self, job: Job, workers: dict, ps: dict) -> None:
         """Inverse of commit — used when a running job is preempted/killed
         (fault handling), not part of the paper's committed schedules."""
-        for t, y in workers.items():
-            self.g[t] -= y[:, None] * job.worker_res[None, :]
-        for t, z in ps.items():
-            self.v[t] -= z[:, None] * job.ps_res[None, :]
-        self.version += 1
+        self._apply(workers, ps, job.worker_res, job.ps_res, -1.0)
 
     def headroom_workers(self, t: int) -> np.ndarray:
-        return self.cluster.worker_caps - self.g[t]
+        return self.cluster.worker_caps - self._g_host[t]
 
     def headroom_ps(self, t: int) -> np.ndarray:
-        return self.cluster.ps_caps - self.v[t]
+        return self.cluster.ps_caps - self._v_host[t]
+
+    # -- whole-state queries (no host/device churn) -------------------------
+    def capacity_ok(self, tol: float = 1e-6):
+        """(workers_ok, ps_ok): no allocation entry exceeds capacity."""
+        ok_w = bool(np.all(self._g_host
+                           <= self.cluster.worker_caps[None] + tol))
+        ok_p = bool(np.all(self._v_host <= self.cluster.ps_caps[None] + tol))
+        return ok_w, ok_p
+
+    def gpu_slot_usage(self) -> np.ndarray:
+        """(T,) worker-pool GPU units in use per slot (resource 0)."""
+        return self._g_host[:, :, 0].sum(axis=1)
+
+    # -- device residency ---------------------------------------------------
+    def _static_arrays(self, dtype):
+        key = np.dtype(dtype).str
+        cached = self._dev_static.get(key)
+        if cached is not None:
+            return cached
+        import jax.numpy as jnp
+        wcaps, scaps = self.cluster.worker_caps, self.cluster.ps_caps
+        # empty pools are padded with one zero-capacity server so engine
+        # gathers stay in bounds (it can never be used)
+        if wcaps.shape[0] == 0:
+            wcaps = np.zeros((1, R))
+        if scaps.shape[0] == 0:
+            scaps = np.zeros((1, R))
+        pp = self.params
+        with _x64_if(dtype):
+            sd = (jnp.asarray(wcaps, dtype), jnp.asarray(scaps, dtype),
+                  jnp.asarray(pp.U1, dtype), jnp.asarray(pp.U2, dtype),
+                  jnp.asarray(pp.L1, dtype), jnp.asarray(pp.L2, dtype))
+        self._dev_static[key] = sd
+        return sd
+
+    # full f32-residency resync cadence (see _apply); f64 never resyncs —
+    # its incremental adds are bit-identical to the mirror's
+    _F32_RESYNC_EVERY = 256
+
+    def _upload(self, dtype):
+        import jax.numpy as jnp
+        self._commits_since_sync = 0
+        g, v = self._g_host, self._v_host
+        if g.shape[1] == 0:
+            g = np.zeros((self.cluster.T, 1, R))
+        if v.shape[1] == 0:
+            v = np.zeros((self.cluster.T, 1, R))
+        self.device_uploads += 1
+        # jnp.array (not asarray): jax CPU conversion can be zero-copy for
+        # aligned buffers, and an aliased residency would silently track
+        # (and double-count) subsequent host-mirror writes
+        with _x64_if(dtype):
+            return (jnp.array(g, dtype, copy=True),
+                    jnp.array(v, dtype, copy=True))
+
+    def device_state(self, dtype=None):
+        """Engine view ``(g, v, wcaps, scaps, U1, U2, L1, L2)`` on device.
+
+        The first call uploads the full state (counted in
+        ``device_uploads``); afterwards ``commit``/``release`` keep the
+        residency fresh incrementally, so repeat calls are free.  Empty
+        pools are padded with one zero-capacity server."""
+        if dtype is None:
+            import jax
+            dtype = (np.float64 if jax.default_backend() == "cpu"
+                     else np.float32)
+        if self._dev is None or np.dtype(self._dev_dtype) != np.dtype(dtype):
+            self._dev_dtype = np.dtype(dtype)
+            self._dev = self._upload(dtype)
+        return self._dev + self._static_arrays(dtype)

@@ -33,7 +33,7 @@ import numpy as np
 
 from ..kernels.minplus.kernel import minplus_sweep_pallas
 from ..kernels.minplus.ref import minplus_sweep_cost, minplus_sweep_ref
-from .pricing import PriceState
+from .pricing import PriceState, size_bucket as _bucket
 from .types import Job, R, Schedule
 
 # Stand-in for "unbounded" per-server instance capacity (job has no demand
@@ -237,50 +237,15 @@ def _decide_many(sd, jds, d1: int):
 # Python wrappers: padding, bucketing, Schedule construction
 # ---------------------------------------------------------------------------
 
-def _bucket(n: int, floor: int = 32, step: int = 64) -> int:
-    """Size bucket: powers of two up to ``step``, then multiples of ``step``.
-
-    Balances jit recompiles (few distinct shapes) against padded DP work
-    (cost is linear in each padded axis)."""
-    b = floor
-    while b < n and b < step:
-        b *= 2
-    if b >= n:
-        return b
-    return ((n + step - 1) // step) * step
-
-
 def _state_arrays(state: PriceState, dtype):
-    """Pack the price state for the engine.  Empty pools are padded with one
-    zero-capacity server so gathers stay in bounds (it can never be used).
+    """Engine view of the price state: the device-resident allocation
+    tensors plus static caps/params (``PriceState.device_state``).
 
-    Cached on the state object keyed by ``state.version`` (bumped by
-    commit/release) so rejected arrivals between commits pay no host→device
-    transfer.  Rebinding ``state.g``/``state.v`` wholesale also invalidates:
-    the cache holds strong references to the keyed arrays and compares with
-    ``is``, so a replacement array can never alias a freed one's id."""
-    cached = getattr(state, "_engine_cache", None)
-    if (cached is not None and cached[0] == state.version
-            and cached[1] is state.g and cached[2] is state.v
-            and cached[3] == np.dtype(dtype).str):
-        return cached[4]
-    T = state.cluster.T
-    g, wcaps = state.g, state.cluster.worker_caps
-    v, scaps = state.v, state.cluster.ps_caps
-    if wcaps.shape[0] == 0:
-        wcaps = np.zeros((1, R))
-        g = np.zeros((T, 1, R))
-    if scaps.shape[0] == 0:
-        scaps = np.zeros((1, R))
-        v = np.zeros((T, 1, R))
-    pp = state.params
-    sd = (jnp.asarray(g, dtype), jnp.asarray(v, dtype),
-          jnp.asarray(wcaps, dtype), jnp.asarray(scaps, dtype),
-          jnp.asarray(pp.U1, dtype), jnp.asarray(pp.U2, dtype),
-          jnp.asarray(pp.L1, dtype), jnp.asarray(pp.L2, dtype))
-    state._engine_cache = (state.version, state.g, state.v,
-                           np.dtype(dtype).str, sd)
-    return sd
+    The first call per state uploads the full tensors once; afterwards
+    ``commit``/``release`` maintain the residency with streamed slot-window
+    adds, so a sequential simulation performs O(1) full uploads instead of
+    re-uploading (T,H,R)+(T,K,R) after every accepted job."""
+    return state.device_state(dtype)
 
 
 def _job_arrays(job: Job, T: int, m_pad: int, dtype):

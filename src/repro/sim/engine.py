@@ -21,10 +21,14 @@ ops over dense per-job state:
   vectorized batch-round kernels of ``core/repack.py`` (placement-equal
   to the seed's greedy loops, ``tests/test_repack.py``).
 * **OASiS**: schedules are committed at arrival, so arrivals are the only
-  plan events; per-slot GPU usage is accumulated into a dense ``(T,)``
-  tensor at commit time and capacity feasibility is one ``(T, H, R)``
-  array comparison against the price-state's allocation tensor instead of
-  a per-slot Python walk.
+  plan events; arrival bursts go through the batched (vmapped on
+  ``impl="jax"``) ``on_arrivals`` path, per-slot GPU usage is read
+  straight off the price-state's allocation tensor
+  (``PriceState.gpu_slot_usage``), and capacity feasibility is one
+  whole-state comparison (``PriceState.capacity_ok``) instead of a
+  per-slot Python walk.  On ``impl="jax"`` the price state is
+  device-resident with commits streamed as slot-window adds, so the whole
+  run performs O(1) full host↔device syncs (``PriceState.device_uploads``).
 
 On cancellation-free, unperturbed workloads the engine is equivalence-
 tested against the v1 loop (utilities, accept/complete counts, completion
@@ -170,7 +174,6 @@ def _run_oasis(cluster: ClusterSpec, jobs: Sequence[Job],
     osched = OASiS(cluster, params, impl=impl)
 
     total_gpu = max(float(cluster.worker_caps[:, 0].sum()), 1e-9)
-    gpu_slots = np.zeros(T)                     # GPU-units in use per slot
     canceled: set = set()
 
     for t in sorted(set(by_slot) | set(cancel_slot)):
@@ -181,19 +184,16 @@ def _run_oasis(cluster: ClusterSpec, jobs: Sequence[Job],
             tail_w = {tt: y for tt, y in sched.workers.items() if tt >= t}
             tail_z = {tt: z for tt, z in sched.ps.items() if tt >= t}
             osched.state.release(jmap[jid], tail_w, tail_z)
-            for tt, y in tail_w.items():
-                gpu_slots[tt] -= float(y.sum()) * jmap[jid].worker_res[0]
             canceled.add(jid)
         batch = [_with_quantum(job, quantum) for job in by_slot.get(t, ())]
-        for job, s in zip(batch, osched.on_arrivals(batch)):
-            if s is not None:
-                for tt, y in s.workers.items():
-                    gpu_slots[tt] += float(y.sum()) * job.worker_res[0]
+        osched.on_arrivals(batch)
         if check:
-            assert np.all(osched.state.g <= cluster.worker_caps[None] + 1e-6), \
-                "worker capacity violated"
-            assert np.all(osched.state.v <= cluster.ps_caps[None] + 1e-6), \
-                "PS capacity violated"
+            # whole-state comparison on the price-state's own books — no
+            # per-schedule Python walk and no device→host churn on the
+            # jax path (the host mirror is maintained incrementally)
+            ok_w, ok_ps = osched.state.capacity_ok()
+            assert ok_w, "worker capacity violated"
+            assert ok_ps, "PS capacity violated"
 
     completion: Dict[int, int] = {}
     for jid, sched in osched.accepted.items():
@@ -221,6 +221,9 @@ def _run_oasis(cluster: ClusterSpec, jobs: Sequence[Job],
         # the reactive path's convention
         total_utility = sum(jmap[jid].utility(tdone - jmap[jid].arrival)
                             for jid, tdone in completion.items())
+    # per-slot GPU usage straight off the allocation tensor (commits add,
+    # cancellation releases subtract), replacing the per-schedule dict walk
+    gpu_slots = osched.state.gpu_slot_usage()
     return SimResult(name="oasis", total_utility=total_utility,
                      accepted=len(osched.accepted), completed=len(completion),
                      n_jobs=len(jobs), completion=completion,

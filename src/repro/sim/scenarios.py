@@ -164,14 +164,26 @@ class ScenarioResult:
     canceled: int
     utilization: float
     wall_seconds: float
+    # per-decision latency stats (plan-ahead schedulers only; None for the
+    # reactive baselines, which have no per-arrival decision procedure)
+    decision_p50: Optional[float] = None
+    decision_mean: Optional[float] = None
+    decision_p95: Optional[float] = None
 
 
 def _row(scenario: str, variant: str, r: engine.SimResult,
          wall: float) -> ScenarioResult:
+    dec = np.asarray(r.decision_seconds)
+    stats = {}
+    if dec.size:
+        stats = dict(decision_p50=float(np.percentile(dec, 50)),
+                     decision_mean=float(dec.mean()),
+                     decision_p95=float(np.percentile(dec, 95)))
     return ScenarioResult(scenario=scenario, scheduler=r.name, variant=variant,
                           utility=r.total_utility, accepted=r.accepted,
                           completed=r.completed, canceled=r.canceled,
-                          utilization=r.utilization, wall_seconds=wall)
+                          utilization=r.utilization, wall_seconds=wall,
+                          **stats)
 
 
 def _timed(scenario: str, variant: str, *args, **kw) -> ScenarioResult:
@@ -251,13 +263,16 @@ def run_scale(seed: int = 0, quick: bool = False,
     """The fig3-shaped workload an order of magnitude past the paper's
     T=100 / 100-server / 200-job setting.  Reactive baselines by default;
     pass ``schedulers=("oasis", ...)`` to include the (decision-bound)
-    OASiS run."""
+    OASiS run — it uses the fused jit engine against the device-resident
+    price state (``impl="jax"``), the configuration the ``sim_scale``
+    record in BENCH_decision.json tracks."""
     if quick:
         T, H, K, n = (SCALE_DIMS_QUICK[k] for k in ("T", "H", "K", "n"))
     cluster = make_cluster(T=T, H=H, K=K)
     jobs = make_jobs(n, T=T, seed=seed, small=False)
     return [_timed("scale", f"T={T};n={n}", cluster, jobs, scheduler=s,
-                   check=True, quantum=0 if s == "oasis" else None)
+                   check=True,
+                   **(dict(quantum=0, impl="jax") if s == "oasis" else {}))
             for s in schedulers]
 
 

@@ -1,0 +1,66 @@
+"""benchmarks/check_regression gate: leaf extraction for the scale
+sections (incl. the new oasis decision-latency leaves) and the hard
+refusal on quick-vs-full configuration mismatches (PR 4)."""
+from benchmarks.check_regression import _leaves, check
+
+
+def _doc(quick_dec=True, scale_T=500, oasis_p50=0.2, fifo_wall=1.0,
+         quick_scale=False):
+    return {
+        "schema": "bench_decision/v2",
+        "decision_seconds": {"jax": {"p50": 0.01}, "quick": quick_dec},
+        "sim_scale": {
+            "T": scale_T, "H": 100, "K": 100, "n_jobs": 2000,
+            "quick": quick_scale,
+            "wall_seconds": {"fifo": fifo_wall, "oasis": 600.0},
+            "decision": {"oasis": {"p50": oasis_p50, "mean": 0.3}},
+        },
+    }
+
+
+def test_leaves_include_scale_decision_p50():
+    paths = dict(_leaves(_doc()))
+    assert paths["sim_scale.wall_seconds.oasis"] == 600.0
+    assert paths["sim_scale.decision.oasis.p50"] == 0.2
+    assert "sim_scale.decision.oasis.mean" not in paths   # p50 is the gate
+
+
+def test_matching_configs_compare_and_gate():
+    base, fresh = _doc(), _doc(oasis_p50=0.25, fifo_wall=1.5)
+    assert check(base, fresh, ratio=2.0) == 0
+    worse = _doc(oasis_p50=0.9)                            # 4.5x regression
+    assert check(base, worse, ratio=2.0) == 1
+
+
+def test_quick_flag_mismatch_refuses():
+    """A quick fresh section must never be silently diffed against a
+    full-mode baseline: the gate refuses (exit 2) unless explicitly
+    downgraded to a skip."""
+    base, fresh = _doc(quick_dec=False), _doc(quick_dec=True)
+    assert check(base, fresh, ratio=2.0) == 2
+    assert check(fresh, base, ratio=2.0) == 2              # and vice versa
+    assert check(base, fresh, ratio=2.0, allow_config_mismatch=True) == 0
+
+
+def test_scale_dims_mismatch_refuses():
+    base, fresh = _doc(), _doc(scale_T=150, quick_scale=True)
+    assert check(base, fresh, ratio=2.0) == 2
+    assert check(base, fresh, ratio=2.0, allow_config_mismatch=True) == 0
+
+
+def test_missing_sections_are_not_gated():
+    base = _doc()
+    fresh = {"schema": "bench_decision/v2",
+             "decision_seconds": {"jax": {"p50": 0.01}, "quick": True}}
+    assert check(base, fresh, ratio=2.0) == 0
+
+
+def test_section_missing_entirely_does_not_phantom_refuse():
+    """A fresh file from e.g. `--only simscale` has no decision_seconds
+    section at all; the quick-flag refusal must not fire on the fallback
+    quick=False of the absent section — missing sections are reported as
+    MISS, never a config mismatch."""
+    base = _doc(quick_dec=True)
+    fresh = {"schema": "bench_decision/v2", "sim_scale": _doc()["sim_scale"]}
+    assert check(base, fresh, ratio=2.0) == 0
+    assert check(fresh, base, ratio=2.0) == 0
