@@ -154,18 +154,24 @@ def sim_v2_speedup(T: int = 100, H: int = 20, K: int = 20, n: int = 60,
 
 
 def fig3_scale(quick: bool = False, include_oasis: bool = False,
+               include_learned: bool = False,
                stats_out: Optional[dict] = None) -> List[str]:
     """fig3 at 10x the paper setting (T=500, 100+100 servers, 2000 jobs) on
     the sim-v2 engine; the v1 per-slot loop cannot finish this in
     reasonable time (see sim_v2_speedup for the controlled comparison).
 
     ``include_oasis=True`` adds the paper's own scheduler on the fused jit
-    engine + device-resident price state (``impl="jax"``).  ``stats_out``
-    receives machine-readable per-scheduler wall clocks, utilities, and —
-    for plan-ahead schedulers — per-decision latency stats (the
-    ``sim_scale`` record tracked in ``BENCH_decision.json`` — see
-    ``benchmarks.run --only simscale``)."""
+    engine + device-resident price state (``impl="jax"``);
+    ``include_learned=True`` adds the rl/ policy scheduler (untrained
+    seed-init net — a decision-pipeline wall-clock column, not a quality
+    claim; the trained-policy quality row lives in the ``rl`` section).
+    ``stats_out`` receives machine-readable per-scheduler wall clocks,
+    utilities, and — for plan-ahead schedulers — per-decision latency
+    stats (the ``sim_scale`` record tracked in ``BENCH_decision.json`` —
+    see ``benchmarks.run --only simscale``)."""
     scheds = scenarios.ALL_SCHEDULERS if include_oasis else scenarios.REACTIVE
+    if include_learned:
+        scheds = tuple(scheds) + ("learned",)
     rows = []
     results = scenarios.run_scale(seed=0, quick=quick, schedulers=scheds)
     for r in results:
@@ -187,6 +193,56 @@ def fig3_scale(quick: bool = False, include_oasis: bool = False,
                                        "mean": r.decision_mean,
                                        "p95": r.decision_p95}
                          for r in results if r.decision_p50 is not None},
+        })
+    return rows
+
+
+def rl_scoreboard(train_budget_seconds: float = 270.0,
+                  iterations: int = 160, eval_seeds=(5, 6, 7),
+                  quick: bool = False,
+                  stats_out: Optional[dict] = None) -> List[str]:
+    """The learned-scheduler acceptance row: train the rl/ policy for at
+    most ``train_budget_seconds`` on CPU (REINFORCE + DL2-style warm
+    start, paper-scale congested instances, training seeds disjoint from
+    ``eval_seeds``) and evaluate greedy vs FIFO on the held-out seeded
+    paper-scale instances.  ``--quick`` shrinks everything to a smoke
+    (tiny instance, 2 iterations) whose numbers are pipeline checks, not
+    quality claims.  ``stats_out`` receives the ``rl`` record for
+    BENCH_decision.json."""
+    from repro.rl.policy import PolicyConfig
+    from repro.rl.train import TrainConfig, evaluate, smoke_config, train
+
+    if quick:
+        cfg, pcfg = smoke_config()
+    else:
+        cfg = TrainConfig(iterations=iterations,
+                          budget_seconds=train_budget_seconds)
+        pcfg = PolicyConfig()
+    t0 = time.perf_counter()
+    params, history = train(cfg, pcfg, log=None)
+    train_seconds = time.perf_counter() - t0
+    ev = evaluate(params, pcfg, eval_seeds, cfg=cfg,
+                  schedulers=("learned", "fifo"))
+    rows = []
+    for name, stats in ev.items():
+        rows.append(f"rl_scoreboard[{name};mean],0,"
+                    f"{stats['mean_utility']:.2f}")
+        for s, v in stats["per_seed"].items():
+            rows.append(f"rl_scoreboard[{name};seed={s}],0,{v:.2f}")
+    rows.append(f"rl_scoreboard[train],{train_seconds*1e6:.0f},"
+                f"{len(history)}")
+    if stats_out is not None:
+        stats_out.update({
+            "quick": bool(quick),
+            "train_seconds": train_seconds,
+            "train_iterations": len(history),
+            "eval_seeds": [int(s) for s in eval_seeds],
+            "instance": {"T": cfg.T, "H": cfg.H, "K": cfg.K,
+                         "n_jobs": cfg.n_jobs},
+            "utility": {name: stats["mean_utility"]
+                        for name, stats in ev.items()},
+            "per_seed": {name: stats["per_seed"]
+                         for name, stats in ev.items()},
         })
     return rows
 

@@ -44,7 +44,101 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 SECTIONS = ("fig3", "fig4", "fig5", "fig6", "latency", "decision",
             "simspeed", "scale", "simscale", "simscale_quick", "scenarios",
-            "kernels")
+            "rl", "kernels")
+
+
+def _is_num(x) -> bool:
+    import math
+    return isinstance(x, (int, float)) and not isinstance(x, bool) \
+        and math.isfinite(x)
+
+
+def _num_dict(sec: str, name: str, d, problems) -> None:
+    if not isinstance(d, dict) or not all(_is_num(v) for v in d.values()):
+        problems.append(f"{sec}.{name}: expected dict of finite numbers")
+
+
+def validate_tracked(payload: dict) -> list:
+    """Structural validation of a bench_decision/v2 payload.
+
+    Returns a list of problems (empty = valid).  ``_merge_json`` refuses
+    to write an invalid file: a malformed section used to be caught only
+    much later, by ``check_regression`` diffing against it — by which
+    time the broken file was already committed as the baseline."""
+    problems = []
+    if payload.get("schema") != "bench_decision/v2":
+        problems.append(f"schema: expected 'bench_decision/v2', "
+                        f"got {payload.get('schema')!r}")
+    known = {"schema", "platform", "python", "decision_seconds", "sim_v2",
+             "sim_scale", "sim_scale_quick", "rl"}
+    for sec in sorted(set(payload) - known):
+        problems.append(f"{sec}: unknown section (known: {sorted(known)})")
+
+    def _section(name):
+        """Present section, or None; a non-dict section is a problem,
+        not an AttributeError (the baseline file on disk may be
+        arbitrarily corrupted — that is what this validator guards)."""
+        sec = payload.get(name)
+        if sec is None or isinstance(sec, dict):
+            return sec
+        problems.append(f"{name}: expected dict section, "
+                        f"got {type(sec).__name__}")
+        return None
+
+    dec = _section("decision_seconds")
+    if dec is not None:
+        for impl, stats in dec.items():
+            if impl == "quick":
+                if not isinstance(stats, bool):
+                    problems.append("decision_seconds.quick: expected bool")
+            elif isinstance(stats, dict):
+                if not {"p50", "p95", "mean"} <= set(stats) or \
+                        not all(_is_num(stats[k])
+                                for k in ("p50", "p95", "mean")):
+                    problems.append(f"decision_seconds.{impl}: needs "
+                                    "finite p50/p95/mean")
+            elif not _is_num(stats):
+                problems.append(f"decision_seconds.{impl}: expected "
+                                "stats dict or number")
+    sim = _section("sim_v2")
+    if sim is not None:
+        for key, stats in sim.items():
+            if key == "quick":
+                continue
+            if isinstance(stats, dict):
+                _num_dict("sim_v2", key, stats, problems)
+            elif not _is_num(stats):
+                problems.append(f"sim_v2.{key}: expected number")
+    for sec in ("sim_scale", "sim_scale_quick"):
+        scale = _section(sec)
+        if scale is None:
+            continue
+        for dim in ("T", "H", "K", "n_jobs"):
+            if not isinstance(scale.get(dim), int):
+                problems.append(f"{sec}.{dim}: expected int")
+        _num_dict(sec, "wall_seconds", scale.get("wall_seconds"), problems)
+        _num_dict(sec, "utility", scale.get("utility"), problems)
+        decision = scale.get("decision") or {}
+        if not isinstance(decision, dict):
+            problems.append(f"{sec}.decision: expected dict")
+            decision = {}
+        for sched, stats in decision.items():
+            if not isinstance(stats, dict) or not all(
+                    v is None or _is_num(v) for v in stats.values()):
+                problems.append(f"{sec}.decision.{sched}: expected dict of "
+                                "numbers/nulls")
+    rl = _section("rl")
+    if rl is not None:
+        if not _is_num(rl.get("train_seconds")):
+            problems.append("rl.train_seconds: expected finite number")
+        _num_dict("rl", "utility", rl.get("utility"), problems)
+        per_seed = rl.get("per_seed") or {}
+        if not isinstance(per_seed, dict):
+            problems.append("rl.per_seed: expected dict")
+            per_seed = {}
+        for name, per in per_seed.items():
+            _num_dict("rl", f"per_seed.{name}", per, problems)
+    return problems
 
 
 def _merge_json(path: str, updates: dict) -> None:
@@ -53,7 +147,10 @@ def _merge_json(path: str, updates: dict) -> None:
     Existing sections not re-measured this run are preserved, so e.g.
     ``--only simscale`` does not drop the decision-latency record.  Each
     section carries its own ``quick`` flag (sections can be measured
-    under different modes), so there is no top-level one."""
+    under different modes), so there is no top-level one.  The merged
+    payload is validated against the bench_decision/v2 schema BEFORE
+    writing; a malformed section aborts the run instead of poisoning the
+    committed baseline."""
     payload = {}
     if os.path.exists(path):
         try:
@@ -70,6 +167,13 @@ def _merge_json(path: str, updates: dict) -> None:
         "platform": platform.platform(),
         "python": platform.python_version(),
     })
+    problems = validate_tracked(payload)
+    if problems:
+        print(f"# NOT writing {path}: payload fails bench_decision/v2 "
+              "validation:", file=sys.stderr)
+        for p in problems:
+            print(f"#   {p}", file=sys.stderr)
+        raise SystemExit(1)
     with open(path, "w") as fh:
         json.dump(payload, fh, indent=2, sort_keys=True)
     print(f"# wrote {path}", file=sys.stderr)
@@ -160,14 +264,22 @@ def main() -> None:
                                 stats_out=scstats)
         tracked["sim_scale"] = scstats
     if "simscale_quick" in which:
-        # CI smoke: the shrunk scale instance with the oasis column, so the
-        # device-resident decision pipeline is exercised on every PR; kept
-        # as a separate record (sim_scale_quick) so it is never diffed
+        # CI smoke: the shrunk scale instance with the oasis AND learned
+        # columns, so the device-resident decision pipeline and the rl/
+        # policy decision pipeline are exercised on every PR; kept as a
+        # separate record (sim_scale_quick) so it is never diffed
         # against the full-instance baseline
         qstats: dict = {}
         rows += figs.fig3_scale(quick=True, include_oasis=True,
-                                stats_out=qstats)
+                                include_learned=True, stats_out=qstats)
         tracked["sim_scale_quick"] = qstats
+    if "rl" in which:
+        # the learned-scheduler acceptance row: budgeted CPU training +
+        # held-out eval vs FIFO (quality claim lives here; the
+        # sim_scale_quick learned column is wall-clock only)
+        rlstats: dict = {}
+        rows += figs.rl_scoreboard(quick=args.quick, stats_out=rlstats)
+        tracked["rl"] = rlstats
     if args.json and tracked:
         _merge_json(args.json, tracked)
     if "scenarios" in which:

@@ -11,11 +11,18 @@ cancellation, stragglers, U/L mis-estimation, 10x-paper scale):
 
 The scale scenario (alias ``scale10x``) accepts ``--scheduler`` to run a
 single scheduler — including OASiS itself on the fused jit engine against
-the device-resident price state — and prints per-decision latency
-percentiles for plan-ahead schedulers:
+the device-resident price state, and the rl/ subsystem's learned policy
+scheduler — and prints per-decision latency percentiles for plan-ahead
+schedulers:
 
     PYTHONPATH=src python examples/cluster_sim.py --scenario scale10x \
         --scheduler oasis --quick
+    PYTHONPATH=src python examples/cluster_sim.py --scenario scale10x \
+        --scheduler learned --policy-ckpt runs/learned --quick
+
+(``--policy-ckpt`` points at a ``repro.rl.train`` checkpoint directory;
+without it the learned column runs an untrained seed-initialized net —
+a pipeline exercise, not a quality claim.)
 """
 import argparse
 import os
@@ -35,7 +42,7 @@ def bar(v, vmax, width=40):
 
 
 def run_figs(args):
-    totals = {}
+    summaries = {}
     gaps = {}
     for seed in range(args.seeds):
         cluster = make_cluster(T=args.T, H=args.servers, K=args.servers)
@@ -43,15 +50,23 @@ def run_figs(args):
         for name in ["oasis", "fifo", "drf", "rrh", "dorm"]:
             kw = dict(quantum=0) if name == "oasis" else {}
             r = simulate(cluster, jobs, scheduler=name, check=False, **kw)
-            totals.setdefault(name, []).append(r.total_utility)
+            summaries.setdefault(name, []).append(r.summary())
             if r.target_gap:
                 gaps.setdefault(name, []).extend(r.target_gap)
 
-    print(f"== total job utility (mean of {args.seeds} seeds; Fig. 3) ==")
-    means = {k: float(np.mean(v)) for k, v in totals.items()}
+    def mean_of(name, key):
+        vals = [s[key] for s in summaries[name] if s[key] is not None]
+        return float(np.mean(vals)) if vals else float("nan")
+
+    print(f"== per-scheduler episode summary "
+          f"(mean of {args.seeds} seeds; Fig. 3) ==")
+    means = {k: mean_of(k, "total_utility") for k in summaries}
     vmax = max(means.values())
     for k, v in sorted(means.items(), key=lambda kv: -kv[1]):
-        print(f"{k:6s} {v:9.1f}  {bar(v, vmax)}")
+        print(f"{k:6s} {v:9.1f}  acc={mean_of(k, 'accept_rate'):5.2f} "
+              f"comp={mean_of(k, 'completion_rate'):5.2f} "
+              f"p50-lat={mean_of(k, 'p50_latency'):6.1f} "
+              f"p95-lat={mean_of(k, 'p95_latency'):6.1f}  {bar(v, vmax)}")
 
     print("\n== completion - target time (mean abs; Fig. 4) ==")
     for k in means:
@@ -65,6 +80,8 @@ def run_one_scenario(args):
     kw = {}
     if args.scheduler:
         kw["schedulers"] = (args.scheduler,)
+    if args.policy_ckpt:
+        kw["policy_ckpt"] = args.policy_ckpt
     rows = run_scenario(name, seed=args.seed, quick=args.quick, **kw)
     print(f"== scenario: {args.scenario} "
           f"(seed={args.seed}{', quick' if args.quick else ''}) ==")
@@ -96,9 +113,14 @@ def main():
                     help="run a sim-v2 scenario instead of the Fig. 3/4 "
                          "comparison (scale10x = alias for scale)")
     ap.add_argument("--scheduler", default=None,
-                    choices=list(ALL_SCHEDULERS),
+                    choices=list(ALL_SCHEDULERS) + ["learned"],
                     help="scale scenario only: run this single scheduler "
-                         "(oasis uses the fused jit engine)")
+                         "(oasis uses the fused jit engine; learned runs "
+                         "the rl/ policy scheduler)")
+    ap.add_argument("--policy-ckpt", default=None,
+                    help="checkpoint directory from repro.rl.train for "
+                         "--scheduler learned (default: untrained "
+                         "seed-initialized policy)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--quick", action="store_true",
                     help="shrink the scenario instance")
@@ -106,6 +128,8 @@ def main():
     if args.scheduler and args.scenario not in ("scale", "scale10x"):
         ap.error("--scheduler only applies to --scenario scale/scale10x "
                  f"(got --scenario {args.scenario})")
+    if args.policy_ckpt and args.scheduler != "learned":
+        ap.error("--policy-ckpt only applies to --scheduler learned")
     if args.scenario:
         run_one_scenario(args)
     else:

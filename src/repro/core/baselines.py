@@ -57,7 +57,15 @@ def _place(count: int, free: np.ndarray, demand: np.ndarray) -> Optional[np.ndar
 
 
 class ReactiveScheduler:
-    """Base class: admit-all, allocate per slot."""
+    """Base class: admit-all, allocate per slot.
+
+    Admission is split into ``would_admit`` (the pure decision) and
+    ``enroll`` (the state mutation) so an external decider — the rl/
+    subsystem's learned policy, or a replay policy asserting env/engine
+    equivalence — can substitute its own decision while reusing the
+    scheduler's allocation machinery.  ``on_arrival`` composes the two and
+    is the unchanged entry point for the simulators.
+    """
 
     name = "base"
 
@@ -71,12 +79,22 @@ class ReactiveScheduler:
         self.dirty = True
 
     # -- events -------------------------------------------------------------
-    def on_arrival(self, job: Job, t: int) -> bool:
+    def would_admit(self, job: Job, t: int) -> bool:
+        """The scheduler's own admission decision (no state change)."""
+        return True          # admit-all
+
+    def enroll(self, job: Job, t: int) -> None:
+        """Admit ``job`` unconditionally (bookkeeping only)."""
         self.jobs[job.jid] = job
         self.unfinished.append(job.jid)
         self.pool.add(job)
         self.dirty = True
-        return True          # admit-all
+
+    def on_arrival(self, job: Job, t: int) -> bool:
+        if not self.would_admit(job, t):
+            return False
+        self.enroll(job, t)
+        return True
 
     def on_completion(self, jid: int, t: int) -> None:
         if jid in self.unfinished:
@@ -238,17 +256,19 @@ class RRH(ReactiveScheduler):
         # static parts of the resume-order key, precomputed at admission
         self._meta: Dict[int, Tuple[int, int, int, float]] = {}
 
-    def on_arrival(self, job: Job, t: int) -> bool:
+    def would_admit(self, job: Job, t: int) -> bool:
         nw, _ = self._counts(job)
         est_dur = math.ceil(job.total_work_slots / max(nw, 1))
         backlog = len(self.unfinished)
         reward = job.utility(est_dur) - self.delay_penalty * backlog
-        if reward <= self.threshold:
-            return False
+        return reward > self.threshold
+
+    def enroll(self, job: Job, t: int) -> None:
         nw, nps = self._counts(job)
+        est_dur = math.ceil(job.total_work_slots / max(nw, 1))
         self._meta[job.jid] = (nw, nps, est_dur,
                                max(nw * job.worker_res.sum(), 1e-9))
-        return super().on_arrival(job, t)
+        super().enroll(job, t)
 
     def on_completion(self, jid: int, t: int) -> None:
         super().on_completion(jid, t)
@@ -359,4 +379,38 @@ class Dorm(ReactiveScheduler):
                                   self.pool, self.unfinished)
 
 
-BASELINES = {"fifo": FIFO, "drf": DRF, "rrh": RRH, "dorm": Dorm}
+class Learned(FIFO):
+    """FIFO allocation machinery with *per-job* worker/PS counts chosen by
+    an external policy at admission (the rl/ subsystem's action space).
+
+    A job admitted with counts ``(nw, nps)`` holds exactly that allocation
+    from the moment it fits until completion; waiting jobs start in
+    arrival order with FIFO head-of-line blocking.  With no counts set
+    this degenerates to FIFO verbatim (``_counts`` falls back to the
+    fixed-worker rule), which is the anchor of the env/engine equivalence
+    suite: a policy that replays FIFO's counts must reproduce the FIFO
+    run bit-for-bit.
+    """
+
+    name = "learned"
+
+    def __init__(self, cluster: ClusterSpec, fixed_workers: int = 8):
+        super().__init__(cluster, fixed_workers=fixed_workers)
+        self.counts_for: Dict[int, Tuple[int, int]] = {}
+
+    def set_counts(self, jid: int, nw: int, nps: int) -> None:
+        """Pin the worker/PS counts the next ``step`` will allocate."""
+        self.counts_for[jid] = (int(nw), int(nps))
+
+    def _counts(self, job: Job) -> Tuple[int, int]:
+        if job.jid in self.counts_for:
+            return self.counts_for[job.jid]
+        return super()._counts(job)
+
+    def on_completion(self, jid: int, t: int) -> None:
+        super().on_completion(jid, t)
+        self.counts_for.pop(jid, None)
+
+
+BASELINES = {"fifo": FIFO, "drf": DRF, "rrh": RRH, "dorm": Dorm,
+             "learned": Learned}

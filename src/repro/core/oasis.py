@@ -51,7 +51,12 @@ class OASiS:
         self.dual_deltas: List[float] = []
 
     # -- Alg. 1 "upon arrival of job i" ------------------------------------
-    def on_arrival(self, job: Job) -> Optional[Schedule]:
+    def propose(self, job: Job) -> Optional[Schedule]:
+        """Alg. 2 candidate at current prices (no commitment, no state
+        change beyond latency accounting).  ``None`` means no schedule has
+        positive payoff — Alg. 1 would reject.  Split from ``on_arrival``
+        so an external decider (the rl/ env's admission gate) can veto or
+        confirm the commitment."""
         t0 = time.perf_counter()
         if self.impl == "ref":
             sched = best_schedule_ref(job, self.state)
@@ -62,7 +67,10 @@ class OASiS:
         else:
             sched = best_schedule(job, self.state)
         self.decision_seconds.append(time.perf_counter() - t0)
-        return self._resolve(job, sched)
+        return sched
+
+    def on_arrival(self, job: Job) -> Optional[Schedule]:
+        return self._resolve(job, self.propose(job))
 
     def on_arrivals(self, jobs: List[Job]) -> List[Optional[Schedule]]:
         """Batched arrivals: decide all jobs in one vmapped engine call.

@@ -343,6 +343,14 @@ class PriceState:
         """(T,) worker-pool GPU units in use per slot (resource 0)."""
         return self._g_host[:, :, 0].sum(axis=1)
 
+    def alloc_window(self, t0: int, w: int):
+        """Per-slot pool-total allocation for slots ``[t0, t0+w)``:
+        ``(g_win, v_win)`` of shape (min(w, T-t0), R) each, summed over
+        servers.  Read-only (keeps the device residency) — the rl/ env's
+        capacity-window observation reads this instead of ``g``/``v``."""
+        return (self._g_host[t0:t0 + w].sum(axis=1),
+                self._v_host[t0:t0 + w].sum(axis=1))
+
     # -- device residency ---------------------------------------------------
     def _static_arrays(self, dtype):
         key = np.dtype(dtype).str

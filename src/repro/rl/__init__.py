@@ -1,0 +1,16 @@
+"""Learned-scheduler subsystem (Decima / DL2 direction).
+
+``env``     — Gymnasium-style ``ClusterSchedulingEnv`` exposing the sim-v2
+              engine as a stepwise per-arrival decision process (exactly
+              equivalence-tested against ``sim.engine.run`` for OASiS and
+              all four reactive baselines, tests/test_rl_env.py).
+``policy``  — jax policy network (MLP + single-head attention over the
+              capacity window, built from ``models/layers.py`` specs) and
+              the ``LearnedDecider`` adapter that plugs a trained policy
+              into ``engine.run(scheduler="learned")``.
+``train``   — REINFORCE-with-baseline training loop (optax, vmapped
+              batched rollouts, checkpointing via ``ckpt/checkpoint.py``).
+"""
+from . import env, policy
+
+__all__ = ["env", "policy"]

@@ -1,0 +1,282 @@
+"""Gymnasium-style cluster-scheduling environment over sim v2.
+
+One episode = one job trace driven through ``sim/engine.py``; one env
+step = one per-arrival admission decision (the engine's
+:class:`~repro.sim.engine.DecisionPoint`).  Everything between decisions
+— placements, repacks, fast-forwarded work accounting, completions — is
+the event engine itself, so the env inherits sim v2's semantics *and*
+its speed.
+
+* **observation** — a flat float vector: dense job features (demand,
+  workload, deadline/utility shape) + the decision point's per-slot free
+  capacity window for both pools + queue/congestion scalars
+  (:func:`observe`).
+* **action** — ``(workers, ps_slack)``: admit with ``workers`` workers
+  and ``ps_for(workers) + ps_slack`` parameter servers, or reject with
+  ``workers == 0``.  A bare int is accepted (slack 0).  Actions are
+  clamped to the job's feasibility envelope (at most ``num_chunks``
+  concurrent workers, at least the bandwidth-matched PS count), so no
+  action can request a capacity-violating allocation; the engine's
+  placement kernels never over-commit servers regardless.
+* **reward** — the paper's objective: utility of completed jobs, paid
+  when completion happens between this decision and the next (terminal
+  step pays the tail), so the un-discounted episode return equals
+  ``SimResult.total_utility`` exactly.
+
+``scheduler`` selects the allocation machinery the decisions drive:
+``"learned"`` (FIFO-queue machinery with per-job counts — the action is
+consumed literally) or any named scheduler (``"oasis"``/``"fifo"``/
+``"drf"``/``"rrh"``/``"dorm"`` — the action gates admission, allocation
+follows the scheduler's own kernels).  In every mode
+``info["expert_action"]`` is the action replaying the named scheduler's
+own decision; feeding it back (:class:`ReplayPolicy`) reproduces
+``sim.engine.run`` bit-for-bit (tests/test_rl_env.py).
+
+Gymnasium is an optional dependency: when importable the env subclasses
+``gymnasium.Env`` with real ``spaces``; otherwise a minimal stand-in
+keeps the exact same ``reset``/``step`` API.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.types import R, ClusterSpec, Job
+from ..sim import engine
+from ..sim.engine import DECISION_WINDOW, DecisionPoint, SimResult
+from ..sim.workload import make_cluster, make_jobs
+
+try:                                         # optional dependency
+    import gymnasium as _gym
+    from gymnasium import spaces as _spaces
+except ImportError:                          # pragma: no cover - CI has no gym
+    _gym = None
+    _spaces = None
+
+# observation layout: job/context scalars + two capacity windows
+N_SCALAR_FEATURES = 24
+OBS_DIM = N_SCALAR_FEATURES + 2 * DECISION_WINDOW * R
+# index of the best-achievable-utility feature (utility at min_duration,
+# scaled by 1/100) in the scalar block — the trainer's warm-start expert
+# reads it back out of the observation
+F_BEST_UTILITY = 8
+
+# default action bounds: worker head 0..MAX_WORKERS, PS slack head 0..3
+MAX_WORKERS = 32
+PS_SLACK_LEVELS = 4
+
+
+def paper_instance(seed: int, T: int = 100, H: int = 50, K: int = 50,
+                   n_jobs: int = 200, small: bool = False
+                   ) -> Tuple[ClusterSpec, Sequence[Job]]:
+    """The paper-scale instance family (ROADMAP: T=100, 100 servers,
+    200 jobs).  ``small=True`` is the equivalence-suite variant (shrunk
+    job internals, fast Alg. 2); ``small=False`` is the congested fig3
+    workload the learned policy trains on."""
+    return (make_cluster(T=T, H=H, K=K),
+            make_jobs(n_jobs, T=T, seed=seed, small=small))
+
+
+def observe(dp: DecisionPoint, cluster: ClusterSpec) -> np.ndarray:
+    """Flat observation vector for one decision point (shape (OBS_DIM,))."""
+    job = dp.job
+    T = max(cluster.T, 1)
+    u = job.utility
+    g1 = float(getattr(u, "gamma1", 0.0))
+    g2 = float(getattr(u, "gamma2", 0.0))
+    g3 = float(getattr(u, "gamma3", 0.0))
+    mean_w = np.maximum(cluster.worker_caps.mean(axis=0), 1e-9) \
+        if cluster.H else np.full(R, 1e-9)
+    mean_s = np.maximum(cluster.ps_caps.mean(axis=0), 1e-9) \
+        if cluster.K else np.full(R, 1e-9)
+    best = float(u(job.min_duration))
+    seen = dp.accepted + dp.rejected
+    scalars = np.array([
+        dp.t / T,
+        job.num_chunks / 100.0,
+        np.log1p(job.total_work_slots) / 8.0,
+        job.min_duration / T,
+        min(job.chunk_time, 2.0),
+        g1 / 100.0,
+        min(g2, 6.0) / 6.0,
+        g3 / T,
+        best / 100.0,
+        float(u(2.0 * job.min_duration)) / 100.0,   # deadline-decay probe
+        *(job.worker_res / mean_w),
+        *(job.ps_res / mean_s),
+        job.ps_for(8) / 8.0,
+        dp.n_running / 64.0,
+        dp.n_waiting / 64.0,
+        dp.accepted / max(seen, 1),
+    ])
+    assert scalars.shape[0] == N_SCALAR_FEATURES
+    return np.concatenate([scalars,
+                           dp.free_frac_workers.ravel(),
+                           dp.free_frac_ps.ravel()]).astype(np.float32)
+
+
+def split_action(action) -> Tuple[int, int]:
+    """Normalize an env action to ``(workers, ps_slack)``."""
+    if action is None:
+        return 0, 0
+    if np.ndim(action) == 0:
+        return int(action), 0
+    a = np.asarray(action).ravel()
+    return int(a[0]), int(a[1]) if a.size > 1 else 0
+
+def engine_action(dp: DecisionPoint, action) -> Optional[Tuple[int, int]]:
+    """Translate an env action into the engine's ``(n_workers, n_ps)``
+    decision, clamped to the job's feasibility envelope.  ``None``
+    rejects."""
+    w, slack = split_action(action)
+    if w <= 0:
+        return None
+    job = dp.job
+    w = min(w, job.num_chunks)
+    return w, job.ps_for(w) + max(slack, 0)
+
+
+def expert_env_action(dp: DecisionPoint) -> np.ndarray:
+    """The env action replaying the wrapped scheduler's own decision."""
+    nw, _ = dp.expert
+    return np.array([nw, 0], dtype=np.int64)
+
+
+_EnvBase = _gym.Env if _gym is not None else object
+
+
+class ClusterSchedulingEnv(_EnvBase):
+    """Per-arrival scheduling decisions over one sim-v2 episode.
+
+    Parameters
+    ----------
+    instance_fn : ``seed -> (cluster, jobs)``; defaults to
+        :func:`paper_instance` with ``**instance_kwargs``.  ``reset``
+        draws a fresh trace from it per episode (``options["instance"]``
+        overrides the seed), so the same env object trains across many
+        seeded instances.
+    scheduler : allocation machinery (see module docstring).
+    check : assert capacity feasibility inside the engine every repack.
+    engine_kwargs : forwarded to ``engine.decisions`` (``params``,
+        ``impl``, ``quantum``, ``cancellations``, ``throughput``, ...).
+    """
+
+    metadata: Dict = {"render_modes": []}
+
+    def __init__(self, instance_fn: Optional[Callable] = None,
+                 scheduler: str = "learned",
+                 max_workers: int = MAX_WORKERS,
+                 ps_slack_levels: int = PS_SLACK_LEVELS,
+                 check: bool = False, seed: int = 0,
+                 instance_kwargs: Optional[Dict] = None,
+                 **engine_kwargs):
+        self.instance_fn = instance_fn or (
+            lambda s: paper_instance(s, **(instance_kwargs or {})))
+        self.scheduler = scheduler
+        self.max_workers = int(max_workers)
+        self.ps_slack_levels = int(ps_slack_levels)
+        self.check = check
+        self.engine_kwargs = engine_kwargs
+        self._instance_seed = seed
+        if _spaces is not None:
+            self.action_space = _spaces.MultiDiscrete(
+                np.array([self.max_workers + 1, self.ps_slack_levels]))
+            self.observation_space = _spaces.Box(
+                -np.inf, np.inf, shape=(OBS_DIM,), dtype=np.float32)
+        else:                                   # gym-less stand-in
+            self.action_space = (self.max_workers + 1, self.ps_slack_levels)
+            self.observation_space = (OBS_DIM,)
+        self.cluster: Optional[ClusterSpec] = None
+        self.jobs: Sequence[Job] = ()
+        self._gen = None
+        self._dp: Optional[DecisionPoint] = None
+        self._paid = 0.0
+        self._done = True
+        self.result: Optional[SimResult] = None
+
+    # -- episode control ----------------------------------------------------
+    def reset(self, *, seed: Optional[int] = None,
+              options: Optional[Dict] = None):
+        if _gym is not None:
+            super().reset(seed=seed)
+        if options and "instance" in options:
+            self._instance_seed = int(options["instance"])
+        elif seed is not None:
+            self._instance_seed = int(seed)
+        self.cluster, self.jobs = self.instance_fn(self._instance_seed)
+        self._instance_seed += 1                # next reset: fresh trace
+        self._gen = engine.decisions(
+            self.cluster, self.jobs, scheduler=self.scheduler,
+            check=self.check, **self.engine_kwargs)
+        self.result = None
+        self._paid = 0.0
+        self._done = False
+        obs, info = self._advance(None)
+        if self._done:
+            # empty trace: episode is already over; the first step()
+            # terminates immediately whatever the action
+            info = dict(info, empty_trace=True)
+        return obs, info
+
+    def step(self, action):
+        assert self._gen is not None, "call reset() first"
+        if self._done:
+            return (np.zeros(OBS_DIM, np.float32), 0.0, True, False,
+                    self._terminal_info())
+        send = engine_action(self._dp, action)
+        obs, info = self._advance(send)
+        if self._done:
+            reward = float(self.result.total_utility) - self._paid
+            self._paid = float(self.result.total_utility)
+            return obs, reward, True, False, self._terminal_info()
+        reward = self._dp.utility_so_far - self._paid
+        self._paid = self._dp.utility_so_far
+        return obs, reward, False, False, info
+
+    # -- internals ----------------------------------------------------------
+    def _advance(self, send):
+        try:
+            if self._dp is None:                # fresh generator (reset)
+                self._dp = next(self._gen)
+            else:                               # answer the paused decision
+                self._dp = self._gen.send(send)
+            return observe(self._dp, self.cluster), self._step_info()
+        except StopIteration as stop:
+            self.result = stop.value
+            self._done = True
+            self._dp = None
+            return np.zeros(OBS_DIM, np.float32), {}
+
+    def _step_info(self) -> Dict:
+        dp = self._dp
+        return {"jid": dp.job.jid, "t": dp.t, "scheduler": dp.scheduler,
+                "expert_action": expert_env_action(dp),
+                "n_running": dp.n_running, "n_waiting": dp.n_waiting}
+
+    def _terminal_info(self) -> Dict:
+        return {"result": self.result, "summary": self.result.summary()}
+
+
+@dataclasses.dataclass
+class ReplayPolicy:
+    """Feeds back ``info["expert_action"]`` — the wrapped scheduler's own
+    decision — so the env provably replays ``sim.engine.run``."""
+
+    def __call__(self, obs: np.ndarray, info: Dict) -> np.ndarray:
+        return info["expert_action"]
+
+
+def run_episode(env: ClusterSchedulingEnv,
+                policy: Callable[[np.ndarray, Dict], object],
+                seed: Optional[int] = None) -> SimResult:
+    """Drive one full episode; returns the engine's ``SimResult``."""
+    obs, info = env.reset(seed=seed)
+    done = info.get("empty_trace", False)
+    total = 0.0
+    while not done:
+        obs, reward, done, _, info = env.step(policy(obs, info))
+        total += reward
+    assert abs(total - env.result.total_utility) < 1e-6
+    return env.result

@@ -1,0 +1,251 @@
+"""jax policy network for the cluster-scheduling env.
+
+Architecture (small, CPU-trainable in seconds per iteration):
+
+* the observation's two capacity windows (2W slot tokens of R free-
+  capacity fractions each, tagged with slot offset + pool id) go through
+  a **single-head attention read-out**: keys/values from the tokens, the
+  query from the embedded job features — "which upcoming slots matter
+  for this job";
+* the job embedding and the attention context feed a silu MLP trunk with
+  an rms-normed residual stream (``models/layers.py`` primitives);
+* two categorical heads: worker count (0 = reject, else 1..max_workers)
+  and PS slack (extra parameter servers on top of the bandwidth-matched
+  minimum).
+
+Parameters are built from ``models.layers.P`` specs via ``init_params``
+— the same spec machinery the transformer blocks use — so the policy
+checkpoints through ``ckpt/checkpoint.py`` like any other model tree.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+from pathlib import Path
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..ckpt import checkpoint
+from ..core.types import R
+from ..models.layers import P, init_params, rmsnorm
+from ..sim.engine import DECISION_WINDOW, DecisionPoint
+from . import env as env_mod
+
+N_TOKENS = 2 * DECISION_WINDOW          # worker window + PS window
+TOKEN_DIM = R + 2                       # free fractions + slot pos + pool id
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyConfig:
+    """The worker head picks a *multiplier on the expert's worker count*
+    (0 = reject) instead of an absolute count: the heuristic prior
+    ("×1") is then a single constant logit pattern — trivially stable
+    under noisy policy gradients — and exploration only has to rank the
+    few ``worker_levels``, not 33 counts.  ``level_to_workers`` maps
+    back to the env's count action, capped at ``max_workers``."""
+
+    obs_dim: int = env_mod.OBS_DIM
+    d_model: int = 64
+    worker_levels: Tuple[float, ...] = (0.0, 0.5, 1.0, 1.5, 2.0)
+    max_workers: int = env_mod.MAX_WORKERS
+    ps_slack_levels: int = env_mod.PS_SLACK_LEVELS
+
+    @property
+    def n_worker_actions(self) -> int:
+        return len(self.worker_levels)
+
+    @property
+    def expert_level(self) -> int:
+        return self.worker_levels.index(1.0)
+
+    @property
+    def n_scalars(self) -> int:
+        return self.obs_dim - N_TOKENS * R
+
+    def level_to_workers(self, level: int, expert_workers: int) -> int:
+        """Env worker-count action for one sampled level."""
+        mult = self.worker_levels[int(level)]
+        if mult <= 0.0 or expert_workers <= 0:
+            return 0
+        return int(np.clip(round(mult * expert_workers), 1,
+                           self.max_workers))
+
+
+def policy_spec(cfg: PolicyConfig) -> Dict:
+    d = cfg.d_model
+    return {
+        "job": {"w": P((cfg.n_scalars, d), (None, "embed")),
+                "b": P((d,), (None,), "zeros")},
+        "tok": {"w": P((TOKEN_DIM, d), (None, "embed"))},
+        "attn": {"q": P((d, d), ("embed", "heads")),
+                 "k": P((d, d), ("embed", "heads")),
+                 "v": P((d, d), ("embed", "heads"))},
+        "norm": {"w": P((2 * d,), (None,), "zeros")},
+        "mlp": {"w1": P((2 * d, d), ("embed", "mlp")),
+                "b1": P((d,), (None,), "zeros"),
+                "w2": P((d, d), ("mlp", "embed")),
+                "b2": P((d,), (None,), "zeros")},
+        "head_w": {"w": P((d, cfg.n_worker_actions), ("embed", None),
+                          scale=0.01),
+                   "b": P((cfg.n_worker_actions,), (None,), "zeros")},
+        "head_s": {"w": P((d, cfg.ps_slack_levels), ("embed", None),
+                          scale=0.01),
+                   "b": P((cfg.ps_slack_levels,), (None,), "zeros")},
+    }
+
+
+def policy_init(key: jax.Array, cfg: PolicyConfig) -> Dict:
+    return init_params(key, policy_spec(cfg), dtype=jnp.float32)
+
+
+# static per-token tags: slot offset within the window, pool id
+_TOKEN_TAGS = np.concatenate([
+    np.stack([np.arange(DECISION_WINDOW) / DECISION_WINDOW,
+              np.zeros(DECISION_WINDOW)], axis=1),
+    np.stack([np.arange(DECISION_WINDOW) / DECISION_WINDOW,
+              np.ones(DECISION_WINDOW)], axis=1),
+]).astype(np.float32)                    # (2W, 2)
+
+
+def policy_logits(params: Dict, obs: jax.Array,
+                  cfg: PolicyConfig) -> Tuple[jax.Array, jax.Array]:
+    """(worker-head logits, slack-head logits) for one observation."""
+    scalars = obs[:cfg.n_scalars]
+    tokens = obs[cfg.n_scalars:].reshape(N_TOKENS, R)
+    tokens = jnp.concatenate([tokens, jnp.asarray(_TOKEN_TAGS)], axis=1)
+    x = scalars @ params["job"]["w"] + params["job"]["b"]        # (d,)
+    tok = tokens @ params["tok"]["w"]                            # (2W, d)
+    q = x @ params["attn"]["q"]
+    k = tok @ params["attn"]["k"]
+    v = tok @ params["attn"]["v"]
+    a = jax.nn.softmax(k @ q / jnp.sqrt(jnp.asarray(q.shape[-1], x.dtype)))
+    ctx = a @ v                                                  # (d,)
+    h = rmsnorm(jnp.concatenate([x, ctx]), params["norm"]["w"])
+    h = jax.nn.silu(h @ params["mlp"]["w1"] + params["mlp"]["b1"])
+    h = h + jax.nn.silu(h @ params["mlp"]["w2"] + params["mlp"]["b2"])
+    return (h @ params["head_w"]["w"] + params["head_w"]["b"],
+            h @ params["head_s"]["w"] + params["head_s"]["b"])
+
+
+def sample_action(params: Dict, obs: jax.Array, key: jax.Array,
+                  cfg: PolicyConfig) -> Tuple[jax.Array, jax.Array]:
+    """Sample ``(action (2,), joint log-prob)`` for one observation."""
+    lw, ls = policy_logits(params, obs, cfg)
+    kw, ks = jax.random.split(key)
+    aw = jax.random.categorical(kw, lw)
+    asl = jax.random.categorical(ks, ls)
+    logp = (jax.nn.log_softmax(lw)[aw] + jax.nn.log_softmax(ls)[asl])
+    return jnp.stack([aw, asl]), logp
+
+
+def greedy_action(params: Dict, obs: jax.Array,
+                  cfg: PolicyConfig) -> jax.Array:
+    lw, ls = policy_logits(params, obs, cfg)
+    return jnp.stack([jnp.argmax(lw), jnp.argmax(ls)])
+
+
+def action_log_prob(params: Dict, obs: jax.Array, action: jax.Array,
+                    cfg: PolicyConfig) -> Tuple[jax.Array, jax.Array]:
+    """(joint log-prob of ``action``, summed head entropy) — the
+    REINFORCE loss terms for one (obs, action) pair."""
+    lw, ls = policy_logits(params, obs, cfg)
+    lpw, lps = jax.nn.log_softmax(lw), jax.nn.log_softmax(ls)
+    ent = -(jnp.exp(lpw) @ lpw) - (jnp.exp(lps) @ lps)
+    return lpw[action[0]] + lps[action[1]], ent
+
+
+# ---------------------------------------------------------------------------
+# checkpointing (ckpt/checkpoint.py: manifest + crc32'd npz, atomic publish)
+# ---------------------------------------------------------------------------
+
+def save_policy(ckpt_dir: str, params: Dict, cfg: PolicyConfig,
+                step: int = 0, extra: Optional[Dict] = None) -> Path:
+    meta = {"policy_cfg": dataclasses.asdict(cfg), **(extra or {})}
+    return checkpoint.save(ckpt_dir, step, params, extra=meta)
+
+
+def load_policy(ckpt_dir: str, step: Optional[int] = None
+                ) -> Tuple[Dict, PolicyConfig, Dict]:
+    """Restore ``(params, cfg, extra)`` from the latest (or given) step."""
+    if step is None:
+        step = checkpoint.latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir!r}")
+    manifest = json.loads(
+        (Path(ckpt_dir) / f"ckpt_{step}" / "manifest.json").read_text())
+    raw = dict(manifest["extra"]["policy_cfg"])
+    raw["worker_levels"] = tuple(raw["worker_levels"])   # json list -> tuple
+    cfg = PolicyConfig(**raw)
+    target = policy_init(jax.random.PRNGKey(0), cfg)
+    params, extra = checkpoint.restore(ckpt_dir, step, target)
+    return params, cfg, extra
+
+
+# ---------------------------------------------------------------------------
+# engine adapter
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _greedy_jit(cfg: PolicyConfig):
+    """One compiled greedy forward pass per config (jit caches on
+    function identity, so a fresh ``jax.jit(lambda ...)`` per decider
+    would retrace every time)."""
+    return jax.jit(lambda p, o: greedy_action(p, o, cfg))
+
+
+@functools.lru_cache(maxsize=None)
+def _sample_jit(cfg: PolicyConfig):
+    return jax.jit(lambda p, o, k: sample_action(p, o, k, cfg)[0])
+
+
+class LearnedDecider:
+    """``engine.run(..., policy=...)``-compatible callable around a policy.
+
+    Greedy by default (deterministic eval); ``greedy=False`` samples with
+    a seeded key stream.  The observation needs the cluster spec, which
+    the engine does not pass — it is bound at construction.
+    """
+
+    def __init__(self, params: Dict, cfg: PolicyConfig, cluster,
+                 greedy: bool = True, seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.cluster = cluster
+        self.greedy = greedy
+        self._key = jax.random.PRNGKey(seed)
+        if greedy:
+            self._fn = _greedy_jit(cfg)
+            warm_args = ()
+        else:
+            self._fn = _sample_jit(cfg)
+            warm_args = (self._key,)
+        # compile now (a cache hit after the first decider per config):
+        # the engine times every policy call into decision_seconds, and
+        # the one-off jit compile would otherwise be recorded as the
+        # first decision's latency
+        self._fn(self.params, jnp.zeros(cfg.obs_dim, jnp.float32),
+                 *warm_args)
+
+    def __call__(self, dp: DecisionPoint):
+        obs = jnp.asarray(env_mod.observe(dp, self.cluster))
+        if self.greedy:
+            action = self._fn(self.params, obs)
+        else:
+            self._key, sub = jax.random.split(self._key)
+            action = self._fn(self.params, obs, sub)
+        level, slack = np.asarray(action)
+        w = self.cfg.level_to_workers(int(level), int(dp.expert[0]))
+        return env_mod.engine_action(dp, (w, int(slack)))
+
+
+def default_policy(cluster, seed: int = 0,
+                   cfg: Optional[PolicyConfig] = None) -> LearnedDecider:
+    """A deterministic seed-initialized (untrained) policy decider — the
+    CI smoke column's stand-in when no checkpoint is supplied."""
+    cfg = cfg or PolicyConfig()
+    return LearnedDecider(policy_init(jax.random.PRNGKey(seed), cfg), cfg,
+                          cluster, greedy=True)

@@ -51,21 +51,38 @@ slots) in ``tests/test_sim_v2.py``.  Two scenario hooks go beyond v1:
   called per (job, slot) in the original order, one slot at a time, still
   vectorized across jobs.  An OASiS job whose committed schedule
   under-delivers its total work is *not* completed and earns nothing.
+
+Both loops are written as *decision generators*: every per-arrival
+admission is a decision point that can be handed to an external decider.
+``run(..., policy=None)`` consumes the generator internally with each
+scheduler's own decisions — that path never yields and is the unchanged
+sim-v2 semantics the equivalence suites pin.  ``run(..., policy=fn)``
+(or driving :func:`decisions` step by step, as the rl/ env does) yields a
+:class:`DecisionPoint` per arrival and applies the answer through the
+same machinery: for ``scheduler="learned"`` the action is the per-job
+(worker, PS) count or reject; for the named schedulers the action gates
+admission while allocation follows the scheduler's own kernels, so a
+policy replaying the expert action reproduces ``run`` exactly
+(tests/test_rl_env.py).
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+import time
+from typing import Callable, Dict, Generator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core.baselines import BASELINES, ReactiveScheduler
+from ..core.baselines import BASELINES, Learned, ReactiveScheduler
 from ..core.oasis import OASiS
 from ..core.pricing import PriceParams, price_params_from_jobs
-from ..core.types import ClusterSpec, Job
+from ..core.types import ClusterSpec, Job, Schedule
 
 ThroughputFn = Callable[[Job, int, int], float]
+
+# slots of look-ahead in DecisionPoint capacity windows (rl/ observations)
+DECISION_WINDOW = 8
 
 
 @dataclasses.dataclass
@@ -80,6 +97,97 @@ class SimResult:
     decision_seconds: List[float]
     utilization: float                      # mean worker-pool GPU utilization
     canceled: int = 0                       # jobs departed mid-run (sim v2)
+    arrivals: Dict[int, int] = dataclasses.field(default_factory=dict)
+
+    def summary(self) -> Dict[str, object]:
+        """Episode-level digest: accept/completion rates, latency
+        percentiles (completion slot minus arrival), total utility.
+        Shared by ``examples/cluster_sim.py`` and the rl/ env's terminal
+        info dict; latency stats are ``None`` when nothing completed."""
+        lat = np.array([self.completion[j] - self.arrivals[j]
+                        for j in self.completion if j in self.arrivals],
+                       dtype=float)
+        n = max(self.n_jobs, 1)
+        return {
+            "scheduler": self.name,
+            "n_jobs": self.n_jobs,
+            "accepted": self.accepted,
+            "completed": self.completed,
+            "canceled": self.canceled,
+            "accept_rate": self.accepted / n,
+            "completion_rate": self.completed / n,
+            "total_utility": float(self.total_utility),
+            "mean_latency": float(lat.mean()) if lat.size else None,
+            "p50_latency": float(np.percentile(lat, 50)) if lat.size else None,
+            "p95_latency": float(np.percentile(lat, 95)) if lat.size else None,
+            "utilization": float(self.utilization),
+        }
+
+
+@dataclasses.dataclass
+class DecisionPoint:
+    """One per-arrival admission decision, yielded by :func:`decisions`.
+
+    ``expert`` is the action that replays the wrapped scheduler's own
+    decision — ``(n_workers, n_ps)`` with ``n_workers == 0`` meaning
+    reject.  For plan-ahead OASiS the counts carry no meaning beyond
+    admit/reject (the commitment is ``candidate``, Alg. 2's best
+    schedule); for the reactive baselines the counts are informational
+    (allocation follows the scheduler's own repack) and only
+    ``scheduler="learned"`` consumes them literally.
+
+    ``free_frac_workers``/``free_frac_ps`` are (DECISION_WINDOW, R)
+    per-slot *free* capacity fractions of each pool over ``[t, t+W)``
+    (slots at/after T read 0.0 — there is no capacity past the horizon);
+    the reactive baselines' allocation is constant between events, so the
+    current snapshot is tiled across the window.
+    """
+
+    job: Job
+    t: int
+    scheduler: str
+    expert: Tuple[int, int]
+    candidate: Optional[Schedule]
+    utility_so_far: float
+    n_running: int
+    n_waiting: int
+    accepted: int
+    rejected: int
+    free_frac_workers: np.ndarray
+    free_frac_ps: np.ndarray
+
+
+def _as_counts(action) -> Tuple[int, int]:
+    """Normalize a decider's answer to ``(n_workers, n_ps)``; ``n_ps``
+    of -1 means "derive the minimum feasible PS count"."""
+    if action is None or action is False:
+        return 0, -1
+    if isinstance(action, (tuple, list, np.ndarray)):
+        a = np.asarray(action).ravel()
+        return max(int(a[0]), 0), int(a[1]) if a.size > 1 else -1
+    return max(int(action), 0), -1
+
+
+def _free_window(used_w: np.ndarray, used_s: np.ndarray,
+                 cluster: ClusterSpec, t: int) -> Tuple[np.ndarray, np.ndarray]:
+    """(W, R) per-slot free-capacity fractions of both pools from
+    per-slot pool-total usage (slots at/after T read 0.0 — no capacity
+    past the horizon).  A (R,) snapshot is tiled across the window (the
+    reactive baselines' allocation is constant between events)."""
+    W = DECISION_WINDOW
+    cap_w = np.maximum(cluster.worker_caps.sum(axis=0), 1e-9)
+    cap_s = np.maximum(cluster.ps_caps.sum(axis=0), 1e-9)
+    fw = np.zeros((W, cap_w.shape[0]))
+    fs = np.zeros((W, cap_s.shape[0]))
+    if used_w.ndim == 1:
+        used_w = np.tile(used_w, (W, 1))
+        used_s = np.tile(used_s, (W, 1))
+    fw[:used_w.shape[0]] = np.clip(1.0 - used_w / cap_w, 0.0, 1.0)
+    fs[:used_s.shape[0]] = np.clip(1.0 - used_s / cap_s, 0.0, 1.0)
+    live = max(min(cluster.T - t, W), 0)
+    fw[live:] = 0.0
+    fs[live:] = 0.0
+    return fw, fs
 
 
 def _with_quantum(job: Job, quantum: Optional[int]) -> Job:
@@ -140,33 +248,109 @@ def _check_alloc(cluster: ClusterSpec, jmap: Dict[int, Job],
             "PS capacity violated"
 
 
+def decisions(cluster: ClusterSpec, jobs: Sequence[Job],
+              scheduler: str = "oasis",
+              params: Optional[PriceParams] = None, impl: str = "fast",
+              fixed_workers: int = 8, check: bool = True,
+              quantum: Optional[int] = None,
+              cancellations: Optional[Dict[int, int]] = None,
+              throughput: Optional[ThroughputFn] = None
+              ) -> Generator[DecisionPoint, object, SimResult]:
+    """The engine as a stepwise decision process (the rl/ env's substrate).
+
+    Yields a :class:`DecisionPoint` per arrival; the caller ``send``s the
+    action — ``(n_workers, n_ps)``, a bare worker count, or ``None``/0 to
+    reject — and the final :class:`SimResult` is the generator's return
+    value (``StopIteration.value``).
+    """
+    if scheduler == "oasis":
+        return _drive_oasis(cluster, jobs, params, impl, check, quantum,
+                            cancellations, throughput, decide=True)
+    return _drive_reactive(cluster, jobs, scheduler, fixed_workers, check,
+                           quantum, cancellations, throughput, decide=True)
+
+
+def _exhaust(gen) -> SimResult:
+    try:
+        next(gen)
+    except StopIteration as e:
+        return e.value
+    raise RuntimeError("engine yielded a decision point without a policy")
+
+
 def run(cluster: ClusterSpec, jobs: Sequence[Job], scheduler: str = "oasis",
         params: Optional[PriceParams] = None, impl: str = "fast",
         fixed_workers: int = 8, check: bool = True,
         quantum: Optional[int] = None,
         cancellations: Optional[Dict[int, int]] = None,
-        throughput: Optional[ThroughputFn] = None) -> SimResult:
+        throughput: Optional[ThroughputFn] = None,
+        policy: Optional[Callable[[DecisionPoint], object]] = None
+        ) -> SimResult:
     """Drive ``scheduler`` through the trace event-by-event.
 
     Same contract as the v1 ``simulate`` plus the scenario hooks
-    documented in the module docstring.
+    documented in the module docstring.  ``policy`` (required for
+    ``scheduler="learned"``) answers each per-arrival decision point —
+    see :func:`decisions`; without one the scheduler decides for itself
+    on the exact pre-existing code path (no generator yields).
     """
-    if scheduler == "oasis":
-        return _run_oasis(cluster, jobs, params, impl, check, quantum,
-                          cancellations, throughput)
-    return _run_reactive(cluster, jobs, scheduler, fixed_workers, check,
-                         quantum, cancellations, throughput)
+    if scheduler == "learned" and policy is None:
+        raise ValueError(
+            "scheduler='learned' needs a policy — pass engine.run(..., "
+            "policy=...) (see repro.rl.policy.LearnedDecider) or train one "
+            "via repro.rl.train")
+    if policy is None:
+        if scheduler == "oasis":
+            return _exhaust(_drive_oasis(cluster, jobs, params, impl, check,
+                                         quantum, cancellations, throughput,
+                                         decide=False))
+        return _exhaust(_drive_reactive(cluster, jobs, scheduler,
+                                        fixed_workers, check, quantum,
+                                        cancellations, throughput,
+                                        decide=False))
+    gen = decisions(cluster, jobs, scheduler=scheduler, params=params,
+                    impl=impl, fixed_workers=fixed_workers, check=check,
+                    quantum=quantum, cancellations=cancellations,
+                    throughput=throughput)
+    policy_seconds: List[float] = []
+    try:
+        dp = next(gen)
+        while True:
+            t0 = time.perf_counter()
+            action = policy(dp)
+            policy_seconds.append(time.perf_counter() - t0)
+            dp = gen.send(action)
+    except StopIteration as e:
+        result = e.value
+        if not result.decision_seconds:     # reactive paths record none
+            result.decision_seconds = policy_seconds
+        return result
 
 
 # ---------------------------------------------------------------------------
 # OASiS (plan-ahead): arrivals and cancellations are the only events.
 # ---------------------------------------------------------------------------
 
-def _run_oasis(cluster: ClusterSpec, jobs: Sequence[Job],
-               params: Optional[PriceParams], impl: str, check: bool,
-               quantum: Optional[int],
-               cancellations: Optional[Dict[int, int]],
-               throughput: Optional[ThroughputFn]) -> SimResult:
+def _oasis_decision_point(osched: OASiS, cluster: ClusterSpec, job: Job,
+                          t: int, cand: Optional[Schedule],
+                          utility_so_far: float) -> DecisionPoint:
+    g_win, v_win = osched.state.alloc_window(t, DECISION_WINDOW)
+    fw, fs = _free_window(g_win, v_win, cluster, t)
+    n_running = sum(1 for s in osched.accepted.values() if s.finish >= t)
+    return DecisionPoint(
+        job=job, t=t, scheduler="oasis",
+        expert=(1, 0) if cand is not None else (0, 0), candidate=cand,
+        utility_so_far=utility_so_far, n_running=n_running, n_waiting=0,
+        accepted=len(osched.accepted), rejected=len(osched.rejected),
+        free_frac_workers=fw, free_frac_ps=fs)
+
+
+def _drive_oasis(cluster: ClusterSpec, jobs: Sequence[Job],
+                 params: Optional[PriceParams], impl: str, check: bool,
+                 quantum: Optional[int],
+                 cancellations: Optional[Dict[int, int]],
+                 throughput: Optional[ThroughputFn], decide: bool
+                 ) -> Generator[DecisionPoint, object, SimResult]:
     T = cluster.T
     jmap = {j.jid: j for j in jobs}
     by_slot, cancel_slot = _group_events(jobs, cancellations, T)
@@ -186,7 +370,20 @@ def _run_oasis(cluster: ClusterSpec, jobs: Sequence[Job],
             osched.state.release(jmap[jid], tail_w, tail_z)
             canceled.add(jid)
         batch = [_with_quantum(job, quantum) for job in by_slot.get(t, ())]
-        osched.on_arrivals(batch)
+        if decide:
+            # stepwise: propose at current prices, let the decider gate
+            # the commitment.  Sequential per-job decisions are exactly
+            # the batched path's semantics (on_arrivals is equivalence-
+            # tested against sequential on_arrival), with the external
+            # action substituted for Alg. 1's payoff test.
+            for job in sorted(batch, key=lambda j: j.arrival):
+                cand = osched.propose(job)
+                action = yield _oasis_decision_point(
+                    osched, cluster, job, t, cand, osched.total_utility)
+                nw, _ = _as_counts(action)
+                osched._resolve(job, cand if nw > 0 else None)
+        else:
+            osched.on_arrivals(batch)
         if check:
             # whole-state comparison on the price-state's own books — no
             # per-schedule Python walk and no device→host churn on the
@@ -230,7 +427,9 @@ def _run_oasis(cluster: ClusterSpec, jobs: Sequence[Job],
                      target_gap=_target_gaps(jmap, completion),
                      decision_seconds=osched.decision_seconds,
                      utilization=float(np.mean(gpu_slots / total_gpu)) if T else 0.0,
-                     canceled=len(canceled))
+                     canceled=len(canceled),
+                     arrivals={j.jid: j.arrival for j in jobs
+                               if j.arrival < T})
 
 
 # ---------------------------------------------------------------------------
@@ -241,10 +440,42 @@ def _run_oasis(cluster: ClusterSpec, jobs: Sequence[Job],
 _RATE_BLOCK = 64
 
 
-def _run_reactive(cluster: ClusterSpec, jobs: Sequence[Job], scheduler: str,
-                  fixed_workers: int, check: bool, quantum: Optional[int],
-                  cancellations: Optional[Dict[int, int]],
-                  throughput: Optional[ThroughputFn]) -> SimResult:
+def _pool_usage(cur_alloc: Dict[int, tuple], jmap: Dict[int, Job],
+                cluster: ClusterSpec) -> Tuple[np.ndarray, np.ndarray]:
+    """(R,) total worker/PS-pool usage of one allocation snapshot."""
+    used_w = np.zeros(cluster.worker_caps.shape[1])
+    used_s = np.zeros(cluster.ps_caps.shape[1])
+    for jid, (y, z) in cur_alloc.items():
+        used_w += float(y.sum()) * jmap[jid].worker_res
+        if z is not None:
+            used_s += float(z.sum()) * jmap[jid].ps_res
+    return used_w, used_s
+
+
+def _reactive_decision_point(rsched: ReactiveScheduler, cluster: ClusterSpec,
+                             job: Job, t: int, scheduler: str,
+                             cur_alloc: Dict[int, tuple],
+                             usage: Tuple[np.ndarray, np.ndarray],
+                             n_admitted: int,
+                             n_rejected: int, n_live: int,
+                             utility_so_far: float) -> DecisionPoint:
+    fw, fs = _free_window(*usage, cluster, t)
+    admit = rsched.would_admit(job, t)
+    nw, nps = rsched._counts(job)
+    return DecisionPoint(
+        job=job, t=t, scheduler=scheduler,
+        expert=(nw, nps) if admit else (0, 0), candidate=None,
+        utility_so_far=utility_so_far,
+        n_running=len(cur_alloc), n_waiting=n_live - len(cur_alloc),
+        accepted=n_admitted, rejected=n_rejected,
+        free_frac_workers=fw, free_frac_ps=fs)
+
+
+def _drive_reactive(cluster: ClusterSpec, jobs: Sequence[Job], scheduler: str,
+                    fixed_workers: int, check: bool, quantum: Optional[int],
+                    cancellations: Optional[Dict[int, int]],
+                    throughput: Optional[ThroughputFn], decide: bool
+                    ) -> Generator[DecisionPoint, object, SimResult]:
     T = cluster.T
     src = {j.jid: _with_quantum(j, quantum) for j in jobs}
     jmap = dict(src)
@@ -280,14 +511,41 @@ def _run_reactive(cluster: ClusterSpec, jobs: Sequence[Job], scheduler: str,
 
     events = sorted(set(by_slot) | set(cancel_slot))
     ei = 0
+    n_rejected = 0
     t = events[0] if events else T
     while t < T:
         while ei < len(events) and events[ei] <= t:
             ei += 1
-        for job in by_slot.pop(t, ()):
-            if rsched.on_arrival(job, t):
+        arrivals_now = by_slot.pop(t, ())
+        if decide and arrivals_now:
+            # one usage snapshot for the whole arrival burst: admissions
+            # do not change the previous allocation until the repack,
+            # and cancellations at this slot are processed afterwards
+            usage = _pool_usage(cur_alloc, jmap, cluster)
+        for job in arrivals_now:
+            if decide:
+                action = yield _reactive_decision_point(
+                    rsched, cluster, job, t, scheduler, cur_alloc, usage,
+                    len(admitted), n_rejected, len(remaining), total_utility)
+                nw, nps = _as_counts(action)
+                if nw <= 0:
+                    n_rejected += 1
+                    continue
+                if isinstance(rsched, Learned):
+                    # clamp to the job's own feasibility envelope: at most
+                    # N_i concurrent workers (constraint (3)), at least
+                    # the bandwidth-matched PS count (constraints (6)(7))
+                    nw = min(nw, job.num_chunks)
+                    nps = max(nps, job.ps_for(nw))
+                    rsched.set_counts(job.jid, nw, nps)
+                rsched.enroll(job, t)
                 admitted.append(job.jid)
                 remaining[job.jid] = job.total_work_slots
+            elif rsched.on_arrival(job, t):
+                admitted.append(job.jid)
+                remaining[job.jid] = job.total_work_slots
+            else:
+                n_rejected += 1
         for jid in cancel_slot.get(t, ()):
             if jid in remaining:                # admitted, still running
                 rsched.on_completion(jid, t)    # drop from pool, no utility
@@ -369,4 +627,6 @@ def _run_reactive(cluster: ClusterSpec, jobs: Sequence[Job], scheduler: str,
                      target_gap=_target_gaps(jmap, completion),
                      decision_seconds=[],
                      utilization=util_sum / T if T else 0.0,
-                     canceled=len(canceled))
+                     canceled=len(canceled),
+                     arrivals={j.jid: j.arrival for j in src.values()
+                               if j.arrival < T})

@@ -259,20 +259,37 @@ def run_scale(seed: int = 0, quick: bool = False,
               schedulers: Sequence[str] = ("fifo", "rrh", "drf", "dorm"),
               T: int = SCALE_DIMS["T"], H: int = SCALE_DIMS["H"],
               K: int = SCALE_DIMS["K"],
-              n: int = SCALE_DIMS["n"]) -> List[ScenarioResult]:
+              n: int = SCALE_DIMS["n"],
+              policy_ckpt: Optional[str] = None) -> List[ScenarioResult]:
     """The fig3-shaped workload an order of magnitude past the paper's
     T=100 / 100-server / 200-job setting.  Reactive baselines by default;
     pass ``schedulers=("oasis", ...)`` to include the (decision-bound)
     OASiS run — it uses the fused jit engine against the device-resident
     price state (``impl="jax"``), the configuration the ``sim_scale``
-    record in BENCH_decision.json tracks."""
+    record in BENCH_decision.json tracks.  ``"learned"`` runs the rl/
+    policy scheduler: the checkpoint at ``policy_ckpt`` if given, else a
+    deterministic seed-initialized (untrained) net — the CI smoke's
+    stand-in, which exercises the whole decision pipeline and records
+    its wall clock/latency, not scheduling quality."""
     if quick:
         T, H, K, n = (SCALE_DIMS_QUICK[k] for k in ("T", "H", "K", "n"))
     cluster = make_cluster(T=T, H=H, K=K)
     jobs = make_jobs(n, T=T, seed=seed, small=False)
+
+    def _kwargs(s: str) -> dict:
+        if s == "oasis":
+            return dict(quantum=0, impl="jax")
+        if s == "learned":
+            from ..rl import policy as rl_policy
+            if policy_ckpt:
+                params, pcfg, _ = rl_policy.load_policy(policy_ckpt)
+                return dict(policy=rl_policy.LearnedDecider(
+                    params, pcfg, cluster))
+            return dict(policy=rl_policy.default_policy(cluster))
+        return {}
+
     return [_timed("scale", f"T={T};n={n}", cluster, jobs, scheduler=s,
-                   check=True,
-                   **(dict(quantum=0, impl="jax") if s == "oasis" else {}))
+                   check=True, **_kwargs(s))
             for s in schedulers]
 
 

@@ -115,7 +115,9 @@ def simulate_reference(cluster: ClusterSpec, jobs: Sequence[Job],
                          accepted=len(osched.accepted), completed=len(completion),
                          n_jobs=len(jobs), completion=completion, target_gap=gaps,
                          decision_seconds=osched.decision_seconds,
-                         utilization=float(np.mean(util_acc)) if util_acc else 0.0)
+                         utilization=float(np.mean(util_acc)) if util_acc else 0.0,
+                         arrivals={j.jid: j.arrival for j in jobs
+                                   if j.arrival < cluster.T})
 
     cls = BASELINES[scheduler]
     rsched: ReactiveScheduler = cls(cluster, fixed_workers=fixed_workers)
@@ -153,4 +155,7 @@ def simulate_reference(cluster: ClusterSpec, jobs: Sequence[Job],
     return SimResult(name=scheduler, total_utility=total_utility,
                      accepted=len(admitted), completed=len(completion),
                      n_jobs=len(jobs), completion=completion, target_gap=gaps,
-                     decision_seconds=[], utilization=float(np.mean(util_acc)) if util_acc else 0.0)
+                     decision_seconds=[],
+                     utilization=float(np.mean(util_acc)) if util_acc else 0.0,
+                     arrivals={j.jid: j.arrival for j in jobs
+                               if j.arrival < cluster.T})

@@ -1,0 +1,117 @@
+"""benchmarks/run.py bench_decision/v2 schema validation: a malformed
+section must abort the write instead of poisoning the committed baseline
+(it used to surface only later, via check_regression)."""
+import json
+
+import pytest
+
+from benchmarks.run import _merge_json, validate_tracked
+
+
+def _payload():
+    return {
+        "schema": "bench_decision/v2",
+        "platform": "test", "python": "3",
+        "decision_seconds": {
+            "jax": {"p50": 0.01, "p95": 0.02, "mean": 0.012},
+            "loop": {"p50": 0.05, "p95": 0.3, "mean": 0.09},
+            "jax_cold_mean_seconds": 0.3,
+            "quick": True,
+        },
+        "sim_v2": {"fifo": {"v1_seconds": 1.0, "v2_seconds": 0.2,
+                            "speedup": 5.0},
+                   "oasis_overhead_v2_seconds": 0.1, "quick": True},
+        "sim_scale": {"T": 500, "H": 100, "K": 100, "n_jobs": 2000,
+                      "quick": False,
+                      "wall_seconds": {"fifo": 0.4, "oasis": 650.0},
+                      "utility": {"fifo": 100.0, "oasis": 7000.0},
+                      "decision": {"oasis": {"p50": 0.2, "mean": 0.3,
+                                             "p95": None}}},
+        "rl": {"quick": False, "train_seconds": 250.0,
+               "train_iterations": 160, "eval_seeds": [5, 6, 7],
+               "instance": {"T": 100, "H": 50, "K": 50, "n_jobs": 200},
+               "utility": {"learned": 500.0, "fifo": 170.0},
+               "per_seed": {"learned": {"5": 900.0},
+                            "fifo": {"5": 300.0}}},
+    }
+
+
+def test_valid_payload_passes():
+    assert validate_tracked(_payload()) == []
+
+
+def test_wrong_schema_flagged():
+    p = _payload()
+    p["schema"] = "bench_decision/v1"
+    assert any("schema" in x for x in validate_tracked(p))
+
+
+def test_unknown_section_flagged():
+    p = _payload()
+    p["sim_scael"] = {"oops": 1}                  # typo'd section name
+    assert any("sim_scael" in x for x in validate_tracked(p))
+
+
+def test_nan_and_non_numeric_leaves_flagged():
+    p = _payload()
+    p["sim_scale"]["wall_seconds"]["fifo"] = float("nan")
+    assert any("sim_scale.wall_seconds" in x for x in validate_tracked(p))
+    p = _payload()
+    p["decision_seconds"]["jax"] = {"p50": "fast"}
+    assert any("decision_seconds.jax" in x for x in validate_tracked(p))
+    p = _payload()
+    del p["decision_seconds"]["jax"]["p95"]       # incomplete stats
+    assert any("decision_seconds.jax" in x for x in validate_tracked(p))
+
+
+def test_scale_dims_type_checked():
+    p = _payload()
+    p["sim_scale"]["T"] = "500"
+    assert any("sim_scale.T" in x for x in validate_tracked(p))
+
+
+def test_corrupted_non_dict_sections_report_instead_of_raising():
+    """The baseline file on disk can be arbitrarily corrupted (that is
+    the validator's whole job) — a non-dict section must come back as a
+    problem, never as an AttributeError."""
+    for bad in ("corrupted", [1], 3):
+        for sec in ("decision_seconds", "sim_v2", "sim_scale", "rl"):
+            p = {"schema": "bench_decision/v2", sec: bad}
+            assert any(sec in x for x in validate_tracked(p))
+    p = _payload()
+    p["rl"]["per_seed"] = [1]
+    assert any("rl.per_seed" in x for x in validate_tracked(p))
+    p = _payload()
+    p["sim_scale"]["decision"] = [1]
+    assert any("sim_scale.decision" in x for x in validate_tracked(p))
+
+
+def test_rl_section_checked():
+    p = _payload()
+    p["rl"]["train_seconds"] = None
+    assert any("rl.train_seconds" in x for x in validate_tracked(p))
+    p = _payload()
+    p["rl"]["per_seed"]["learned"]["5"] = "big"
+    assert any("per_seed.learned" in x for x in validate_tracked(p))
+
+
+def test_merge_json_refuses_malformed_sections(tmp_path):
+    path = tmp_path / "bench.json"
+    good = {"sim_scale": _payload()["sim_scale"]}
+    _merge_json(str(path), good)                  # writes fine
+    assert json.loads(path.read_text())["sim_scale"]["T"] == 500
+    before = path.read_text()
+    bad = {"sim_scale": {**_payload()["sim_scale"],
+                         "wall_seconds": {"fifo": float("nan")}}}
+    with pytest.raises(SystemExit):
+        _merge_json(str(path), bad)
+    assert path.read_text() == before             # baseline untouched
+
+
+def test_merge_json_merges_and_preserves_sections(tmp_path):
+    path = tmp_path / "bench.json"
+    _merge_json(str(path), {"sim_scale": _payload()["sim_scale"]})
+    _merge_json(str(path), {"rl": _payload()["rl"]})
+    doc = json.loads(path.read_text())
+    assert "sim_scale" in doc and "rl" in doc     # sections accumulate
+    assert doc["schema"] == "bench_decision/v2"

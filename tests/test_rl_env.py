@@ -1,0 +1,187 @@
+"""rl/ env: exact equivalence against sim.engine.run for every scheduler
+(replay policies), reward accounting, action clamping/feasibility, and
+the SimResult.summary() contract."""
+import numpy as np
+import pytest
+
+from repro.rl.env import (OBS_DIM, ClusterSchedulingEnv, ReplayPolicy,
+                          engine_action, expert_env_action, observe,
+                          paper_instance, run_episode)
+from repro.sim import engine, make_cluster, make_jobs
+
+ALL = ["oasis", "fifo", "drf", "rrh", "dorm"]
+
+
+def _paper_instance(seed):
+    # the rl/ subsystem's own instance family, equivalence-suite variant
+    return paper_instance(seed, small=True)
+
+
+def _assert_same(a, b):
+    assert a.accepted == b.accepted
+    assert a.completed == b.completed
+    assert a.completion == b.completion          # completion slots exact
+    assert a.total_utility == b.total_utility    # bit-for-bit
+    assert a.utilization == b.utilization
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_env_replays_every_scheduler_exactly(seed):
+    """Driving the env with a policy that replays the scheduler's own
+    decisions reproduces ``sim.engine.run`` bit-for-bit on the seeded
+    paper-scale instances — OASiS and all four reactive baselines."""
+    cluster, jobs = _paper_instance(seed)
+    for name in ALL:
+        kw = dict(quantum=0) if name == "oasis" else {}
+        base = engine.run(cluster, jobs, scheduler=name, check=True, **kw)
+        env = ClusterSchedulingEnv(instance_fn=lambda s: (cluster, jobs),
+                                   scheduler=name, check=True, **kw)
+        r = run_episode(env, ReplayPolicy())
+        _assert_same(base, r)
+
+
+def test_learned_replaying_fifo_counts_is_fifo():
+    """The learned scheduler's expert fallback is FIFO's counts: the
+    replay policy through scheduler="learned" equals the FIFO run."""
+    cluster, jobs = _paper_instance(1)
+    base = engine.run(cluster, jobs, scheduler="fifo", check=True)
+    env = ClusterSchedulingEnv(instance_fn=lambda s: (cluster, jobs),
+                               scheduler="learned", check=True)
+    _assert_same(base, run_episode(env, ReplayPolicy()))
+
+
+def test_engine_policy_kwarg_matches_env_replay():
+    """engine.run(policy=...) and the env are the same decision stream."""
+    cluster, jobs = _paper_instance(2)
+    for name in ("fifo", "drf", "oasis"):
+        kw = dict(quantum=0) if name == "oasis" else {}
+        via_engine = engine.run(cluster, jobs, scheduler=name, check=True,
+                                policy=lambda dp: dp.expert, **kw)
+        base = engine.run(cluster, jobs, scheduler=name, check=True, **kw)
+        _assert_same(base, via_engine)
+
+
+def test_rewards_sum_to_total_utility():
+    cluster, jobs = _paper_instance(3)
+    env = ClusterSchedulingEnv(instance_fn=lambda s: (cluster, jobs),
+                               scheduler="learned")
+    obs, info = env.reset()
+    total, done = 0.0, False
+    rng = np.random.default_rng(0)
+    while not done:
+        a = np.array([rng.integers(0, 33), rng.integers(0, 4)])
+        obs, rew, done, _, info = env.step(a)
+        total += rew
+    assert total == pytest.approx(env.result.total_utility, abs=1e-6)
+    assert info["summary"]["total_utility"] == pytest.approx(total, abs=1e-6)
+
+
+def test_random_actions_stay_feasible():
+    """check=True makes the engine assert capacity feasibility on every
+    repack; arbitrary (including absurd) actions must never trip it."""
+    cluster = make_cluster(T=40, H=6, K=6)
+    jobs = make_jobs(60, T=40, seed=4, small=False)
+    env = ClusterSchedulingEnv(instance_fn=lambda s: (cluster, jobs),
+                               scheduler="learned", check=True)
+    obs, info = env.reset()
+    rng = np.random.default_rng(1)
+    done = info.get("empty_trace", False)
+    while not done:
+        a = np.array([rng.integers(0, 500), rng.integers(0, 50)])
+        obs, _, done, _, info = env.step(a)
+    assert env.result.accepted <= len(jobs)
+
+
+def test_engine_action_clamps_to_feasibility_envelope():
+    cluster, jobs = _paper_instance(0)
+    env = ClusterSchedulingEnv(instance_fn=lambda s: (cluster, jobs),
+                               scheduler="learned")
+    env.reset()
+    dp = env._dp
+    job = dp.job
+    assert engine_action(dp, 0) is None
+    assert engine_action(dp, (0, 3)) is None
+    w, p = engine_action(dp, (10 ** 6, 0))
+    assert w == job.num_chunks                  # constraint (3)
+    assert p == job.ps_for(w)                   # constraints (6)(7)
+    w, p = engine_action(dp, (1, 2))
+    assert w == 1 and p == job.ps_for(1) + 2
+
+
+def test_observation_shape_and_finiteness():
+    cluster, jobs = _paper_instance(0)
+    for name in ("learned", "oasis"):
+        kw = dict(quantum=0) if name == "oasis" else {}
+        env = ClusterSchedulingEnv(instance_fn=lambda s: (cluster, jobs),
+                                   scheduler=name, **kw)
+        obs, info = env.reset()
+        assert obs.shape == (OBS_DIM,) and obs.dtype == np.float32
+        assert np.isfinite(obs).all()
+        assert observe(env._dp, cluster) == pytest.approx(obs)
+        exp = expert_env_action(env._dp)
+        assert exp.shape == (2,) and exp[0] >= 0
+
+
+def test_empty_trace_episode():
+    cluster = make_cluster(T=20, H=4, K=4)
+    env = ClusterSchedulingEnv(instance_fn=lambda s: (cluster, []),
+                               scheduler="learned")
+    obs, info = env.reset()
+    assert info.get("empty_trace")
+    obs, rew, done, _, info = env.step(np.array([3, 0]))
+    assert done and rew == 0.0
+    assert info["summary"]["n_jobs"] == 0
+
+
+def test_summary_contract():
+    cluster, jobs = _paper_instance(0)
+    r = engine.run(cluster, jobs, scheduler="fifo", check=False)
+    s = r.summary()
+    assert s["accepted"] == r.accepted and s["n_jobs"] == len(jobs)
+    assert 0.0 <= s["accept_rate"] <= 1.0
+    assert 0.0 <= s["completion_rate"] <= s["accept_rate"]
+    lat = [r.completion[j] - r.arrivals[j] for j in r.completion]
+    assert s["mean_latency"] == pytest.approx(np.mean(lat))
+    assert s["p50_latency"] == pytest.approx(np.percentile(lat, 50))
+    assert s["p95_latency"] == pytest.approx(np.percentile(lat, 95))
+    # no completions -> latency stats are None, not NaN
+    empty = engine.run(cluster, [], scheduler="fifo", check=False)
+    assert empty.summary()["mean_latency"] is None
+
+
+def test_property_no_capacity_violating_admission():
+    """Hypothesis: whatever the action stream, every allocation the env's
+    step() commits stays within cluster capacity (the engine asserts it
+    at every repack under check=True) and admitted counts respect the
+    per-job envelope."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    cluster = make_cluster(T=30, H=4, K=4)
+    jobs = make_jobs(25, T=30, seed=7, small=False)
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.lists(st.tuples(st.integers(-3, 400), st.integers(0, 9)),
+                    min_size=25, max_size=25),
+           st.integers(0, 3))
+    def inner(actions, slack_extra):
+        env = ClusterSchedulingEnv(instance_fn=lambda s: (cluster, jobs),
+                                   scheduler="learned", check=True)
+        obs, info = env.reset()
+        done = info.get("empty_trace", False)
+        i = 0
+        while not done:
+            w, slack = actions[i % len(actions)]
+            dp = env._dp
+            sent = engine_action(dp, (w, slack + slack_extra))
+            if sent is not None:
+                nw, nps = sent
+                assert 1 <= nw <= dp.job.num_chunks
+                assert nps >= dp.job.ps_for(nw)
+            obs, _, done, _, info = env.step((w, slack + slack_extra))
+            i += 1
+        assert env.result.accepted + len(
+            [a for a in actions[:i] if a[0] <= 0]) >= 0  # episode completed
+
+    inner()
