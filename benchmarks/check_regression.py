@@ -15,6 +15,12 @@ Compared leaves:
   oasis column's per-decision latency).  The ``sim_scale_quick`` CI
   smoke record is informational only — never gated (see
   ``SCALE_SECTIONS``)
+* ``serving.wall_seconds.<sched>``, ``serving.decision.<sched>.p50``
+  and — inverted, since higher is better — the sustained
+  ``serving.decisions_per_sec.<sched>`` throughput of the continuous
+  serving mode (gate fires when baseline/fresh exceeds the ratio, i.e.
+  throughput dropped).  ``serving_quick`` is the CI smoke — never gated
+  (see ``SERVING_SECTIONS``)
 
 A section is only ever compared against a like-configured baseline
 (``quick`` flag for the decision sections; T/H/K/n_jobs dims for the
@@ -49,6 +55,11 @@ MIN_BASELINE_SECONDS = 1e-3
 # Its record is still written and uploaded for inspection.
 SCALE_SECTIONS = ("sim_scale",)
 
+# gated serving sections.  serving_quick is the CI smoke (short streamed
+# trace on shared runners) — informational only, same rationale as
+# sim_scale_quick.
+SERVING_SECTIONS = ("serving",)
+
 
 def _leaves(doc: dict) -> Iterator[Tuple[str, float]]:
     """Yield (path, value) for every gated numeric leaf in ``doc``."""
@@ -62,13 +73,22 @@ def _leaves(doc: dict) -> Iterator[Tuple[str, float]]:
             yield f"sim_v2.{key}.v2_seconds", float(stats["v2_seconds"])
         elif key.endswith("_v2_seconds") and isinstance(stats, (int, float)):
             yield f"sim_v2.{key}", float(stats)
-    for section in SCALE_SECTIONS:
+    for section in SCALE_SECTIONS + SERVING_SECTIONS:
         scale = doc.get(section, {})
         for sched, wall in sorted(scale.get("wall_seconds", {}).items()):
             yield f"{section}.wall_seconds.{sched}", float(wall)
         for sched, stats in sorted(scale.get("decision", {}).items()):
             if isinstance(stats, dict) and stats.get("p50") is not None:
                 yield f"{section}.decision.{sched}.p50", float(stats["p50"])
+
+
+def _rate_leaves(doc: dict) -> Iterator[Tuple[str, float]]:
+    """Yield (path, value) for the gated HIGHER-is-better leaves
+    (sustained throughputs); the gate inverts the ratio for these."""
+    for section in SERVING_SECTIONS:
+        srv = doc.get(section, {})
+        for sched, dps in sorted(srv.get("decisions_per_sec", {}).items()):
+            yield f"{section}.decisions_per_sec.{sched}", float(dps)
 
 
 def _section_quick(doc: dict, section: str):
@@ -95,8 +115,11 @@ def _config_mismatches(base: dict, fresh: dict) -> Dict[str, str]:
         if bq != fq:
             skip[f"{section}."] = (
                 f"quick flag differs (baseline={bq}, fresh={fq})")
-    dims = ("T", "H", "K", "n_jobs", "quick")
-    for section in SCALE_SECTIONS:
+    dim_sets = {section: ("T", "H", "K", "n_jobs", "quick")
+                for section in SCALE_SECTIONS}
+    dim_sets.update({section: ("H", "K", "window", "slots", "n_jobs",
+                               "quick") for section in SERVING_SECTIONS})
+    for section, dims in dim_sets.items():
         bs, fs = base.get(section, {}), fresh.get(section, {})
         if bs and fs and any(bs.get(d) != fs.get(d) for d in dims):
             skip[f"{section}."] = (
@@ -137,6 +160,31 @@ def check(base: dict, fresh: dict, ratio: float,
         compared += 1
         mark = "FAIL" if r > ratio else "ok  "
         print(f"{mark}  {path}: {bval:.4f}s -> {fval:.4f}s ({r:.2f}x)")
+        if r > ratio:
+            failures.append((path, r))
+    # higher-is-better leaves (throughputs): invert the ratio so the gate
+    # still fires on "r > ratio" when the fresh figure DROPPED
+    fresh_rates = dict(_rate_leaves(fresh))
+    for path, bval in _rate_leaves(base):
+        skipped = next((why for pre, why in mismatched.items()
+                        if path.startswith(pre)), None)
+        if skipped is not None:
+            print(f"SKIP  {path}: {skipped}")
+            continue
+        if path not in fresh_rates:
+            print(f"MISS  {path}: not in fresh run (not gated)")
+            continue
+        if bval <= 0.0 or 1.0 / bval < MIN_BASELINE_SECONDS:
+            # a baseline sustaining >1k decisions/sec spends sub-ms per
+            # decision — same noise floor as the latency leaves
+            print(f"SKIP  {path}: baseline {bval:.1f}/s below noise floor")
+            continue
+        fval = fresh_rates[path]
+        r = bval / max(fval, 1e-12)
+        compared += 1
+        mark = "FAIL" if r > ratio else "ok  "
+        print(f"{mark}  {path}: {bval:.1f}/s -> {fval:.1f}/s "
+              f"({r:.2f}x slowdown)")
         if r > ratio:
             failures.append((path, r))
     if failures:

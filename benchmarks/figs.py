@@ -247,6 +247,49 @@ def rl_scoreboard(train_budget_seconds: float = 270.0,
     return rows
 
 
+def serving_table(quick: bool = False,
+                  stats_out: Optional[dict] = None) -> List[str]:
+    """Continuous serving mode: every scheduler over the same seeded
+    open-ended diurnal x bursty stream (``sim.workload.stream_jobs``)
+    through the rolling-window engine (``sim.engine.run_stream``).
+
+    The tracked record is throughput-shaped: sustained decisions/sec over
+    the whole trace and the price-state's resident ``window_bytes`` (the
+    peak-RSS proxy — constant in trace length by construction) next to the
+    usual wall clock / utility / decision-latency columns.  ``stats_out``
+    receives the ``serving`` (or, under ``quick``, ``serving_quick``)
+    record for BENCH_decision.json."""
+    results = scenarios.run_serving(seed=0, quick=quick)
+    rows = []
+    for r in results:
+        rows.append(f"serving[{r.scheduler};{r.variant}],"
+                    f"{r.wall_seconds*1e6:.0f},{r.utility:.2f}")
+        rows.append(f"serving[{r.scheduler};decisions_per_sec],0,"
+                    f"{r.decisions_per_sec:.1f}")
+        if r.decision_p50 is not None:
+            rows.append(f"serving[{r.scheduler};decision_p50],"
+                        f"{r.decision_p50*1e6:.0f},{r.decision_p50:.6f}")
+    if stats_out is not None:
+        dims = (scenarios.SERVING_DIMS_QUICK if quick
+                else scenarios.SERVING_DIMS)
+        stats_out.update({
+            "H": dims["H"], "K": dims["K"], "window": dims["window"],
+            "slots": dims["slots"],
+            "n_jobs": int(max(r.n_jobs for r in results)),
+            "quick": bool(quick),
+            "wall_seconds": {r.scheduler: r.wall_seconds for r in results},
+            "utility": {r.scheduler: r.utility for r in results},
+            "decisions_per_sec": {r.scheduler: r.decisions_per_sec
+                                  for r in results},
+            "window_bytes": {r.scheduler: r.window_bytes for r in results},
+            "decision": {r.scheduler: {"p50": r.decision_p50,
+                                       "mean": r.decision_mean,
+                                       "p95": r.decision_p95}
+                         for r in results if r.decision_p50 is not None},
+        })
+    return rows
+
+
 def scenario_table(quick: bool = False,
                    names=("hetero", "cancel", "straggler", "misest")
                    ) -> List[str]:

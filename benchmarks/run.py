@@ -13,19 +13,24 @@ Prints ``name,us_per_call,derived`` CSV rows:
   minplus[...]        scheduler DP kernel micro-benchmarks
 
 Machine-readable perf tracking (``--json``, default
-``BENCH_decision.json``, schema ``bench_decision/v2``): the ``decision``
-section writes p50/p95 per backend plus the sim-v2 wall-clock
-comparison, and the ``simscale`` section times the 10x-scale fig3 run
-per scheduler *including OASiS itself* on the fused jit engine +
-device-resident price state (``sim_scale``: wall clock, utility, and
-decision p50/mean; always the full T=500 / 100+100-server / 2000-job
-instance — it is the tracked configuration, so ``--quick`` does not
-shrink it).  ``simscale_quick`` records the shrunk instance with the
-oasis column as a separate ``sim_scale_quick`` section — the CI smoke
-that exercises the streaming decision pipeline on every PR.  Sections
-*merge* into an existing ``--json`` file, so the committed baseline can
-accumulate all records; CI regenerates the file and fails on >2x
-regressions via ``python -m benchmarks.check_regression``.
+``BENCH_decision.json``, schema ``bench_decision/v3``; v2 baselines are
+read compatibly): the ``decision`` section writes p50/p95 per backend
+plus the sim-v2 wall-clock comparison, and the ``simscale`` section
+times the 10x-scale fig3 run per scheduler *including OASiS itself* on
+the fused jit engine + device-resident price state (``sim_scale``: wall
+clock, utility, and decision p50/mean; always the full T=500 /
+100+100-server / 2000-job instance — it is the tracked configuration,
+so ``--quick`` does not shrink it).  ``simscale_quick`` records the
+shrunk instance with the oasis column as a separate ``sim_scale_quick``
+section — the CI smoke that exercises the streaming decision pipeline
+on every PR.  ``serving`` records the continuous-traffic mode (the
+>=20k-slot diurnal x bursty stream over the paper-scale fleet through
+the rolling-window engine): sustained decisions/sec and the resident
+``window_bytes`` memory proxy per scheduler; ``serving_quick`` is its
+CI-smoke shrink.  Sections *merge* into an existing ``--json`` file, so
+the committed baseline can accumulate all records; CI regenerates the
+file and fails on >2x regressions via
+``python -m benchmarks.check_regression``.
 
 ``--quick`` shrinks the other sections' instance sizes.  The roofline
 table is a separate consumer of the dry-run artifacts:
@@ -43,8 +48,8 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 SECTIONS = ("fig3", "fig4", "fig5", "fig6", "latency", "decision",
-            "simspeed", "scale", "simscale", "simscale_quick", "scenarios",
-            "rl", "kernels")
+            "simspeed", "scale", "simscale", "simscale_quick", "serving",
+            "serving_quick", "scenarios", "rl", "kernels")
 
 
 def _is_num(x) -> bool:
@@ -59,18 +64,22 @@ def _num_dict(sec: str, name: str, d, problems) -> None:
 
 
 def validate_tracked(payload: dict) -> list:
-    """Structural validation of a bench_decision/v2 payload.
+    """Structural validation of a bench_decision payload (v2 or v3; v3
+    adds the ``serving``/``serving_quick`` sections — readers stay
+    backward-compatible with committed v2 baselines).
 
     Returns a list of problems (empty = valid).  ``_merge_json`` refuses
     to write an invalid file: a malformed section used to be caught only
     much later, by ``check_regression`` diffing against it — by which
     time the broken file was already committed as the baseline."""
     problems = []
-    if payload.get("schema") != "bench_decision/v2":
-        problems.append(f"schema: expected 'bench_decision/v2', "
-                        f"got {payload.get('schema')!r}")
+    if payload.get("schema") not in ("bench_decision/v2",
+                                     "bench_decision/v3"):
+        problems.append(f"schema: expected 'bench_decision/v2' or "
+                        f"'bench_decision/v3', got {payload.get('schema')!r}")
     known = {"schema", "platform", "python", "decision_seconds", "sim_v2",
-             "sim_scale", "sim_scale_quick", "rl"}
+             "sim_scale", "sim_scale_quick", "serving", "serving_quick",
+             "rl"}
     for sec in sorted(set(payload) - known):
         problems.append(f"{sec}: unknown section (known: {sorted(known)})")
 
@@ -127,6 +136,25 @@ def validate_tracked(payload: dict) -> list:
                     v is None or _is_num(v) for v in stats.values()):
                 problems.append(f"{sec}.decision.{sched}: expected dict of "
                                 "numbers/nulls")
+    for sec in ("serving", "serving_quick"):
+        srv = _section(sec)
+        if srv is None:
+            continue
+        for dim in ("H", "K", "window", "slots", "n_jobs"):
+            if not isinstance(srv.get(dim), int):
+                problems.append(f"{sec}.{dim}: expected int")
+        for name in ("wall_seconds", "utility", "decisions_per_sec",
+                     "window_bytes"):
+            _num_dict(sec, name, srv.get(name), problems)
+        decision = srv.get("decision") or {}
+        if not isinstance(decision, dict):
+            problems.append(f"{sec}.decision: expected dict")
+            decision = {}
+        for sched, stats in decision.items():
+            if not isinstance(stats, dict) or not all(
+                    v is None or _is_num(v) for v in stats.values()):
+                problems.append(f"{sec}.decision.{sched}: expected dict of "
+                                "numbers/nulls")
     rl = _section("rl")
     if rl is not None:
         if not _is_num(rl.get("train_seconds")):
@@ -148,7 +176,7 @@ def _merge_json(path: str, updates: dict) -> None:
     ``--only simscale`` does not drop the decision-latency record.  Each
     section carries its own ``quick`` flag (sections can be measured
     under different modes), so there is no top-level one.  The merged
-    payload is validated against the bench_decision/v2 schema BEFORE
+    payload is validated against the bench_decision schema BEFORE
     writing; a malformed section aborts the run instead of poisoning the
     committed baseline."""
     payload = {}
@@ -163,13 +191,14 @@ def _merge_json(path: str, updates: dict) -> None:
     payload.pop("quick", None)                  # v1 leftover
     payload.update(updates)
     payload.update({
-        "schema": "bench_decision/v2",
+        # always write the current version; reads accept v2 baselines
+        "schema": "bench_decision/v3",
         "platform": platform.platform(),
         "python": platform.python_version(),
     })
     problems = validate_tracked(payload)
     if problems:
-        print(f"# NOT writing {path}: payload fails bench_decision/v2 "
+        print(f"# NOT writing {path}: payload fails bench_decision "
               "validation:", file=sys.stderr)
         for p in problems:
             print(f"#   {p}", file=sys.stderr)
@@ -273,6 +302,19 @@ def main() -> None:
         rows += figs.fig3_scale(quick=True, include_oasis=True,
                                 include_learned=True, stats_out=qstats)
         tracked["sim_scale_quick"] = qstats
+    if "serving" in which:
+        # the tracked continuous-serving configuration (>=20k-slot stream,
+        # paper-scale fleet): never shrunk by --quick
+        svstats: dict = {}
+        rows += figs.serving_table(quick=False, stats_out=svstats)
+        tracked["serving"] = svstats
+    if "serving_quick" in which:
+        # CI smoke: a short streamed trace through every scheduler; kept
+        # as a separate record so it is never diffed against the
+        # full-trace baseline
+        sqstats: dict = {}
+        rows += figs.serving_table(quick=True, stats_out=sqstats)
+        tracked["serving_quick"] = sqstats
     if "rl" in which:
         # the learned-scheduler acceptance row: budgeted CPU training +
         # held-out eval vs FIFO (quality claim lives here; the

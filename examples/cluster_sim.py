@@ -20,9 +20,15 @@ schedulers:
     PYTHONPATH=src python examples/cluster_sim.py --scenario scale10x \
         --scheduler learned --policy-ckpt runs/learned --quick
 
-(``--policy-ckpt`` points at a ``repro.rl.train`` checkpoint directory;
-without it the learned column runs an untrained seed-initialized net —
-a pipeline exercise, not a quality claim.)
+(``--policy-ckpt`` points at a ``repro.rl.train`` checkpoint directory
+and is required for ``--scheduler learned`` — an untrained net is a
+benchmark-harness pipeline exercise, not something to demo.)
+
+The serving scenario streams an open-ended diurnal x bursty trace
+through the rolling-window engine and prints sustained decisions/sec
+plus the resident price-window bytes per scheduler:
+
+    PYTHONPATH=src python examples/cluster_sim.py --scenario serving --quick
 """
 import argparse
 import os
@@ -100,6 +106,14 @@ def run_one_scenario(args):
                   f"p50={r.decision_p50*1e3:8.2f}ms "
                   f"p95={r.decision_p95*1e3:8.2f}ms "
                   f"mean={r.decision_mean*1e3:8.2f}ms")
+    streamed = [r for r in rows if r.decisions_per_sec is not None]
+    if streamed:
+        print("\n== sustained throughput (streamed trace) ==")
+        for r in streamed:
+            wb = (f" window={r.window_bytes/1024:.0f}KiB"
+                  if r.window_bytes else "")
+            print(f"{r.scheduler:6s} {r.decisions_per_sec:10.1f} "
+                  f"decisions/sec over {r.n_jobs} jobs{wb}")
 
 
 def main():
@@ -114,22 +128,25 @@ def main():
                          "comparison (scale10x = alias for scale)")
     ap.add_argument("--scheduler", default=None,
                     choices=list(ALL_SCHEDULERS) + ["learned"],
-                    help="scale scenario only: run this single scheduler "
-                         "(oasis uses the fused jit engine; learned runs "
-                         "the rl/ policy scheduler)")
+                    help="scale/serving scenarios only: run this single "
+                         "scheduler (oasis uses the fused jit engine; "
+                         "learned runs the rl/ policy scheduler)")
     ap.add_argument("--policy-ckpt", default=None,
-                    help="checkpoint directory from repro.rl.train for "
-                         "--scheduler learned (default: untrained "
-                         "seed-initialized policy)")
+                    help="checkpoint directory from repro.rl.train "
+                         "(required for --scheduler learned)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--quick", action="store_true",
                     help="shrink the scenario instance")
     args = ap.parse_args()
-    if args.scheduler and args.scenario not in ("scale", "scale10x"):
-        ap.error("--scheduler only applies to --scenario scale/scale10x "
-                 f"(got --scenario {args.scenario})")
+    if args.scheduler and args.scenario not in ("scale", "scale10x",
+                                                "serving"):
+        ap.error("--scheduler only applies to --scenario "
+                 f"scale/scale10x/serving (got --scenario {args.scenario})")
     if args.policy_ckpt and args.scheduler != "learned":
         ap.error("--policy-ckpt only applies to --scheduler learned")
+    if args.scheduler == "learned" and not args.policy_ckpt:
+        ap.error("--scheduler learned requires --policy-ckpt "
+                 "(a repro.rl.train checkpoint directory)")
     if args.scenario:
         run_one_scenario(args)
     else:

@@ -33,9 +33,14 @@ class OASiS:
 
     def __init__(self, cluster: ClusterSpec, params: PriceParams,
                  impl: str = "fast", track_duality: bool = False,
-                 batch_threshold: int = 2):
+                 batch_threshold: int = 2, window: Optional[int] = None):
         self.cluster = cluster
-        self.state = PriceState(cluster, params)
+        # ``window`` bounds the price-state's resident slots for the
+        # continuous serving mode (sim/engine.py ``run_stream``): decisions
+        # then index window-local slots and the caller is responsible for
+        # ``state.advance``-ing the origin to each arrival's slot.  The
+        # default keeps the full fixed-horizon tables.
+        self.state = PriceState(cluster, params, window=window)
         self.impl = impl
         # min batch size before on_arrivals uses the vmapped engine
         self.batch_threshold = max(2, batch_threshold)

@@ -30,6 +30,20 @@ Reading the ``g``/``v`` properties hands out the mutable host arrays, so
 it conservatively drops the device residency (the caller may write); the
 jax hot path never touches them — it goes through ``device_state``,
 ``capacity_ok`` and ``gpu_slot_usage`` instead.
+
+**Rolling horizon (continuous serving mode).**  ``PriceState(...,
+window=W)`` keeps only a ``W``-slot sliding window of the price tables:
+local slot ``i`` is absolute slot ``origin + i``, and ``advance(now)``
+slides the window forward, retiring past slots into scalar aggregates
+(``retired_slots``, ``retired_gpu_slots``) and opening exact-zero future
+slots at the tail.  Both representations slide *in place*: the host
+mirror by a shift-and-zero copy, the device residency by a jit roll —
+pure moves of existing values, so slots shared by the pre- and
+post-advance windows stay bit-equal in both representations (any dtype)
+and ``device_uploads`` stays O(1) across an entire streamed run.  With
+``window`` omitted (or ``>= T``) the arrays are the full ``(T, ...)``
+tables and nothing changes: the fixed-horizon episodic mode is the
+``window >= T`` special case of this state.
 """
 from __future__ import annotations
 
@@ -37,7 +51,7 @@ import contextlib
 import dataclasses
 import functools
 import math
-from typing import Sequence
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -180,6 +194,24 @@ def _window_add_jit(donate: bool):
     return jax.jit(_add, donate_argnums=(0,) if donate else ())
 
 
+@functools.lru_cache(maxsize=None)
+def _window_roll_jit(donate: bool):
+    """jit'd window slide: drop the first ``k`` slots, zero-fill the tail
+    (``k`` dynamic, shape static).  Values merely move, so the surviving
+    slots stay bit-equal to their pre-slide selves in any dtype — no
+    resync cadence needed (unlike the f32 incremental adds)."""
+    import jax
+
+    import jax.numpy as jnp
+
+    def _slide(buf, k):
+        rolled = jnp.roll(buf, -k, axis=0)
+        idx = jax.lax.broadcasted_iota(jnp.int32, buf.shape, 0)
+        return jnp.where(idx < buf.shape[0] - k, rolled, 0)
+
+    return jax.jit(_slide, donate_argnums=(0,) if donate else ())
+
+
 def _x64_if(dtype) -> contextlib.AbstractContextManager:
     """enable_x64 context when the device dtype is float64 (CPU policy) —
     keeps uploads/window ops from being canonicalized down to float32."""
@@ -194,14 +226,29 @@ class PriceState:
 
     Host mirror + lazily-materialised device residency (module docstring);
     ``device_uploads`` counts full host→device state syncs — O(1) per
-    simulation on the jax path, not O(accepted jobs)."""
+    simulation on the jax path, not O(accepted jobs).
 
-    def __init__(self, cluster: ClusterSpec, params: PriceParams):
+    ``window`` bounds the number of resident slots: slot arrays are
+    ``(min(window, T), ...)`` and ``advance(now)`` slides them along the
+    absolute clock.  All slot-indexed methods (commit/release, prices,
+    headroom, ``alloc_window``) take *local* indices, i.e. offsets from
+    ``origin``; with the default ``window=None`` the horizon equals
+    ``cluster.T`` and ``origin`` stays 0, so local == absolute and the
+    fixed-horizon behaviour is untouched."""
+
+    def __init__(self, cluster: ClusterSpec, params: PriceParams,
+                 window: Optional[int] = None):
         self.cluster = cluster
         self.params = params
         T, H, K = cluster.T, cluster.H, cluster.K
-        self._g_host = np.zeros((T, H, R))   # allocated on worker servers
-        self._v_host = np.zeros((T, K, R))   # allocated on PS servers
+        self.window = T if window is None else min(int(window), T)
+        self._g_host = np.zeros((self.window, H, R))  # alloc on worker servers
+        self._v_host = np.zeros((self.window, K, R))  # alloc on PS servers
+        # absolute slot of local index 0; advance() moves it forward
+        self.origin = 0
+        # aggregate accounting for slots retired out of the window
+        self.retired_slots = 0
+        self.retired_gpu_slots = 0.0        # sum of per-slot GPU units used
         # bumped on every commit/release (consumers may key caches on it)
         self.version = 0
         # device residency: (g_dev, v_dev) jax arrays or None; static side
@@ -211,6 +258,58 @@ class PriceState:
         self._dev_static = {}
         self._commits_since_sync = 0
         self.device_uploads = 0
+
+    # -- rolling window ----------------------------------------------------
+    @property
+    def horizon(self) -> int:
+        """Number of resident slots — the schedulable lookahead.  Equals
+        ``cluster.T`` for fixed-horizon states; the scheduling subroutines
+        size their DP tables from this, never from ``cluster.T``."""
+        return self._g_host.shape[0]
+
+    @property
+    def window_bytes(self) -> int:
+        """Host-mirror bytes of the slot-indexed state — the peak-RSS
+        proxy the serving benchmark records (the device residency, when
+        materialised, is the same shape at the device dtype)."""
+        return self._g_host.nbytes + self._v_host.nbytes
+
+    def advance(self, now: int) -> None:
+        """Slide the window so local slot 0 is absolute slot ``now``.
+
+        The ``now - origin`` oldest slots are retired into the scalar
+        aggregates (their allocation is immutable history: a schedule can
+        no longer touch them) and the same number of exact-zero slots
+        opens at the tail.  Surviving slots keep their values bit-for-bit
+        in both the host mirror and the device residency — the slide is a
+        pure move, applied on-device as a jit roll so ``device_uploads``
+        stays O(1) across a whole streamed run.  No-op when ``now ==
+        origin``; the clock never runs backwards."""
+        shift = int(now) - self.origin
+        if shift == 0:
+            return
+        if shift < 0:
+            raise ValueError(f"advance({now}) before origin {self.origin}")
+        W = self._g_host.shape[0]
+        k = min(shift, W)
+        self.retired_gpu_slots += float(self._g_host[:k, :, 0].sum())
+        self.retired_slots += shift
+        self.origin = int(now)
+        if k >= W:
+            self._g_host[:] = 0.0
+            self._v_host[:] = 0.0
+        else:
+            self._g_host[:W - k] = self._g_host[k:].copy()
+            self._g_host[W - k:] = 0.0
+            self._v_host[:W - k] = self._v_host[k:].copy()
+            self._v_host[W - k:] = 0.0
+        if self._dev is not None:
+            import jax
+            slide = _window_roll_jit(jax.default_backend() != "cpu")
+            with _x64_if(self._dev_dtype):
+                self._dev = tuple(slide(buf, np.int32(k))
+                                  for buf in self._dev)
+        self.version += 1
 
     # -- host views --------------------------------------------------------
     @property
@@ -276,7 +375,7 @@ class PriceState:
 
     def _apply(self, workers: dict, ps: dict, wres: np.ndarray,
                sres: np.ndarray, sign: float) -> None:
-        T = self.cluster.T
+        T = self._g_host.shape[0]           # == horizon (window-local slots)
         deltas = []
         if workers and self.cluster.H:
             deltas.append((0, self._g_host) + self._window_delta(
@@ -382,9 +481,9 @@ class PriceState:
         self._commits_since_sync = 0
         g, v = self._g_host, self._v_host
         if g.shape[1] == 0:
-            g = np.zeros((self.cluster.T, 1, R))
+            g = np.zeros((self.horizon, 1, R))
         if v.shape[1] == 0:
-            v = np.zeros((self.cluster.T, 1, R))
+            v = np.zeros((self.horizon, 1, R))
         self.device_uploads += 1
         # jnp.array (not asarray): jax CPU conversion can be zero-copy for
         # aligned buffers, and an aliased residency would silently track

@@ -323,7 +323,7 @@ def best_schedule_fused(job: Job, state: PriceState, *,
         return None
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
-    T = state.cluster.T
+    T = state.horizon      # window-local lookahead (== cluster.T episodic)
     m_pad = _bucket(dcap + 1, step=64)
     d1 = _bucket(job.workload + 1, step=256)
     with _x64_context(precision):
@@ -364,7 +364,7 @@ def best_schedule_fused_batch(jobs: Sequence[Job], state: PriceState, *,
         groups.setdefault(key, []).append((i, j))
     if not groups:
         return out
-    T = state.cluster.T
+    T = state.horizon      # window-local lookahead (== cluster.T episodic)
     with _x64_context(precision):
         dtype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
         sd = _state_arrays(state, dtype)

@@ -84,7 +84,7 @@ def cost_t_ref(job: Job, state: PriceState, p: np.ndarray, q: np.ndarray,
 
 def best_schedule_ref(job: Job, state: PriceState) -> Optional[Schedule]:
     """Alg. 2: enumerate deadlines, DP over workload splits."""
-    T = state.cluster.T
+    T = state.horizon      # window-local lookahead (== cluster.T episodic)
     a = job.arrival
     Dtot = job.workload
     dcap = min(job.max_chunks_per_slot, Dtot)
@@ -258,7 +258,7 @@ def cost_t_rows(job: Job, state: PriceState, p: np.ndarray, q: np.ndarray,
     Fully vectorized over (t, d): capacity tables, the cost sort, and the
     prefix-sum greedy costs are whole-array ops — no per-slot Python loop.
     """
-    T = state.cluster.T
+    T = state.horizon      # window-local lookahead (== cluster.T episodic)
     a = job.arrival
     wc_cap, wc_cost, wc_scost = _prefix_tables(
         p, state.cluster.worker_caps[None] - state.g, job.worker_res)
@@ -305,7 +305,7 @@ def _prefix_tables_loop(prices, headroom, demand, t0):
 def cost_t_rows_loop(job: Job, state: PriceState, p: np.ndarray, q: np.ndarray,
                      dcap: int) -> np.ndarray:
     """Seed implementation of ``cost_t_rows``: Python loop over slots."""
-    T = state.cluster.T
+    T = state.horizon      # window-local lookahead (== cluster.T episodic)
     a = job.arrival
     rows = np.full((T, dcap + 1), INF)
     wc_cap, wc_cost, wc_scost = _prefix_tables_loop(
@@ -352,7 +352,7 @@ def best_schedule(job: Job, state: PriceState, *, use_jax: bool = False,
     if use_jax:
         from .schedule_jax import best_schedule_fused
         return best_schedule_fused(job, state)
-    T = state.cluster.T
+    T = state.horizon      # window-local lookahead (== cluster.T episodic)
     a = job.arrival
     Dtot = job.workload
     dcap = min(job.max_chunks_per_slot, Dtot)

@@ -1,7 +1,7 @@
 from . import engine, scenarios
 from .engine import SimResult
 from .simulator import simulate, simulate_reference
-from .workload import make_cluster, make_jobs
+from .workload import make_cluster, make_jobs, stream_jobs
 
 __all__ = ["engine", "scenarios", "SimResult", "simulate",
-           "simulate_reference", "make_cluster", "make_jobs"]
+           "simulate_reference", "make_cluster", "make_jobs", "stream_jobs"]

@@ -68,9 +68,11 @@ policy replaying the expert action reproduces ``run`` exactly
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import math
 import time
-from typing import Callable, Dict, Generator, List, Optional, Sequence, Tuple
+from typing import (Callable, Dict, Generator, Iterable, List, Optional,
+                    Sequence, Tuple)
 
 import numpy as np
 
@@ -98,6 +100,10 @@ class SimResult:
     utilization: float                      # mean worker-pool GPU utilization
     canceled: int = 0                       # jobs departed mid-run (sim v2)
     arrivals: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # streaming runs only: host bytes of the price-state's rolling window
+    # (the peak-RSS proxy the serving benchmark records); None episodic,
+    # 0 for the reactive baselines (they keep no slot-indexed state)
+    window_bytes: Optional[int] = None
 
     def summary(self) -> Dict[str, object]:
         """Episode-level digest: accept/completion rates, latency
@@ -169,11 +175,14 @@ def _as_counts(action) -> Tuple[int, int]:
 
 
 def _free_window(used_w: np.ndarray, used_s: np.ndarray,
-                 cluster: ClusterSpec, t: int) -> Tuple[np.ndarray, np.ndarray]:
+                 cluster: ClusterSpec, t: int,
+                 t_max: Optional[int] = ...) -> Tuple[np.ndarray, np.ndarray]:
     """(W, R) per-slot free-capacity fractions of both pools from
-    per-slot pool-total usage (slots at/after T read 0.0 — no capacity
-    past the horizon).  A (R,) snapshot is tiled across the window (the
-    reactive baselines' allocation is constant between events)."""
+    per-slot pool-total usage (slots at/after ``t_max`` read 0.0 — no
+    capacity past the horizon; ``t_max=None`` means open-ended, the
+    streaming mode, and the default reads the episodic ``cluster.T``).
+    A (R,) snapshot is tiled across the window (the reactive baselines'
+    allocation is constant between events)."""
     W = DECISION_WINDOW
     cap_w = np.maximum(cluster.worker_caps.sum(axis=0), 1e-9)
     cap_s = np.maximum(cluster.ps_caps.sum(axis=0), 1e-9)
@@ -184,9 +193,12 @@ def _free_window(used_w: np.ndarray, used_s: np.ndarray,
         used_s = np.tile(used_s, (W, 1))
     fw[:used_w.shape[0]] = np.clip(1.0 - used_w / cap_w, 0.0, 1.0)
     fs[:used_s.shape[0]] = np.clip(1.0 - used_s / cap_s, 0.0, 1.0)
-    live = max(min(cluster.T - t, W), 0)
-    fw[live:] = 0.0
-    fs[live:] = 0.0
+    if t_max is Ellipsis:
+        t_max = cluster.T
+    if t_max is not None:
+        live = max(min(t_max - t, W), 0)
+        fw[live:] = 0.0
+        fs[live:] = 0.0
     return fw, fs
 
 
@@ -458,8 +470,9 @@ def _reactive_decision_point(rsched: ReactiveScheduler, cluster: ClusterSpec,
                              usage: Tuple[np.ndarray, np.ndarray],
                              n_admitted: int,
                              n_rejected: int, n_live: int,
-                             utility_so_far: float) -> DecisionPoint:
-    fw, fs = _free_window(*usage, cluster, t)
+                             utility_so_far: float,
+                             t_max: Optional[int] = ...) -> DecisionPoint:
+    fw, fs = _free_window(*usage, cluster, t, t_max=t_max)
     admit = rsched.would_admit(job, t)
     nw, nps = rsched._counts(job)
     return DecisionPoint(
@@ -630,3 +643,303 @@ def _drive_reactive(cluster: ClusterSpec, jobs: Sequence[Job], scheduler: str,
                      canceled=len(canceled),
                      arrivals={j.jid: j.arrival for j in src.values()
                                if j.arrival < T})
+
+
+# ---------------------------------------------------------------------------
+# Continuous serving mode: open-ended arrival streams over a rolling
+# price-state window.  Total simulated time is unbounded — all state is
+# O(window) + O(live jobs) + O(decided jobs) dicts; nothing allocates a
+# (total-time, ...) array.
+# ---------------------------------------------------------------------------
+
+def stream_price_params(sample: Sequence[Job], cluster: ClusterSpec,
+                        window: int, floor_frac: float = 0.05) -> PriceParams:
+    """U/L price-bound estimates for a streamed run, from a warmup sample.
+
+    The paper's estimator is horizon-relative (worst-case utility at
+    ``f_i(T - a_i)``); in serving mode the analogue of the horizon is the
+    scheduling window, so the sample is evaluated arrival-free against a
+    ``T=window`` view of the cluster — "estimated from past experience"
+    (Sec. IV-B), exactly the operator knob Fig. 6 sweeps."""
+    view = dataclasses.replace(cluster, T=int(window))
+    sample0 = [dataclasses.replace(j, arrival=0) for j in sample]
+    return price_params_from_jobs(sample0, view, floor_frac=floor_frac)
+
+
+def stream_decisions(cluster: ClusterSpec, jobs: Iterable[Job],
+                     scheduler: str = "oasis",
+                     params: Optional[PriceParams] = None,
+                     impl: str = "fast", window: int = 64,
+                     fixed_workers: int = 8, check: bool = False,
+                     quantum: Optional[int] = None,
+                     warmup_sample: int = 256
+                     ) -> Generator[DecisionPoint, object, SimResult]:
+    """Streaming analogue of :func:`decisions`.
+
+    ``jobs`` is any iterable (typically ``sim.workload.stream_jobs``)
+    yielding jobs in nondecreasing arrival order; it is consumed lazily
+    and never materialised.  ``cluster.T`` is ignored as a trace bound —
+    the run ends when the iterable does and every admitted job has run to
+    completion or provable starvation.  For OASiS the price state keeps a
+    ``window``-slot rolling horizon (``PriceState.advance``); decisions
+    are made in window-local coordinates (the arriving job is translated
+    to arrival 0) and committed slots are translated back to the absolute
+    clock, so per-decision cost is O(window), independent of trace
+    length.  When ``params`` is omitted they are estimated from the first
+    ``warmup_sample`` jobs via :func:`stream_price_params` (the sample is
+    replayed, not dropped)."""
+    if scheduler == "oasis":
+        if params is None:
+            it = iter(jobs)
+            sample = list(itertools.islice(it, warmup_sample))
+            params = stream_price_params(sample, cluster, window)
+            jobs = itertools.chain(sample, it)
+        return _drive_oasis_stream(cluster, jobs, params, impl, window,
+                                   check, quantum, decide=True)
+    return _drive_reactive_stream(cluster, jobs, scheduler, fixed_workers,
+                                  check, quantum, decide=True)
+
+
+def run_stream(cluster: ClusterSpec, jobs: Iterable[Job],
+               scheduler: str = "oasis",
+               params: Optional[PriceParams] = None, impl: str = "fast",
+               window: int = 64, fixed_workers: int = 8, check: bool = False,
+               quantum: Optional[int] = None, warmup_sample: int = 256,
+               policy: Optional[Callable[[DecisionPoint], object]] = None
+               ) -> SimResult:
+    """Drive ``scheduler`` over an open-ended arrival stream.
+
+    The streaming counterpart of :func:`run` — same scheduler kernels,
+    same admission semantics, no horizon: completion slots are absolute,
+    ``utilization`` is a running aggregate over the elapsed clock, and
+    memory stays bounded by the window (``SimResult.window_bytes``).
+    ``policy`` answers each decision point as in :func:`run` (required
+    for ``scheduler="learned"``)."""
+    if scheduler == "learned" and policy is None:
+        raise ValueError(
+            "scheduler='learned' needs a policy — pass engine.run_stream("
+            "..., policy=...) (see repro.rl.policy.LearnedDecider) or "
+            "train one via repro.rl.train")
+    if policy is None:
+        if scheduler == "oasis":
+            if params is None:
+                it = iter(jobs)
+                sample = list(itertools.islice(it, warmup_sample))
+                params = stream_price_params(sample, cluster, window)
+                jobs = itertools.chain(sample, it)
+            return _exhaust(_drive_oasis_stream(cluster, jobs, params, impl,
+                                                window, check, quantum,
+                                                decide=False))
+        return _exhaust(_drive_reactive_stream(cluster, jobs, scheduler,
+                                               fixed_workers, check, quantum,
+                                               decide=False))
+    gen = stream_decisions(cluster, jobs, scheduler=scheduler, params=params,
+                           impl=impl, window=window,
+                           fixed_workers=fixed_workers, check=check,
+                           quantum=quantum, warmup_sample=warmup_sample)
+    policy_seconds: List[float] = []
+    try:
+        dp = next(gen)
+        while True:
+            t0 = time.perf_counter()
+            action = policy(dp)
+            policy_seconds.append(time.perf_counter() - t0)
+            dp = gen.send(action)
+    except StopIteration as e:
+        result = e.value
+        if not result.decision_seconds:
+            result.decision_seconds = policy_seconds
+        return result
+
+
+def _drive_oasis_stream(cluster: ClusterSpec, jobs: Iterable[Job],
+                        params: PriceParams, impl: str, window: int,
+                        check: bool, quantum: Optional[int], decide: bool
+                        ) -> Generator[DecisionPoint, object, SimResult]:
+    osched = OASiS(cluster, params, impl=impl, window=window)
+    state = osched.state
+    jmap: Dict[int, Job] = {}
+    arrivals: Dict[int, int] = {}
+    completion: Dict[int, int] = {}
+    # absolute finish of still-running accepted jobs; entries (and their
+    # committed Schedule in osched.accepted, which holds local slots that
+    # go stale as the window slides) are pruned once the clock passes
+    # them, keeping live state O(window-worth of jobs)
+    active: Dict[int, int] = {}
+    n_accepted = 0
+    n_rejected = 0
+    n_jobs = 0
+    t = 0
+    it = iter(jobs)
+    nxt = next(it, None)
+    while nxt is not None:
+        t = int(nxt.arrival)
+        batch: List[Job] = []
+        while nxt is not None and int(nxt.arrival) == t:
+            batch.append(nxt)
+            nxt = next(it, None)
+        state.advance(t)
+        for jid in [j for j, fin in active.items() if fin < t]:
+            del active[jid]
+            osched.accepted.pop(jid, None)
+        # window-local coordinates: the job arrives at local slot 0 (its
+        # durations — hence utility — are translation-invariant)
+        local = [dataclasses.replace(_with_quantum(j, quantum), arrival=0)
+                 for j in batch]
+        for j in batch:
+            jmap[j.jid] = j
+            arrivals[j.jid] = int(j.arrival)
+        n_jobs += len(batch)
+        if decide:
+            for job, loc in zip(batch, local):
+                cand = osched.propose(loc)
+                g_win, v_win = state.alloc_window(0, DECISION_WINDOW)
+                fw, fs = _free_window(g_win, v_win, cluster, t, t_max=None)
+                action = yield DecisionPoint(
+                    job=job, t=t, scheduler="oasis",
+                    expert=(1, 0) if cand is not None else (0, 0),
+                    candidate=cand, utility_so_far=osched.total_utility,
+                    n_running=len(active), n_waiting=0,
+                    accepted=n_accepted, rejected=n_rejected,
+                    free_frac_workers=fw, free_frac_ps=fs)
+                nw, _ = _as_counts(action)
+                sched = osched._resolve(loc, cand if nw > 0 else None)
+                if sched is not None:
+                    n_accepted += 1
+                    active[job.jid] = t + sched.finish
+                    completion[job.jid] = t + sched.finish
+                else:
+                    n_rejected += 1
+        else:
+            for job, sched in zip(batch, osched.on_arrivals(local)):
+                if sched is not None:
+                    n_accepted += 1
+                    active[job.jid] = t + sched.finish
+                    completion[job.jid] = t + sched.finish
+                else:
+                    n_rejected += 1
+        if check:
+            ok_w, ok_ps = state.capacity_ok()
+            assert ok_w, "worker capacity violated"
+            assert ok_ps, "PS capacity violated"
+    # elapsed clock: through the last committed completion (tail work
+    # beyond the final arrival still occupies the cluster)
+    t_end = max(max(completion.values(), default=0) + 1, t + 1, 1)
+    total_gpu = max(float(cluster.worker_caps[:, 0].sum()), 1e-9)
+    gpu_slots = state.retired_gpu_slots + float(state.gpu_slot_usage().sum())
+    return SimResult(name="oasis", total_utility=osched.total_utility,
+                     accepted=n_accepted, completed=len(completion),
+                     n_jobs=n_jobs, completion=completion,
+                     target_gap=_target_gaps(jmap, completion),
+                     decision_seconds=osched.decision_seconds,
+                     utilization=gpu_slots / (total_gpu * t_end),
+                     arrivals=arrivals, window_bytes=state.window_bytes)
+
+
+def _drive_reactive_stream(cluster: ClusterSpec, jobs: Iterable[Job],
+                           scheduler: str, fixed_workers: int, check: bool,
+                           quantum: Optional[int], decide: bool
+                           ) -> Generator[DecisionPoint, object, SimResult]:
+    rsched: ReactiveScheduler = BASELINES[scheduler](
+        cluster, fixed_workers=fixed_workers)
+    total_gpu = max(float(cluster.worker_caps[:, 0].sum()), 1e-9)
+    jmap: Dict[int, Job] = {}
+    arrivals: Dict[int, int] = {}
+    admitted: List[int] = []
+    remaining: Dict[int, float] = {}
+    completion: Dict[int, int] = {}
+    total_utility = 0.0
+    util_sum = 0.0
+    cur_alloc: Dict[int, tuple] = {}
+    ids: List[int] = []
+    counts = np.zeros(0)
+    plan_gpu = 0.0
+    stale = True
+    n_rejected = 0
+    n_jobs = 0
+
+    it = iter(jobs)
+    nxt = next(it, None)
+    t = int(nxt.arrival) if nxt is not None else 0
+    while nxt is not None or remaining:
+        burst: List[Job] = []
+        while nxt is not None and int(nxt.arrival) <= t:
+            burst.append(_with_quantum(nxt, quantum))
+            nxt = next(it, None)
+        if decide and burst:
+            usage = _pool_usage(cur_alloc, jmap, cluster)
+        for job in burst:
+            n_jobs += 1
+            jmap[job.jid] = job
+            arrivals[job.jid] = int(job.arrival)
+            if decide:
+                action = yield _reactive_decision_point(
+                    rsched, cluster, job, t, scheduler, cur_alloc, usage,
+                    len(admitted), n_rejected, len(remaining), total_utility,
+                    t_max=None)
+                nw, nps = _as_counts(action)
+                if nw <= 0:
+                    n_rejected += 1
+                    continue
+                if isinstance(rsched, Learned):
+                    nw = min(nw, job.num_chunks)
+                    nps = max(nps, job.ps_for(nw))
+                    rsched.set_counts(job.jid, nw, nps)
+                rsched.enroll(job, t)
+                admitted.append(job.jid)
+                remaining[job.jid] = job.total_work_slots
+            elif rsched.on_arrival(job, t):
+                admitted.append(job.jid)
+                remaining[job.jid] = job.total_work_slots
+            else:
+                n_rejected += 1
+        if rsched.dirty:
+            cur_alloc = dict(rsched.step(t))
+            rsched.dirty = False
+            stale = True
+            if check:
+                _check_alloc(cluster, jmap, cur_alloc)
+        if stale:
+            ids = list(cur_alloc)
+            counts = np.array([float(cur_alloc[j][0].sum()) for j in ids])
+            plan_gpu = float(counts @ np.array(
+                [jmap[j].worker_res[0] for j in ids])) if ids else 0.0
+            stale = False
+
+        rem = np.array([remaining[j] for j in ids])
+        active = counts > 0
+        slots_left = np.full(len(ids), np.inf)
+        if active.any():
+            slots_left[active] = np.maximum(
+                np.ceil((rem[active] - 1e-9) / counts[active]), 1.0)
+        earliest = float(slots_left.min()) if ids else math.inf
+        horizon = (int(nxt.arrival) - t) if nxt is not None else math.inf
+        if not math.isfinite(earliest) and not math.isfinite(horizon):
+            # no future arrivals and no live job is progressing: the plan
+            # can never change again — the waiting jobs are starved for
+            # good, so the stream is done (they simply never complete)
+            break
+        span = max(int(min(earliest, horizon)), 1)
+        consumed = counts * span
+        util_sum += (plan_gpu / total_gpu) * span
+        t_end = t + span - 1
+        done_now = []
+        for j, used in zip(ids, consumed):
+            remaining[j] -= used
+            if remaining[j] <= 1e-9:
+                done_now.append(j)
+        for jid in done_now:
+            completion[jid] = t_end
+            total_utility += jmap[jid].utility(t_end - jmap[jid].arrival)
+            rsched.on_completion(jid, t_end)
+            del remaining[jid]
+            cur_alloc.pop(jid, None)
+            stale = True
+        t += span
+    return SimResult(name=scheduler, total_utility=total_utility,
+                     accepted=len(admitted), completed=len(completion),
+                     n_jobs=n_jobs, completion=completion,
+                     target_gap=_target_gaps(jmap, completion),
+                     decision_seconds=[],
+                     utilization=util_sum / max(t, 1),
+                     arrivals=arrivals, window_bytes=0)

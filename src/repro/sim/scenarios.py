@@ -18,6 +18,11 @@ and is runnable from ``python -m benchmarks.run --only scenarios`` or
   sweep, on the v2 engine.
 * ``scale``     — the fig3-shaped workload at T=500, 100+100 servers,
   2000 jobs; far beyond the v1 per-slot loop's practical ceiling.
+* ``serving``   — the continuous-traffic mode: an open-ended diurnal x
+  bursty arrival stream (``workload.stream_jobs``) over a paper-scale
+  fleet, driven through ``engine.run_stream`` with a rolling price-state
+  window; records sustained decisions/sec and the window-bytes memory
+  proxy per scheduler.
 """
 from __future__ import annotations
 
@@ -31,7 +36,7 @@ from ..core.pricing import price_params_from_jobs
 from ..core.types import ClusterSpec, Job
 from ..runtime.straggler import StragglerConfig, StragglerMonitor
 from . import engine
-from .workload import _P2_LIKE, make_cluster, make_jobs
+from .workload import _P2_LIKE, make_cluster, make_jobs, stream_jobs
 
 REACTIVE = ("fifo", "drf", "rrh", "dorm")
 ALL_SCHEDULERS = ("oasis",) + REACTIVE
@@ -169,6 +174,13 @@ class ScenarioResult:
     decision_p50: Optional[float] = None
     decision_mean: Optional[float] = None
     decision_p95: Optional[float] = None
+    # serving-mode extras: sustained arrival-decision throughput over the
+    # whole streamed trace, the price-state's resident window footprint
+    # (the peak-RSS proxy — 0 for the reactive baselines, which keep no
+    # price tables), and the trace's realized job count
+    decisions_per_sec: Optional[float] = None
+    window_bytes: Optional[int] = None
+    n_jobs: Optional[int] = None
 
 
 def _row(scenario: str, variant: str, r: engine.SimResult,
@@ -293,12 +305,73 @@ def run_scale(seed: int = 0, quick: bool = False,
             for s in schedulers]
 
 
+# the tracked continuous-serving instance (and its --quick shrink): a
+# paper-scale fleet under an open-ended diurnal x bursty stream.  "slots"
+# is the arrival-clock length — at 20k slots the full-horizon price state
+# would need (20000, H+K, 5) float64 tables (~160 MB); the rolling window
+# keeps (window, H+K, 5) resident (~256 KB) regardless of trace length.
+SERVING_DIMS = {"H": 50, "K": 50, "window": 64, "slots": 20000, "rate": 0.2}
+SERVING_DIMS_QUICK = {"H": 12, "K": 12, "window": 32, "slots": 600,
+                      "rate": 0.1}
+
+
+def run_serving(seed: int = 0, quick: bool = False,
+                schedulers: Sequence[str] = ALL_SCHEDULERS,
+                slots: Optional[int] = None, window: Optional[int] = None,
+                rate: Optional[float] = None,
+                policy_ckpt: Optional[str] = None) -> List[ScenarioResult]:
+    """Continuous serving mode: every scheduler consumes the *same* seeded
+    open-ended stream (regenerated per scheduler — ``stream_jobs`` is a
+    pure function of the seed) through ``engine.run_stream``.  OASiS runs
+    the fused jit engine over a rolling ``window``-slot price state whose
+    memory is independent of trace length; the reactive baselines are
+    horizon-free already.  Rows carry sustained decisions/sec and the
+    resident window bytes next to the usual quality columns."""
+    dims = SERVING_DIMS_QUICK if quick else SERVING_DIMS
+    W = int(window if window is not None else dims["window"])
+    n_slots = int(slots if slots is not None else dims["slots"])
+    lam = float(rate if rate is not None else dims["rate"])
+    cluster = make_cluster(T=W, H=dims["H"], K=dims["K"])
+
+    def _kwargs(s: str) -> dict:
+        if s == "oasis":
+            return dict(impl="jax", quantum=0)
+        if s == "learned":
+            from ..rl import policy as rl_policy
+            if policy_ckpt:
+                params, pcfg, _ = rl_policy.load_policy(policy_ckpt)
+                return dict(policy=rl_policy.LearnedDecider(
+                    params, pcfg, cluster))
+            return dict(policy=rl_policy.default_policy(cluster))
+        return {}
+
+    rows = []
+    for s in schedulers:
+        trace = stream_jobs(rate=lam, seed=seed, max_slots=n_slots,
+                            small=quick)
+        t0 = time.perf_counter()
+        r = engine.run_stream(cluster, trace, scheduler=s, window=W,
+                              check=(s == "oasis"), **_kwargs(s))
+        wall = time.perf_counter() - t0
+        row = _row("serving", f"W={W};slots={n_slots}", r, wall)
+        rows.append(dataclasses.replace(
+            row, decisions_per_sec=r.n_jobs / max(wall, 1e-9),
+            window_bytes=r.window_bytes, n_jobs=r.n_jobs))
+        if s in ("oasis", "learned") and r.window_bytes is not None:
+            # the acceptance bar: price-state memory bounded by the window,
+            # never by the trace length (two f64 tables, 5 resources)
+            expect = W * (dims["H"] + dims["K"]) * 5 * 8
+            assert r.window_bytes == expect, (r.window_bytes, expect)
+    return rows
+
+
 SCENARIOS = {
     "hetero": run_hetero,
     "cancel": run_cancel,
     "straggler": run_straggler,
     "misest": run_misest,
     "scale": run_scale,
+    "serving": run_serving,
 }
 
 

@@ -1,10 +1,21 @@
 """Workload/cluster generator following the paper's simulation settings
 (Sec. V-A): EC2-C4-like worker servers, P2/G3-like PS servers, job
 parameter ranges, Google-trace-style bursty arrivals, sigmoid utilities.
+
+Two arrival processes share the per-job sampler (``_sample_job``):
+
+* ``make_jobs`` — the finite episodic trace (nonhomogeneous Poisson over
+  ``[0, T)`` with a few x4-rate burst windows), unchanged semantics;
+* ``stream_jobs`` — the open-ended serving trace: a generator yielding
+  jobs in arrival order from a per-slot Poisson process whose rate is a
+  diurnal sinusoid overlaid with occasional heavy-tailed (Pareto) burst
+  episodes.  Streamed (never materialised), seeded, and reproducible —
+  the same seed replays the identical trace for every scheduler.
 """
 from __future__ import annotations
 
-from typing import List, Optional
+import math
+from typing import Iterator, List, Optional
 
 import numpy as np
 
@@ -28,18 +39,85 @@ def make_cluster(T: int = 100, H: int = 50, K: int = 50,
     return ClusterSpec(T=T, worker_caps=worker_caps, ps_caps=ps_caps)
 
 
+def _burst_profile(T: int, rng: np.random.Generator) -> np.ndarray:
+    """Per-slot rate multipliers: a few x4-rate burst windows.
+
+    Burst windows *wrap* at the trace edges (indices taken mod T), so a
+    burst centered near 0 or T keeps its full 2*width slot mass instead
+    of being clipped — arrival-rate properties hold at the boundaries.
+    """
+    base = np.ones(T)
+    n_bursts = max(1, T // 40)
+    width = max(2, T // 20)
+    for _ in range(n_bursts):
+        c = rng.integers(0, T)
+        idx = np.arange(c - width, c + width) % T
+        base[idx] *= 4.0
+    return base
+
+
 def _arrivals(n_jobs: int, T: int, rng: np.random.Generator) -> np.ndarray:
     """Bursty arrivals à la the Google cluster trace: a nonhomogeneous
     Poisson process with a few high-rate windows."""
-    base = np.ones(T)
-    n_bursts = max(1, T // 40)
-    for _ in range(n_bursts):
-        c = rng.integers(0, T)
-        width = max(2, T // 20)
-        base[max(0, c - width):c + width] *= 4.0
+    base = _burst_profile(T, rng)
     base[-max(1, T // 10):] = 0.05 * base[-max(1, T // 10):]  # few arrivals near T
     probs = base / base.sum()
     return np.sort(rng.choice(T, size=n_jobs, p=probs, replace=True))
+
+
+def _sample_job(jid: int, arrival: int, rng: np.random.Generator,
+                small: bool, time_insensitive: float,
+                time_sensitive: float) -> Job:
+    """One job from the paper's Table-I parameter ranges (shared by the
+    episodic ``make_jobs`` and the open-ended ``stream_jobs``; the rng
+    draw order is exactly ``make_jobs``'s original per-job body)."""
+    if small:
+        E = int(rng.integers(1, 4))
+        N = int(rng.integers(1, 5))
+        M = int(rng.integers(5, 20))
+    else:
+        E = int(rng.integers(50, 201))
+        N = int(rng.integers(5, 101))
+        M = int(rng.integers(10, 101))
+    tau = float(rng.uniform(0.001, 0.1))
+    e = float(rng.uniform(30, 575)) / 1000.0          # GB
+    b = float(rng.uniform(0.1, 5.0))                  # Gbps -> GB/slot units
+    B = float(rng.uniform(5.0, 20.0))
+    # Normalize per-chunk time so the *fastest possible duration*
+    # E*M*(tau+2e/b) lands in [2, 16] slots, consistent with the paper's
+    # target completion times gamma3 in [1, 15] and its testbed jobs
+    # (40 min - 2 h on 20-min slots).  Keeps chunk_time << 1 slot, the
+    # paper's own assumption in Sec. III-B.
+    ct = M * (tau + 2 * e / b)
+    min_dur = E * ct
+    target = float(rng.uniform(2.0, 16.0))
+    # keep per-chunk time << slot length (paper Sec. III-B assumption);
+    # binds only for tiny-E test jobs.
+    target = min(target, 0.9 * E)
+    scale = target / min_dur
+    tau *= scale
+    e *= scale
+    w = np.array([float(rng.integers(0, 5)), float(rng.integers(1, 11)),
+                  float(rng.uniform(2, 32)), float(rng.uniform(5, 10)), b])
+    s = np.array([0.0, float(rng.integers(1, 11)),
+                  float(rng.uniform(2, 32)), float(rng.uniform(5, 10)), B])
+    u = rng.random()
+    gamma1 = float(rng.uniform(1, 100))
+    if u < time_insensitive:
+        gamma2 = 0.0
+    elif u < time_insensitive + time_sensitive:
+        gamma2 = float(rng.uniform(0.01, 1.0))
+    else:
+        gamma2 = float(rng.uniform(4.0, 6.0))
+    # gamma3 is the job's *target completion time* (paper: in [1,15]);
+    # couple it to the fastest achievable duration so targets are
+    # meaningful (reachable when scheduled promptly, missed otherwise).
+    min_dur_slots = max(1.0, target - 1.0)
+    gamma3 = float(np.clip(min_dur_slots * rng.uniform(1.0, 2.5), 1, 40))
+    return Job(jid=jid, arrival=arrival, epochs=E, num_chunks=N,
+               minibatches_per_chunk=M, tau=tau, grad_size=e, worker_bw=b,
+               ps_bw=B, worker_res=w, ps_res=s,
+               utility=SigmoidUtility(gamma1, gamma2, gamma3))
 
 
 def make_jobs(n_jobs: int, T: int = 100, seed: int = 0,
@@ -51,53 +129,52 @@ def make_jobs(n_jobs: int, T: int = 100, seed: int = 0,
     5-20 Gbps.  ``small=True`` shrinks E,N for fast tests/offline-opt."""
     rng = np.random.default_rng(seed)
     arrivals = _arrivals(n_jobs, max(T - 1, 1), rng)
-    jobs = []
-    for jid in range(n_jobs):
-        if small:
-            E = int(rng.integers(1, 4))
-            N = int(rng.integers(1, 5))
-            M = int(rng.integers(5, 20))
-        else:
-            E = int(rng.integers(50, 201))
-            N = int(rng.integers(5, 101))
-            M = int(rng.integers(10, 101))
-        tau = float(rng.uniform(0.001, 0.1))
-        e = float(rng.uniform(30, 575)) / 1000.0          # GB
-        b = float(rng.uniform(0.1, 5.0))                  # Gbps -> GB/slot units
-        B = float(rng.uniform(5.0, 20.0))
-        # Normalize per-chunk time so the *fastest possible duration*
-        # E*M*(tau+2e/b) lands in [2, 16] slots, consistent with the paper's
-        # target completion times gamma3 in [1, 15] and its testbed jobs
-        # (40 min - 2 h on 20-min slots).  Keeps chunk_time << 1 slot, the
-        # paper's own assumption in Sec. III-B.
-        ct = M * (tau + 2 * e / b)
-        min_dur = E * ct
-        target = float(rng.uniform(2.0, 16.0))
-        # keep per-chunk time << slot length (paper Sec. III-B assumption);
-        # binds only for tiny-E test jobs.
-        target = min(target, 0.9 * E)
-        scale = target / min_dur
-        tau *= scale
-        e *= scale
-        w = np.array([float(rng.integers(0, 5)), float(rng.integers(1, 11)),
-                      float(rng.uniform(2, 32)), float(rng.uniform(5, 10)), b])
-        s = np.array([0.0, float(rng.integers(1, 11)),
-                      float(rng.uniform(2, 32)), float(rng.uniform(5, 10)), B])
-        u = rng.random()
-        gamma1 = float(rng.uniform(1, 100))
-        if u < time_insensitive:
-            gamma2 = 0.0
-        elif u < time_insensitive + time_sensitive:
-            gamma2 = float(rng.uniform(0.01, 1.0))
-        else:
-            gamma2 = float(rng.uniform(4.0, 6.0))
-        # gamma3 is the job's *target completion time* (paper: in [1,15]);
-        # couple it to the fastest achievable duration so targets are
-        # meaningful (reachable when scheduled promptly, missed otherwise).
-        min_dur_slots = max(1.0, target - 1.0)
-        gamma3 = float(np.clip(min_dur_slots * rng.uniform(1.0, 2.5), 1, 40))
-        jobs.append(Job(jid=jid, arrival=int(arrivals[jid]), epochs=E,
-                        num_chunks=N, minibatches_per_chunk=M, tau=tau,
-                        grad_size=e, worker_bw=b, ps_bw=B, worker_res=w,
-                        ps_res=s, utility=SigmoidUtility(gamma1, gamma2, gamma3)))
-    return jobs
+    return [_sample_job(jid, int(arrivals[jid]), rng, small,
+                        time_insensitive, time_sensitive)
+            for jid in range(n_jobs)]
+
+
+def stream_jobs(rate: float = 0.2, seed: int = 0,
+                max_slots: Optional[int] = None, *,
+                diurnal_period: int = 288, diurnal_amp: float = 0.6,
+                burst_prob: float = 0.01, burst_mean_len: int = 12,
+                burst_tail: float = 1.5, burst_cap: float = 8.0,
+                small: bool = False, time_insensitive: float = 0.10,
+                time_sensitive: float = 0.55) -> Iterator[Job]:
+    """Open-ended arrival stream for the continuous serving mode.
+
+    Per-slot Poisson counts with intensity
+
+        lambda(t) = rate * (1 + diurnal_amp * sin(2*pi*t/diurnal_period))
+                         * burst(t)
+
+    where ``burst(t)`` is 1 outside burst episodes; an episode starts
+    with probability ``burst_prob`` per slot, lasts a geometric
+    ``burst_mean_len`` slots, and multiplies the rate by a heavy-tailed
+    ``min(1 + Pareto(burst_tail), burst_cap)`` amplitude — the diurnal x
+    bursty shape of production serving traffic.  Jobs are yielded in
+    nondecreasing arrival order with sequential jids; the generator is a
+    pure function of ``seed`` and never materialises the trace, so it
+    runs in O(1) memory for arbitrarily long horizons.  ``max_slots``
+    bounds the arrival clock (jobs may still *finish* later); ``None``
+    streams forever.
+    """
+    rng = np.random.default_rng(seed)
+    jid = 0
+    t = 0
+    burst_left = 0
+    burst_amp = 1.0
+    while max_slots is None or t < max_slots:
+        if burst_left == 0 and rng.random() < burst_prob:
+            burst_left = int(rng.geometric(1.0 / max(burst_mean_len, 1)))
+            burst_amp = float(min(1.0 + rng.pareto(burst_tail), burst_cap))
+        mult = burst_amp if burst_left > 0 else 1.0
+        if burst_left > 0:
+            burst_left -= 1
+        lam = rate * (1.0 + diurnal_amp
+                      * math.sin(2.0 * math.pi * t / diurnal_period)) * mult
+        for _ in range(int(rng.poisson(max(lam, 0.0)))):
+            yield _sample_job(jid, t, rng, small,
+                              time_insensitive, time_sensitive)
+            jid += 1
+        t += 1

@@ -1,6 +1,7 @@
-"""benchmarks/run.py bench_decision/v2 schema validation: a malformed
-section must abort the write instead of poisoning the committed baseline
-(it used to surface only later, via check_regression)."""
+"""benchmarks/run.py bench_decision schema validation (v3; v2 baselines
+read compatibly): a malformed section must abort the write instead of
+poisoning the committed baseline (it used to surface only later, via
+check_regression)."""
 import json
 
 import pytest
@@ -10,7 +11,7 @@ from benchmarks.run import _merge_json, validate_tracked
 
 def _payload():
     return {
-        "schema": "bench_decision/v2",
+        "schema": "bench_decision/v3",
         "platform": "test", "python": "3",
         "decision_seconds": {
             "jax": {"p50": 0.01, "p95": 0.02, "mean": 0.012},
@@ -27,6 +28,14 @@ def _payload():
                       "utility": {"fifo": 100.0, "oasis": 7000.0},
                       "decision": {"oasis": {"p50": 0.2, "mean": 0.3,
                                              "p95": None}}},
+        "serving": {"H": 50, "K": 50, "window": 64, "slots": 20000,
+                    "n_jobs": 4000, "quick": False,
+                    "wall_seconds": {"fifo": 2.0, "oasis": 120.0},
+                    "utility": {"fifo": 900.0, "oasis": 1000.0},
+                    "decisions_per_sec": {"fifo": 2000.0, "oasis": 33.0},
+                    "window_bytes": {"fifo": 0, "oasis": 256000},
+                    "decision": {"oasis": {"p50": 0.02, "mean": 0.03,
+                                           "p95": None}}},
         "rl": {"quick": False, "train_seconds": 250.0,
                "train_iterations": 160, "eval_seeds": [5, 6, 7],
                "instance": {"T": 100, "H": 50, "K": 50, "n_jobs": 200},
@@ -38,6 +47,15 @@ def _payload():
 
 def test_valid_payload_passes():
     assert validate_tracked(_payload()) == []
+
+
+def test_v2_schema_still_accepted():
+    """Committed v2 baselines (without the serving sections) must keep
+    validating — the v3 bump is read-compatible."""
+    p = _payload()
+    p["schema"] = "bench_decision/v2"
+    del p["serving"]
+    assert validate_tracked(p) == []
 
 
 def test_wrong_schema_flagged():
@@ -70,13 +88,33 @@ def test_scale_dims_type_checked():
     assert any("sim_scale.T" in x for x in validate_tracked(p))
 
 
+def test_serving_section_checked():
+    p = _payload()
+    p["serving"]["window"] = "64"
+    assert any("serving.window" in x for x in validate_tracked(p))
+    p = _payload()
+    p["serving"]["decisions_per_sec"]["oasis"] = float("inf")
+    assert any("serving.decisions_per_sec" in x
+               for x in validate_tracked(p))
+    p = _payload()
+    p["serving"]["window_bytes"] = [0]
+    assert any("serving.window_bytes" in x for x in validate_tracked(p))
+    p = _payload()
+    p["serving"]["decision"]["oasis"] = {"p50": "slow"}
+    assert any("serving.decision.oasis" in x for x in validate_tracked(p))
+    p = _payload()
+    p["serving_quick"] = {**p.pop("serving"), "quick": True}
+    assert validate_tracked(p) == []
+
+
 def test_corrupted_non_dict_sections_report_instead_of_raising():
     """The baseline file on disk can be arbitrarily corrupted (that is
     the validator's whole job) — a non-dict section must come back as a
     problem, never as an AttributeError."""
     for bad in ("corrupted", [1], 3):
-        for sec in ("decision_seconds", "sim_v2", "sim_scale", "rl"):
-            p = {"schema": "bench_decision/v2", sec: bad}
+        for sec in ("decision_seconds", "sim_v2", "sim_scale", "serving",
+                    "rl"):
+            p = {"schema": "bench_decision/v3", sec: bad}
             assert any(sec in x for x in validate_tracked(p))
     p = _payload()
     p["rl"]["per_seed"] = [1]
@@ -114,4 +152,18 @@ def test_merge_json_merges_and_preserves_sections(tmp_path):
     _merge_json(str(path), {"rl": _payload()["rl"]})
     doc = json.loads(path.read_text())
     assert "sim_scale" in doc and "rl" in doc     # sections accumulate
-    assert doc["schema"] == "bench_decision/v2"
+    assert doc["schema"] == "bench_decision/v3"
+
+
+def test_merge_json_upgrades_v2_baseline(tmp_path):
+    """Merging fresh sections into a committed v2 file keeps its sections
+    and rewrites the schema tag as v3."""
+    path = tmp_path / "bench.json"
+    v2 = _payload()
+    v2["schema"] = "bench_decision/v2"
+    del v2["serving"]
+    path.write_text(json.dumps(v2))
+    _merge_json(str(path), {"serving": _payload()["serving"]})
+    doc = json.loads(path.read_text())
+    assert doc["schema"] == "bench_decision/v3"
+    assert "sim_scale" in doc and "serving" in doc

@@ -1,19 +1,29 @@
-"""benchmarks/check_regression gate: leaf extraction for the scale
-sections (incl. the new oasis decision-latency leaves) and the hard
-refusal on quick-vs-full configuration mismatches (PR 4)."""
-from benchmarks.check_regression import _leaves, check
+"""benchmarks/check_regression gate: leaf extraction for the scale and
+serving sections (incl. the inverted higher-is-better throughput
+leaves), and the hard refusal on quick-vs-full configuration
+mismatches (PR 4)."""
+from benchmarks.check_regression import _leaves, _rate_leaves, check
 
 
 def _doc(quick_dec=True, scale_T=500, oasis_p50=0.2, fifo_wall=1.0,
-         quick_scale=False):
+         quick_scale=False, serving_window=64, oasis_dps=40.0,
+         serving_wall=100.0):
     return {
-        "schema": "bench_decision/v2",
+        "schema": "bench_decision/v3",
         "decision_seconds": {"jax": {"p50": 0.01}, "quick": quick_dec},
         "sim_scale": {
             "T": scale_T, "H": 100, "K": 100, "n_jobs": 2000,
             "quick": quick_scale,
             "wall_seconds": {"fifo": fifo_wall, "oasis": 600.0},
             "decision": {"oasis": {"p50": oasis_p50, "mean": 0.3}},
+        },
+        "serving": {
+            "H": 50, "K": 50, "window": serving_window, "slots": 20000,
+            "n_jobs": 4000, "quick": False,
+            "wall_seconds": {"fifo": 2.0, "oasis": serving_wall},
+            "decisions_per_sec": {"fifo": 2000.0, "oasis": oasis_dps},
+            "window_bytes": {"fifo": 0, "oasis": 256000},
+            "decision": {"oasis": {"p50": 0.02, "mean": 0.03}},
         },
     }
 
@@ -23,6 +33,60 @@ def test_leaves_include_scale_decision_p50():
     assert paths["sim_scale.wall_seconds.oasis"] == 600.0
     assert paths["sim_scale.decision.oasis.p50"] == 0.2
     assert "sim_scale.decision.oasis.mean" not in paths   # p50 is the gate
+
+
+def test_serving_leaves_and_rate_leaves():
+    paths = dict(_leaves(_doc()))
+    assert paths["serving.wall_seconds.oasis"] == 100.0
+    assert paths["serving.decision.oasis.p50"] == 0.02
+    # throughputs are higher-is-better: extracted separately, not as
+    # lower-better wall leaves
+    assert not any("decisions_per_sec" in p for p in paths)
+    rates = dict(_rate_leaves(_doc()))
+    assert rates == {"serving.decisions_per_sec.fifo": 2000.0,
+                     "serving.decisions_per_sec.oasis": 40.0}
+
+
+def test_serving_throughput_drop_gates_inverted():
+    """The gate fires when throughput DROPPED by more than the ratio —
+    and never when it improved."""
+    base = _doc()
+    slower = _doc(oasis_dps=10.0)                 # 4x throughput drop
+    assert check(base, slower, ratio=2.0) == 1
+    faster = _doc(oasis_dps=400.0)                # 10x improvement: fine
+    assert check(base, faster, ratio=2.0) == 0
+    # fifo sustains >1k/s (sub-ms per decision): below the noise floor,
+    # its throughput column is never gated
+    noisy = _doc()
+    noisy["serving"]["decisions_per_sec"]["fifo"] = 1.0
+    assert check(base, noisy, ratio=2.0) == 0
+
+
+def test_serving_wall_regression_gates():
+    assert check(_doc(), _doc(serving_wall=450.0), ratio=2.0) == 1
+
+
+def test_serving_dims_mismatch_refuses():
+    base, fresh = _doc(), _doc(serving_window=32)
+    assert check(base, fresh, ratio=2.0) == 2
+    assert check(base, fresh, ratio=2.0, allow_config_mismatch=True) == 0
+
+
+def test_serving_quick_section_never_gated():
+    base, fresh = _doc(), _doc()
+    fresh["serving_quick"] = {**fresh["serving"], "quick": True,
+                              "wall_seconds": {"oasis": 9999.0}}
+    base["serving_quick"] = {**base["serving"], "quick": True}
+    assert check(base, fresh, ratio=2.0) == 0
+
+
+def test_v2_baseline_without_serving_not_gated():
+    """Diffing a fresh v3 run against a committed v2 baseline (no serving
+    section) must neither refuse nor gate the new leaves."""
+    base = _doc()
+    del base["serving"]
+    base["schema"] = "bench_decision/v2"
+    assert check(base, _doc(oasis_dps=1.0), ratio=2.0) == 0
 
 
 def test_matching_configs_compare_and_gate():

@@ -195,6 +195,102 @@ def test_commit_window_at_horizon_edges():
     assert np.array_equal(state._g_host, want)
 
 
+# ---------------------------------------------------------------------------
+# rolling window (continuous serving mode)
+# ---------------------------------------------------------------------------
+
+def _mirror_commit(full, win, origin, job, workers, ps, release=False):
+    """Apply the same logical commit to the windowed state (window-local
+    slots) and the fixed-horizon state (absolute slots)."""
+    op_w = win.release if release else win.commit
+    op_f = full.release if release else full.commit
+    op_w(job, workers, ps)
+    op_f(job, {origin + t: y for t, y in workers.items()},
+         {origin + t: z for t, z in ps.items()})
+
+
+def test_rolling_window_matches_fixed_horizon_deterministic():
+    """A windowed PriceState driven by ``advance`` + window-local commits
+    stays bit-equal to the fixed-horizon state on the overlapping slots —
+    host mirror AND device residency — while the slid-out slots retire
+    into exact aggregates."""
+    rng = np.random.default_rng(8)
+    T, W = 40, 12
+    cluster = make_cluster(T=T, H=4, K=4)
+    params = price_params_from_jobs(make_jobs(8, T=T, seed=0, small=True),
+                                    cluster)
+    full = PriceState(cluster, params)
+    win = PriceState(cluster, params, window=W)
+    full.device_state()
+    win.device_state()
+    origin = 0
+    for step in range(12):
+        origin += int(rng.integers(0, 5))
+        win.advance(origin)
+        live = max(min(T - origin, W), 0)
+        if live:
+            job = _mk_job(step, rng.integers(0, 8, 5) / 4.0,
+                          rng.integers(0, 8, 5) / 4.0)
+            slots = rng.choice(live, size=min(3, live), replace=False)
+            workers = {int(t): rng.integers(0, 4, 4).astype(np.int64)
+                       for t in slots}
+            ps = {int(t): rng.integers(0, 4, 4).astype(np.int64)
+                  for t in slots}
+            _mirror_commit(full, win, origin, job, workers, ps)
+            if step % 3 == 2:
+                _mirror_commit(full, win, origin, job, workers, ps,
+                               release=True)
+        ov = max(min(T - origin, W), 0)
+        assert np.array_equal(win._g_host[:ov],
+                              full._g_host[origin:origin + ov])
+        assert np.array_equal(win._v_host[:ov],
+                              full._v_host[origin:origin + ov])
+        dw, df = win.device_state(), full.device_state()
+        assert np.array_equal(np.asarray(dw[0])[:ov],
+                              np.asarray(df[0])[origin:origin + ov])
+        assert np.array_equal(np.asarray(dw[1])[:ov],
+                              np.asarray(df[1])[origin:origin + ov])
+    assert win.device_uploads == 1, "advance() must slide on-device, not re-upload"
+    assert win.retired_slots == origin
+    # dyadic demands -> every float add is exact, so the retired GPU-slot
+    # aggregate equals the full table's prefix sum bit for bit
+    assert win.retired_gpu_slots == full._g_host[:min(origin, T), :, 0].sum()
+
+
+def test_advance_is_o1_uploads_and_monotone():
+    """The serving-loop invariant: thousands of advances never re-upload
+    the residency (O(1) full syncs per run), and the clock cannot move
+    backwards."""
+    state = _state(T=12)
+    win = PriceState(state.cluster, state.params, window=6)
+    win.device_state()
+    rng = np.random.default_rng(9)
+    now = 0
+    for step in range(200):
+        now += int(rng.integers(0, 3))
+        win.advance(now)
+        job = _mk_job(step, rng.integers(0, 8, 5) / 4.0,
+                      rng.integers(0, 8, 5) / 4.0)
+        win.commit(job, {int(rng.integers(0, 6)):
+                         rng.integers(0, 3, 4).astype(np.int64)}, {})
+        dev = win.device_state()
+        assert np.array_equal(np.asarray(dev[0]), win._g_host)
+    assert win.device_uploads == 1
+    assert win.retired_slots == now
+    with pytest.raises(ValueError):
+        win.advance(now - 1)
+
+
+def test_window_geq_T_is_episodic():
+    """window >= T clamps to the full horizon: the windowed state is the
+    fixed-horizon state (the safety rail for every existing suite)."""
+    state = _state(T=10)
+    win = PriceState(state.cluster, state.params, window=99)
+    assert win.horizon == 10
+    assert win.window == 10
+    assert win._g_host.shape == state._g_host.shape
+
+
 def test_size_bucket_monotone():
     prev = 0
     for n in range(1, 400):
@@ -253,7 +349,68 @@ if HAVE_HYPOTHESIS:
         assert state.version == ver0 + 2
         assert np.array_equal(state._g_host, g0)
         assert np.array_equal(state._v_host, v0)
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def _window_trace(draw):
+        T = draw(st.integers(6, 20))
+        W = draw(st.integers(2, T))
+        n_steps = draw(st.integers(1, 6))
+        steps = [(draw(st.integers(0, 3)),          # advance increment
+                  draw(st.integers(0, 2 ** 16)),    # per-step alloc seed
+                  draw(st.booleans()))              # release after commit?
+                 for _ in range(n_steps)]
+        return T, W, steps
+
+    @settings(max_examples=30, deadline=None)
+    @given(_window_trace())
+    def test_hypothesis_rolling_window_equals_fixed_horizon(case):
+        """advance() + commit/release on the window == the fixed-horizon
+        PriceState on the overlapping slots, bit for bit, in both the
+        host mirror and the device residency — with O(1) uploads."""
+        T, W, steps = case
+        cluster = make_cluster(T=T, H=3, K=3)
+        params = price_params_from_jobs(
+            make_jobs(4, T=T, seed=0, small=True), cluster)
+        full = PriceState(cluster, params)
+        win = PriceState(cluster, params, window=W)
+        full.device_state()
+        win.device_state()
+        origin = 0
+        for adv, jseed, do_release in steps:
+            origin += adv
+            win.advance(origin)
+            live = max(min(T - origin, win.horizon), 0)
+            if live:
+                rng = np.random.default_rng(jseed)
+                job = _mk_job(jseed, rng.integers(0, 8, 5) / 4.0,
+                              rng.integers(0, 8, 5) / 4.0)
+                workers = {int(t): rng.integers(0, 4, 3).astype(np.int64)
+                           for t in rng.choice(live, size=min(2, live),
+                                               replace=False)}
+                ps = {int(t): rng.integers(0, 4, 3).astype(np.int64)
+                      for t in rng.choice(live, size=min(2, live),
+                                          replace=False)}
+                _mirror_commit(full, win, origin, job, workers, ps)
+                if do_release:
+                    _mirror_commit(full, win, origin, job, workers, ps,
+                                   release=True)
+            ov = max(min(T - origin, win.horizon), 0)
+            assert np.array_equal(win._g_host[:ov],
+                                  full._g_host[origin:origin + ov])
+            assert np.array_equal(win._v_host[:ov],
+                                  full._v_host[origin:origin + ov])
+            dw, df = win.device_state(), full.device_state()
+            assert np.array_equal(np.asarray(dw[0])[:ov],
+                                  np.asarray(df[0])[origin:origin + ov])
+            assert np.array_equal(np.asarray(dw[1])[:ov],
+                                  np.asarray(df[1])[origin:origin + ov])
+        assert win.device_uploads == 1 and full.device_uploads == 1
+        assert win.retired_slots == origin
 else:                                                # pragma: no cover
     @pytest.mark.skip(reason="hypothesis not installed")
     def test_hypothesis_release_inverts_commit():
+        pass
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_hypothesis_rolling_window_equals_fixed_horizon():
         pass

@@ -1,0 +1,108 @@
+"""Continuous serving mode suite (streaming engine + rolling window).
+
+Pins the contract of ``sim/engine.py``'s streaming section and the
+``serving`` scenario:
+
+* translation invariance — an OASiS stream whose jobs all arrive at slot
+  ``s`` equals the episodic fixed-horizon run of the same jobs at slot 0
+  exactly (utility, admissions, completions shifted by ``s``): the
+  rolling window + window-local decisions change coordinates, never
+  decisions;
+* the reactive baselines are horizon-free already — streaming them over
+  a finite trace reproduces the fixed-horizon ``run`` bit for bit;
+* a streamed trace completes for every scheduler with price-state memory
+  bounded by the window (``SimResult.window_bytes``), and the fused jax
+  backend streams to the same decisions as the numpy one.
+"""
+import dataclasses
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import price_params_from_jobs
+from repro.sim import engine, make_cluster, make_jobs, stream_jobs
+from repro.sim.scenarios import REACTIVE
+
+W = 24
+
+
+def _jobs_at(arrival, n=10, seed=2):
+    jobs = make_jobs(n, T=10, seed=seed, small=True)
+    return [dataclasses.replace(j, jid=j.jid, arrival=arrival) for j in jobs]
+
+
+def test_oasis_stream_is_translation_of_episodic():
+    cluster = make_cluster(T=W, H=6, K=6)
+    jobs0 = _jobs_at(0)
+    params = price_params_from_jobs(jobs0, cluster)
+    ep = engine.run(cluster, jobs0, scheduler="oasis", params=params,
+                    quantum=0, check=True)
+    shift = 5
+    st = engine.run_stream(cluster, iter(_jobs_at(shift)), scheduler="oasis",
+                           params=params, window=W, quantum=0, check=True)
+    assert st.total_utility == ep.total_utility
+    assert st.accepted == ep.accepted and st.completed == ep.completed
+    assert st.completion == {j: c + shift for j, c in ep.completion.items()}
+    assert st.window_bytes == W * (6 + 6) * 5 * 8
+
+
+@pytest.mark.parametrize("scheduler", REACTIVE)
+def test_reactive_stream_equals_fixed_horizon(scheduler):
+    # ample T: every admitted job finishes well inside the fixed horizon,
+    # so the episodic run has no end-of-horizon truncation to differ on
+    cluster = make_cluster(T=200, H=8, K=8)
+    jobs = make_jobs(25, T=30, seed=4, small=True)
+    fixed = engine.run(cluster, jobs, scheduler=scheduler, check=True)
+    streamed = engine.run_stream(cluster, iter(jobs), scheduler=scheduler,
+                                 check=True)
+    assert streamed.completion == fixed.completion
+    assert streamed.accepted == fixed.accepted
+    assert np.isclose(streamed.total_utility, fixed.total_utility)
+    assert streamed.window_bytes == 0
+
+
+def test_streamed_trace_completes_for_all_schedulers():
+    """A diurnal x bursty open-ended trace runs to completion for every
+    scheduler with memory bounded by the window — the serving scenario's
+    acceptance shape at test scale."""
+    H = K = 6
+    cluster = make_cluster(T=W, H=H, K=K)
+    for scheduler in ("oasis",) + REACTIVE:
+        trace = stream_jobs(rate=0.15, seed=0, max_slots=250, small=True)
+        kw = dict(quantum=0) if scheduler == "oasis" else {}
+        r = engine.run_stream(cluster, trace, scheduler=scheduler, window=W,
+                              check=True, **kw)
+        assert r.n_jobs > 0
+        assert r.completed <= r.accepted <= r.n_jobs
+        assert max(r.completion.values(), default=0) < 250 + 10 * W
+        if scheduler == "oasis":
+            assert r.window_bytes == W * (H + K) * 5 * 8
+        else:
+            assert r.window_bytes == 0
+
+
+def test_stream_jax_backend_matches_fast():
+    """The fused jit engine over the device-resident rolling window makes
+    the same streamed decisions as the numpy path."""
+    cluster = make_cluster(T=W, H=5, K=5)
+    jobs = list(itertools.islice(
+        stream_jobs(rate=0.3, seed=6, small=True), 30))
+    params = price_params_from_jobs(
+        [dataclasses.replace(j, arrival=0) for j in jobs],
+        dataclasses.replace(cluster, T=W))
+    fast = engine.run_stream(cluster, iter(jobs), scheduler="oasis",
+                             params=params, impl="fast", window=W,
+                             quantum=0, check=True)
+    fused = engine.run_stream(cluster, iter(jobs), scheduler="oasis",
+                              params=params, impl="jax", window=W,
+                              quantum=0, check=True)
+    assert fused.accepted == fast.accepted
+    assert fused.completion == fast.completion
+    assert np.isclose(fused.total_utility, fast.total_utility)
+
+
+def test_run_stream_learned_requires_policy():
+    cluster = make_cluster(T=W, H=4, K=4)
+    with pytest.raises(ValueError, match="needs a policy"):
+        engine.run_stream(cluster, iter(()), scheduler="learned")

@@ -1,11 +1,14 @@
 """Property-style (seeded) tests for the workload/cluster generator
-(sim/workload.py): arrival-process bounds and burstiness, and feasibility
-of every generated job on the generated cluster."""
+(sim/workload.py): arrival-process bounds and burstiness, feasibility
+of every generated job on the generated cluster, and the open-ended
+``stream_jobs`` serving trace (reproducibility, ordering, rate shape)."""
+import itertools
+
 import numpy as np
 import pytest
 
-from repro.sim import make_cluster, make_jobs
-from repro.sim.workload import _arrivals
+from repro.sim import make_cluster, make_jobs, stream_jobs
+from repro.sim.workload import _arrivals, _burst_profile
 
 
 @pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
@@ -33,6 +36,26 @@ def test_burst_windows_raise_rate():
     assert window.max() > 2.0 * uniform_window, "no burst window detected"
     tail = counts[-T // 10:].sum()
     assert tail < 0.02 * n, f"tail arrivals not damped: {tail}/{n}"
+
+
+@pytest.mark.parametrize("seed", range(30))
+def test_edge_bursts_keep_full_mass(seed):
+    """Regression: burst windows used to be clipped at the trace edges
+    (``base[max(0, c-width):c+width]``), so a burst centered near 0 or T
+    silently lost up to half its slot mass.  Windows now wrap (indices
+    mod T): every burst boosts exactly ``2*width`` slots regardless of
+    where its center lands."""
+    T = 40                      # small T => centers frequently near edges
+    width = max(2, T // 20)
+    n_bursts = max(1, T // 40)
+    rng = np.random.default_rng(seed)
+    base = _burst_profile(T, rng)
+    # n_bursts == 1 here, so boosted slots are exactly the x4 ones
+    assert n_bursts == 1
+    assert (base == 4.0).sum() == 2 * width, (
+        f"burst lost mass at the edge: {(base == 4.0).sum()} boosted "
+        f"slots, expected {2 * width}")
+    assert np.all((base == 1.0) | (base == 4.0))
 
 
 @pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
@@ -74,3 +97,66 @@ def test_jobs_complete_under_ample_capacity():
     r = simulate(cluster, jobs, scheduler="dorm", check=True)
     assert r.accepted == len(jobs)
     assert r.completed == len(jobs)
+
+
+# -- the open-ended serving stream -----------------------------------------
+
+def test_stream_jobs_reproducible_and_ordered():
+    """The stream is a pure function of the seed: two generators with the
+    same seed replay the identical trace (the per-scheduler fairness
+    contract of the serving scenario); jids are sequential and arrivals
+    nondecreasing."""
+    a = list(stream_jobs(rate=0.5, seed=7, max_slots=400))
+    b = list(stream_jobs(rate=0.5, seed=7, max_slots=400))
+    assert len(a) == len(b) > 0
+    for ja, jb in zip(a, b):
+        assert ja.jid == jb.jid and ja.arrival == jb.arrival
+        assert ja.epochs == jb.epochs and ja.tau == jb.tau
+        np.testing.assert_array_equal(ja.worker_res, jb.worker_res)
+    arr = np.array([j.arrival for j in a])
+    assert np.all(arr[:-1] <= arr[1:])
+    assert [j.jid for j in a] == list(range(len(a)))
+    assert arr.max() < 400
+    c = list(stream_jobs(rate=0.5, seed=8, max_slots=400))
+    assert [j.arrival for j in a] != [j.arrival for j in c], \
+        "different seeds must give different traces"
+
+
+def test_stream_jobs_prefix_stable_and_unbounded():
+    """``max_slots`` only truncates the arrival clock: the bounded trace
+    is an exact prefix of the unbounded stream (same seed), and the
+    unbounded generator keeps producing (O(1) memory, never materialised)."""
+    bounded = list(stream_jobs(rate=0.5, seed=3, max_slots=200))
+    unbounded = stream_jobs(rate=0.5, seed=3)
+    prefix = list(itertools.islice(unbounded, len(bounded)))
+    assert [(j.jid, j.arrival) for j in bounded] == \
+        [(j.jid, j.arrival) for j in prefix]
+    later = next(unbounded)     # generator keeps producing past the cut
+    assert later.jid == len(bounded) and later.arrival >= 200
+
+
+def test_stream_jobs_diurnal_rate_shape():
+    """Arrivals follow the diurnal sinusoid: with bursts disabled, the
+    half-period around the peak must collect measurably more jobs than
+    the half-period around the trough."""
+    period = 200
+    jobs = list(stream_jobs(rate=1.0, seed=0, max_slots=10 * period,
+                            diurnal_period=period, diurnal_amp=0.8,
+                            burst_prob=0.0))
+    arr = np.array([j.arrival for j in jobs])
+    phase = (arr % period) / period
+    peak = ((phase > 0.05) & (phase < 0.45)).sum()      # sin > 0 half
+    trough = ((phase > 0.55) & (phase < 0.95)).sum()    # sin < 0 half
+    assert peak > 1.5 * trough, (peak, trough)
+
+
+def test_stream_jobs_feasible_on_cluster():
+    """Streamed jobs use the same Table-I sampler as ``make_jobs``: every
+    one fits the paper-scale fleet."""
+    cluster = make_cluster(T=64, H=10, K=10)
+    for job in itertools.islice(stream_jobs(rate=0.5, seed=1), 60):
+        assert np.any(np.all(cluster.worker_caps >= job.worker_res[None]
+                             - 1e-9, axis=1))
+        assert np.any(np.all(cluster.ps_caps >= job.ps_res[None] - 1e-9,
+                             axis=1))
+        assert job.ps_res[0] == 0.0
