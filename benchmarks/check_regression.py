@@ -53,7 +53,7 @@ MIN_BASELINE_SECONDS = 1e-3
 # spread) regenerated on shared runners against a dev-machine baseline —
 # a 2x wall-clock ratio there measures runner weather, not regressions.
 # Its record is still written and uploaded for inspection.
-SCALE_SECTIONS = ("sim_scale",)
+SCALE_SECTIONS = ("sim_scale", "sim_scale_100x")
 
 # gated serving sections.  serving_quick is the CI smoke (short streamed
 # trace on shared runners) — informational only, same rationale as

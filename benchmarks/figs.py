@@ -155,7 +155,9 @@ def sim_v2_speedup(T: int = 100, H: int = 20, K: int = 20, n: int = 60,
 
 def fig3_scale(quick: bool = False, include_oasis: bool = False,
                include_learned: bool = False,
-               stats_out: Optional[dict] = None) -> List[str]:
+               stats_out: Optional[dict] = None,
+               dims: Optional[dict] = None,
+               tag: str = "fig3_scale") -> List[str]:
     """fig3 at 10x the paper setting (T=500, 100+100 servers, 2000 jobs) on
     the sim-v2 engine; the v1 per-slot loop cannot finish this in
     reasonable time (see sim_v2_speedup for the controlled comparison).
@@ -168,22 +170,27 @@ def fig3_scale(quick: bool = False, include_oasis: bool = False,
     ``stats_out`` receives machine-readable per-scheduler wall clocks,
     utilities, and — for plan-ahead schedulers — per-decision latency
     stats (the ``sim_scale`` record tracked in ``BENCH_decision.json`` —
-    see ``benchmarks.run --only simscale``)."""
+    see ``benchmarks.run --only simscale``).  ``dims`` overrides the
+    instance dimensions (e.g. ``scenarios.SCALE_DIMS_100X`` for the 100x
+    record, with ``tag`` labelling its CSV rows)."""
     scheds = scenarios.ALL_SCHEDULERS if include_oasis else scenarios.REACTIVE
     if include_learned:
         scheds = tuple(scheds) + ("learned",)
     rows = []
-    results = scenarios.run_scale(seed=0, quick=quick, schedulers=scheds)
+    if dims is None:
+        dims = scenarios.SCALE_DIMS_QUICK if quick else scenarios.SCALE_DIMS
+    results = scenarios.run_scale(seed=0, quick=quick, schedulers=scheds,
+                                  T=dims["T"], H=dims["H"], K=dims["K"],
+                                  n=dims["n"])
     for r in results:
-        rows.append(f"fig3_scale[{r.scheduler};{r.variant}],"
+        rows.append(f"{tag}[{r.scheduler};{r.variant}],"
                     f"{r.wall_seconds*1e6:.0f},{r.utility:.2f}")
         if r.decision_p50 is not None:
-            rows.append(f"fig3_scale[{r.scheduler};decision_p50],"
+            rows.append(f"{tag}[{r.scheduler};decision_p50],"
                         f"{r.decision_p50*1e6:.0f},{r.decision_p50:.6f}")
-            rows.append(f"fig3_scale[{r.scheduler};decision_mean],"
+            rows.append(f"{tag}[{r.scheduler};decision_mean],"
                         f"{r.decision_mean*1e6:.0f},{r.decision_mean:.6f}")
     if stats_out is not None:
-        dims = scenarios.SCALE_DIMS_QUICK if quick else scenarios.SCALE_DIMS
         stats_out.update({
             "T": dims["T"], "H": dims["H"], "K": dims["K"],
             "n_jobs": dims["n"], "quick": bool(quick),

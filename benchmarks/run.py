@@ -71,15 +71,23 @@ def validate_tracked(payload: dict) -> list:
     Returns a list of problems (empty = valid).  ``_merge_json`` refuses
     to write an invalid file: a malformed section used to be caught only
     much later, by ``check_regression`` diffing against it — by which
-    time the broken file was already committed as the baseline."""
+    time the broken file was already committed as the baseline.
+
+    >>> from benchmarks.run import validate_tracked
+    >>> validate_tracked({"schema": "bench_decision/v3"})
+    []
+    >>> validate_tracked({"schema": "bench_decision/v3",
+    ...                   "decision_seconds": {"jax": {"p50": 0.01}}})
+    ['decision_seconds.jax: needs finite p50/p95/mean']
+    """
     problems = []
     if payload.get("schema") not in ("bench_decision/v2",
                                      "bench_decision/v3"):
         problems.append(f"schema: expected 'bench_decision/v2' or "
                         f"'bench_decision/v3', got {payload.get('schema')!r}")
     known = {"schema", "platform", "python", "decision_seconds", "sim_v2",
-             "sim_scale", "sim_scale_quick", "serving", "serving_quick",
-             "rl"}
+             "sim_scale", "sim_scale_quick", "sim_scale_100x", "serving",
+             "serving_quick", "rl"}
     for sec in sorted(set(payload) - known):
         problems.append(f"{sec}: unknown section (known: {sorted(known)})")
 
@@ -118,7 +126,7 @@ def validate_tracked(payload: dict) -> list:
                 _num_dict("sim_v2", key, stats, problems)
             elif not _is_num(stats):
                 problems.append(f"sim_v2.{key}: expected number")
-    for sec in ("sim_scale", "sim_scale_quick"):
+    for sec in ("sim_scale", "sim_scale_quick", "sim_scale_100x"):
         scale = _section(sec)
         if scale is None:
             continue
@@ -237,7 +245,23 @@ def _kernel_micro() -> list:
     return rows
 
 
+def _setup_jax_cache() -> None:
+    """Point jax at a persistent XLA compilation cache (honours an
+    existing ``JAX_COMPILATION_CACHE_DIR``).  Wall-clock rows then measure
+    the engine, not recompiles of bit-unchanged executables — and repeated
+    bench runs become comparable instead of varying by several seconds of
+    compile noise."""
+    cache = os.environ.get("JAX_COMPILATION_CACHE_DIR") or os.path.join(
+        os.path.expanduser("~"), ".cache", "repro-jax")
+    try:
+        import jax
+        jax.config.update("jax_compilation_cache_dir", cache)
+    except Exception:            # pragma: no cover - old jax / RO home
+        pass
+
+
 def main() -> None:
+    _setup_jax_cache()
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
@@ -292,6 +316,15 @@ def main() -> None:
         rows += figs.fig3_scale(quick=False, include_oasis=True,
                                 stats_out=scstats)
         tracked["sim_scale"] = scstats
+        # the 100x rung (T=1000, 200+200 servers, 8000 jobs), oasis
+        # included — the fused engine's scaling stays on the scoreboard
+        from repro.sim import scenarios as _scen
+        sc100: dict = {}
+        rows += figs.fig3_scale(quick=False, include_oasis=True,
+                                stats_out=sc100,
+                                dims=_scen.SCALE_DIMS_100X,
+                                tag="fig3_scale100x")
+        tracked["sim_scale_100x"] = sc100
     if "simscale_quick" in which:
         # CI smoke: the shrunk scale instance with the oasis AND learned
         # columns, so the device-resident decision pipeline and the rl/

@@ -29,6 +29,24 @@ class OASiS:
                        via :meth:`on_arrivals`
       * ``"loop"``   — the seed's per-slot-loop numpy path (benchmark
                        baseline only)
+
+    Example — one Alg. 1 pass over a tiny trace::
+
+        >>> from repro.core.oasis import OASiS
+        >>> from repro.core.pricing import price_params_from_jobs
+        >>> from repro.sim.workload import make_cluster, make_jobs
+        >>> cluster = make_cluster(T=20, H=3, K=3)
+        >>> jobs = sorted(make_jobs(4, T=20, seed=0, small=True),
+        ...               key=lambda j: j.arrival)
+        >>> sched = OASiS(cluster, price_params_from_jobs(jobs, cluster))
+        >>> plans = sched.on_arrivals(jobs)
+        >>> [p is not None for p in plans]     # admission decisions
+        [True, True, True, True]
+        >>> sorted(sched.accepted)
+        [0, 1, 2, 3]
+        >>> cap = sum(j.utility.gamma1 for j in jobs)   # sigmoid sup
+        >>> 0 < sched.total_utility <= cap
+        True
     """
 
     def __init__(self, cluster: ClusterSpec, params: PriceParams,
@@ -78,7 +96,8 @@ class OASiS:
         return self._resolve(job, self.propose(job))
 
     def on_arrivals(self, jobs: List[Job]) -> List[Optional[Schedule]]:
-        """Batched arrivals: decide all jobs in one vmapped engine call.
+        """Batched arrivals: decide the whole burst in one engine launch
+        per shape bucket, then commit sequentially.
 
         Alg. 1 semantics are preserved exactly.  Candidates are speculative
         (computed at the prices in effect when the batch starts):
@@ -88,7 +107,10 @@ class OASiS:
           a non-positive maximum stays non-positive;
         * an ACCEPTED candidate is used as-is only while no other job from
           the batch has been admitted; once prices move it is re-solved
-          individually against the updated state.
+          against the updated state — *incrementally*: the speculative
+          pass's COST rows are cached per job (``RowCache``), the price
+          state's dirty-slot log says which slots earlier commits touched,
+          and the re-solve recomputes only those tiles.
 
         The result is identical, job for job, to calling ``on_arrival`` in
         sequence (stable arrival order).
@@ -99,21 +121,43 @@ class OASiS:
             for i in order:
                 out[i] = self.on_arrival(jobs[i])
             return out
-        from .schedule_jax import best_schedule_fused_batch
+        import jax
+        import jax.numpy as jnp
+        from .schedule_jax import (_materialize, _state_arrays, _x64_context,
+                                   best_schedule_fused, decide_burst)
         times: List[float] = []
-        cands = best_schedule_fused_batch([jobs[i] for i in order],
-                                          self.state, timings=times)
+        pends = decide_burst([jobs[i] for i in order], self.state,
+                             timings=times)
         prices_moved = False
-        for pos, (i, cand) in enumerate(zip(order, cands)):
-            if cand is None or not prices_moved:
-                self.decision_seconds.append(times[pos])
-                out[i] = self._resolve(jobs[i], cand)
-                prices_moved = prices_moved or out[i] is not None
-            else:
-                out[i] = self.on_arrival(jobs[i])
-                # the speculative batch share spent on this job is real
-                # per-decision cost too — don't under-report latency
-                self.decision_seconds[-1] += times[pos]
+        with _x64_context("auto"):
+            dtype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+            for pos, (i, pend) in enumerate(zip(order, pends)):
+                if pend is None:                  # dcap == 0: trivial reject
+                    self.decision_seconds.append(times[pos])
+                    out[i] = self._resolve(jobs[i], None)
+                elif pend.best_t < 0 or not prices_moved:
+                    # speculative reject is final; speculative accept is
+                    # valid while no earlier job in the burst committed
+                    sched = None
+                    t0 = time.perf_counter()
+                    if pend.best_t >= 0:
+                        sd = _state_arrays(self.state, dtype)
+                        sched = _materialize(pend, self.state, sd, dtype)
+                    self.decision_seconds.append(
+                        times[pos] + time.perf_counter() - t0)
+                    out[i] = self._resolve(jobs[i], sched)
+                    prices_moved = prices_moved or out[i] is not None
+                else:
+                    # prices moved: incremental re-solve over cached rows
+                    t0 = time.perf_counter()
+                    pend.cache.sync(self.state)
+                    sched = best_schedule_fused(jobs[i], self.state,
+                                                row_cache=pend.cache)
+                    # the speculative batch share spent on this job is real
+                    # per-decision cost too — don't under-report latency
+                    self.decision_seconds.append(
+                        time.perf_counter() - t0 + times[pos])
+                    out[i] = self._resolve(jobs[i], sched)
         return out
 
     def _resolve(self, job: Job, sched: Optional[Schedule]

@@ -149,6 +149,12 @@ def price_params_from_jobs(jobs: Sequence[Job], cluster: ClusterSpec,
     return PriceParams(U1=U1, U2=U2, L1=L1, L2=L2)
 
 
+# dirty-slot log length cap: on overflow the oldest half is dropped and
+# the floor moves up (older caches then take one full recompute).  4096
+# commit windows of history is far more than any burst re-solve needs.
+_DIRTY_LOG_MAX = 4096
+
+
 def size_bucket(n: int, floor: int = 32, step: int = 64) -> int:
     """Size bucket: powers of two up to ``step``, then multiples of ``step``.
 
@@ -234,7 +240,29 @@ class PriceState:
     headroom, ``alloc_window``) take *local* indices, i.e. offsets from
     ``origin``; with the default ``window=None`` the horizon equals
     ``cluster.T`` and ``origin`` stays 0, so local == absolute and the
-    fixed-horizon behaviour is untouched."""
+    fixed-horizon behaviour is untouched.
+
+    Example — prices start at the ``L1`` floor, rise on ``commit`` and
+    return exactly on ``release``::
+
+        >>> import numpy as np
+        >>> from repro.core.oasis import OASiS
+        >>> from repro.core.pricing import PriceState, price_params_from_jobs
+        >>> from repro.sim.workload import make_cluster, make_jobs
+        >>> cluster = make_cluster(T=20, H=3, K=3)
+        >>> jobs = make_jobs(4, T=20, seed=0, small=True)
+        >>> params = price_params_from_jobs(jobs, cluster)
+        >>> state = PriceState(cluster, params)
+        >>> bool(np.all(state.worker_prices() == params.L1))
+        True
+        >>> plan = OASiS(cluster, params).propose(jobs[0])   # no commitment
+        >>> state.commit(jobs[0], plan.workers, plan.ps)
+        >>> bool(np.any(state.worker_prices() > params.L1))
+        True
+        >>> state.release(jobs[0], plan.workers, plan.ps)
+        >>> bool(np.all(state.worker_prices() == params.L1))
+        True
+    """
 
     def __init__(self, cluster: ClusterSpec, params: PriceParams,
                  window: Optional[int] = None):
@@ -251,6 +279,14 @@ class PriceState:
         self.retired_gpu_slots = 0.0        # sum of per-slot GPU units used
         # bumped on every commit/release (consumers may key caches on it)
         self.version = 0
+        # dirty-slot log: (version, t0, t1) per commit/release slot window,
+        # so row caches can invalidate only the slots a commit touched.
+        # ``_dirty_floor`` is the oldest version the log still covers —
+        # ``dirty_spans_since`` answers None (unknowable; invalidate all)
+        # for anything older.  advance() and mutable ``g``/``v`` access
+        # reset the floor: those change prices outside any logged window.
+        self._dirty_log: list = []
+        self._dirty_floor = 0
         # device residency: (g_dev, v_dev) jax arrays or None; static side
         # tables (caps + price params) cached per dtype
         self._dev = None
@@ -310,30 +346,43 @@ class PriceState:
                 self._dev = tuple(slide(buf, np.int32(k))
                                   for buf in self._dev)
         self.version += 1
+        # a slide remaps every local slot index — caches from before it
+        # cannot be patched span-wise, only rebuilt
+        self._dirty_log.clear()
+        self._dirty_floor = self.version
 
     # -- host views --------------------------------------------------------
     @property
     def g(self) -> np.ndarray:
         """Worker-pool allocation (T, H, R), host numpy.  Hands out the
         mutable mirror, so the device residency is conservatively dropped
-        (re-uploaded on next ``device_state``)."""
+        (re-uploaded on next ``device_state``) and existing row caches are
+        conservatively invalidated (dirty floor moves past ``version``)."""
         self._dev = None
+        self._dirty_log.clear()
+        self._dirty_floor = self.version + 1
         return self._g_host
 
     @g.setter
     def g(self, value: np.ndarray) -> None:
         self._g_host = np.asarray(value, dtype=np.float64)
         self._dev = None
+        self._dirty_log.clear()
+        self._dirty_floor = self.version + 1
 
     @property
     def v(self) -> np.ndarray:
         self._dev = None
+        self._dirty_log.clear()
+        self._dirty_floor = self.version + 1
         return self._v_host
 
     @v.setter
     def v(self, value: np.ndarray) -> None:
         self._v_host = np.asarray(value, dtype=np.float64)
         self._dev = None
+        self._dirty_log.clear()
+        self._dirty_floor = self.version + 1
 
     # -- price tables -----------------------------------------------------
     def worker_prices(self) -> np.ndarray:
@@ -402,6 +451,12 @@ class PriceState:
                 self._device_apply(deltas)
                 self._commits_since_sync += 1
         self.version += 1
+        for _, _, t0, delta in deltas:
+            self._dirty_log.append((self.version, t0, t0 + delta.shape[0]))
+        if len(self._dirty_log) > _DIRTY_LOG_MAX:
+            drop = len(self._dirty_log) - _DIRTY_LOG_MAX // 2
+            self._dirty_floor = self._dirty_log[drop - 1][0]
+            del self._dirty_log[:drop]
 
     def _device_apply(self, deltas) -> None:
         """Stream the slot-window deltas to the resident device arrays."""
@@ -423,6 +478,20 @@ class PriceState:
         """Inverse of commit — used when a running job is preempted/killed
         (fault handling), not part of the paper's committed schedules."""
         self._apply(workers, ps, job.worker_res, job.ps_res, -1.0)
+
+    def dirty_spans_since(self, version: int):
+        """Slot spans whose prices may have moved since ``version``.
+
+        Returns a list of local-slot ``[t0, t1)`` pairs (possibly
+        overlapping, possibly empty), or ``None`` when the delta is
+        unknowable — ``version`` predates the log floor (log trimmed, a
+        window slide, or mutable ``g``/``v`` access) — in which case the
+        caller must invalidate everything.  Commit/release windows are
+        logged in :meth:`_apply`; row caches consume this via
+        ``RowCache.sync``."""
+        if version < self._dirty_floor:
+            return None
+        return [(t0, t1) for v, t0, t1 in self._dirty_log if v > version]
 
     def headroom_workers(self, t: int) -> np.ndarray:
         return self.cluster.worker_caps - self._g_host[t]

@@ -1,30 +1,56 @@
 """Fused, jit-compiled JAX backend for the Alg. 2 dual subroutine.
 
-``best_schedule_fused`` runs the WHOLE per-arrival pipeline as one XLA
-computation: dual prices from the allocation state, per-server capacity +
-sorted prefix-sum greedy COST_t rows for all (t, d), the banded min-plus DP
-sweep over slots, the payoff argmax with the reference tie rule, the
-split-table backtrack, and the greedy placement extraction.  Nothing
-re-enters Python between stages, so a decision costs one dispatch instead of
-O(T) interpreter round-trips.
+The engine runs the WHOLE per-arrival pipeline as XLA computations: dual
+prices from the allocation state, per-server capacity + sorted prefix-sum
+greedy COST_t rows, the banded min-plus DP sweep over slots, the payoff
+argmax with the reference tie rule, the split-table backtrack, and the
+greedy placement extraction.
 
-``best_schedule_fused_batch`` vmaps the same core over a padded batch of
-jobs (shared price state) — the speculative half of ``OASiS.on_arrivals``.
+**Tiled decision core** (``_decide_tiled``): the horizon is walked in
+``TILE``-slot blocks inside a ``lax.while_loop``, natively batched over a
+lane axis so an entire arrival burst is one device launch:
 
-Precision: on CPU the engine runs under ``jax.experimental.enable_x64`` by
-default so its decisions match the float64 numpy/reference paths exactly;
-on TPU it runs float32 (f64 is unsupported there) with the Pallas min-plus
-sweep kernel.  An ambient ``jax_enable_x64`` setting is always respected.
+* blocks before the earliest arrival in the batch are skipped outright
+  (their COST rows are the DP identity ``[0, inf, ...]``);
+* after each block the loop exits early once **no remaining slot can beat
+  the incumbent payoff for any lane** — exact, not heuristic, because the
+  suffix maximum of the utility curve bounds future payoffs from above and
+  every schedule's cost is bounded below by the LIVE price-floor bound
+  ``workload * min_d(workers_for(d)/d) * min over feasible slots of the
+  cheapest single-worker slot cost`` at the current prices (>= the static
+  ``L1 * sum(worker_res)`` floor, and far tighter once the cluster fills
+  up).  The reference tie rule (``> best + 1e-12``) therefore cannot
+  switch on any skipped slot and decisions stay bit-identical to
+  ``best_schedule_ref``;
+* COST rows can be served from a :class:`RowCache` — a commit only moves
+  prices inside the committed slot window, so re-solves (the sequential
+  half of ``OASiS.on_arrivals``) recompute only dirtied tiles.
 
-``dp_sweep_jax`` (the seed's DP-only entry point) is kept for micro-benches
-and backward compatibility; it now follows ``jax_enable_x64`` instead of
-silently downcasting to float32, and its Pallas path is the single-launch
-sweep kernel rather than a ``lax.scan`` of tiny launches.
+Placement is extracted by a second, small jit (``_place_slots``) over
+just the slots of the accepted schedule that actually deploy, so the
+decision loop never materializes placement tables for slots it will
+not use.
+
+``best_schedule_fused_batch`` decides a padded batch of jobs (shared
+price state) in one launch per shape bucket — the speculative half of
+``OASiS.on_arrivals``.
+
+Precision: on CPU the engine runs under ``jax.experimental.enable_x64``
+by default so its decisions match the float64 numpy/reference paths
+exactly; on TPU it runs float32 (f64 is unsupported there) with the
+Pallas min-plus sweep kernel via the legacy monolithic core
+(``use_pallas=True`` keeps that path compiled and equivalence-tested).
+
+``dp_sweep_jax`` (the seed's DP-only entry point) is kept for
+micro-benches and backward compatibility.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+import os
 import time
+import weakref
 from typing import List, Optional, Sequence, Tuple
 
 import jax
@@ -33,6 +59,7 @@ import numpy as np
 
 from ..kernels.minplus.kernel import minplus_sweep_pallas
 from ..kernels.minplus.ref import minplus_sweep_cost, minplus_sweep_ref
+from ..kernels.minplus.tiled import TILE, minplus_chain_step
 from .pricing import PriceState, size_bucket as _bucket
 from .types import Job, R, Schedule
 
@@ -41,6 +68,31 @@ from .types import Job, R, Schedule
 # of it stay exact-ish in f32 comparisons against tiny instance counts.
 _BIG_CAP = 1.0e9
 _PAY_EPS = 1e-12        # payoff tie epsilon — same as the reference path
+# safety margin on the price-floor cost lower bound: the bound is proved
+# in exact arithmetic; scale it down so float64 rounding in the engine's
+# prefix sums can never push a computed cost below it
+_LB_MARGIN = 0.999
+# split-tie band for the backtrack argmin: XLA vectorizes the same f64
+# pipeline differently per launch shape (lane count, cache path), so two
+# launches over identical state can disagree in the LAST ULPS of a DP
+# cell.  An exact argmin then flips between equally-optimal splits and
+# the committed placements — hence the whole price trajectory — fork
+# between the burst and sequential paths.  Snapping the backtrack to the
+# first index within this RELATIVE band of the minimum makes the split a
+# function of the (macroscopically) optimal set, not of ulp noise: costs
+# are nonnegative sums of ≲1e3 rounded f64 terms, so cross-launch noise
+# on an exact tie stays ≲1e-13 relative, while genuinely distinct splits
+# differ by far more than 1e-12 relative.  Decisions (best_t) are
+# already protected the same way by _PAY_EPS.
+_SPLIT_TOL = 1e-12
+# Lane cap per launch: bounds the (B, T_pad, D+1) DP table memory.  On a
+# single-core CPU backend the DP sweep is memory-bandwidth bound and lane
+# fusion scales SUPERLINEARLY in wall clock (8 fused lanes measured ~2.7x
+# the cost of 8 singleton launches at paper-10x shapes), so bursts there
+# decide lane-by-lane — still speculative, still one RowCache per job —
+# while parallel backends get real fusion.  Override with REPRO_BURST_LANES.
+_MAX_LANES = int(os.environ.get(
+    "REPRO_BURST_LANES", "8" if jax.default_backend() == "tpu" else "1"))
 
 
 # ---------------------------------------------------------------------------
@@ -70,8 +122,24 @@ def dp_sweep_jax(rows: np.ndarray, d_total: int, use_pallas: bool = False
 
 
 # ---------------------------------------------------------------------------
-# Fused engine core (pure jnp; shapes static per (T, H, K, M, D1) bucket)
+# Shared single-lane helpers (also used by the legacy Pallas core)
 # ---------------------------------------------------------------------------
+
+def _price_pow(ratio: jax.Array, x: jax.Array) -> jax.Array:
+    """``ratio ** x`` computed as ``exp(x * log(ratio))``.
+
+    XLA's CPU backend lowers a broadcast ``pow`` with a non-constant base
+    to per-element libm calls (~100 ns each), which made the per-tile
+    price tables the single largest cost of a fused decision launch; the
+    explicit exp/log form vectorizes.  ``ratio`` is clamped to
+    ``1 + 1e-9`` upstream so the log is always finite, and ``x == 0``
+    still yields exactly 1.  Every price computation in this module must
+    go through this helper — mixing it with ``**`` would produce
+    last-ulp price disagreements between the decision and placement
+    paths.
+    """
+    return jnp.exp(x * jnp.log(ratio))
+
 
 def _prefix_tables_jnp(prices: jax.Array, headroom: jax.Array,
                        demand: jax.Array):
@@ -97,8 +165,10 @@ def _greedy_cost_jnp(ccap: jax.Array, ccost: jax.Array, scost: jax.Array,
     """Greedy (cheapest-first) deployment cost for ``counts`` (T, M) at every
     slot, from (T, S) prefix tables.  +inf where counts exceed capacity."""
     S = ccap.shape[1]
-    # first prefix covering each count (== np.searchsorted side="left")
-    idx = (ccap[:, :, None] < counts[:, None, :]).sum(axis=1)    # (T, M)
+    # first prefix covering each count (== np.searchsorted side="left";
+    # binary search, not the quadratic (T, S, M) comparison tensor)
+    idx = jax.vmap(
+        functools.partial(jnp.searchsorted, side="left"))(ccap, counts)
     zcol = jnp.zeros((ccap.shape[0], 1), ccap.dtype)
     prev_cap = jnp.take_along_axis(jnp.concatenate([zcol, ccap], 1), idx, 1)
     prev_cost = jnp.take_along_axis(jnp.concatenate([zcol, ccost], 1), idx, 1)
@@ -120,13 +190,318 @@ def _greedy_place_jnp(order: jax.Array, scap: jax.Array, ccap: jax.Array,
     return jnp.round(jnp.take_along_axis(take, inv, axis=1)).astype(jnp.int32)
 
 
+# ---------------------------------------------------------------------------
+# Batched (lane-axis) helpers for the tiled core
+# ---------------------------------------------------------------------------
+
+def _prefix_tables_b(prices: jax.Array, headroom: jax.Array,
+                     demand: jax.Array):
+    """Lane-batched prefix tables for one tile.
+
+    prices/headroom: (TILE, S, R) shared across lanes; demand: (B, R) per
+    lane.  Returns (scost, ccap, ccost), each (B, TILE, S) — the greedy
+    cost tables only (placement order is extracted by ``_place_slots``,
+    never in the decision loop)."""
+    unit = (prices[None] * demand[:, None, None, :]).sum(axis=3)
+    safe = jnp.where(demand > 0, demand, 1.0)
+    per_r = jnp.where(demand[:, None, None, :] > 0,
+                      jnp.floor(headroom[None] / safe[:, None, None, :]
+                                + 1e-9),
+                      _BIG_CAP)
+    cap = jnp.clip(jnp.min(per_r, axis=3), 0.0, _BIG_CAP)
+    order = jnp.argsort(unit, axis=2, stable=True)
+    scost = jnp.take_along_axis(unit, order, axis=2)
+    scap = jnp.take_along_axis(cap, order, axis=2)
+    ccap = jnp.cumsum(scap, axis=2)
+    ccost = jnp.cumsum(scap * scost, axis=2)
+    return scost, ccap, ccost
+
+
+def _greedy_cost_b(ccap: jax.Array, ccost: jax.Array, scost: jax.Array,
+                   counts: jax.Array) -> jax.Array:
+    """Lane-batched greedy cost: (B, TILE, S) tables, (B, TILE, M) counts."""
+    S = ccap.shape[2]
+    # first prefix covering each count.  ``searchsorted`` (binary search)
+    # returns exactly ``(ccap < counts).sum(axis=2)`` — ``ccap`` is a
+    # nondecreasing cumsum — but skips materializing the (B, TILE, S, M)
+    # comparison tensor, which was ~10x the cost of everything else here.
+    idx = jax.vmap(jax.vmap(
+        functools.partial(jnp.searchsorted, side="left")))(ccap, counts)
+    zcol = jnp.zeros(ccap.shape[:2] + (1,), ccap.dtype)
+    prev_cap = jnp.take_along_axis(
+        jnp.concatenate([zcol, ccap], -1), idx, -1)
+    prev_cost = jnp.take_along_axis(
+        jnp.concatenate([zcol, ccost], -1), idx, -1)
+    marg = jnp.take_along_axis(scost, jnp.minimum(idx, S - 1), -1)
+    vals = prev_cost + (counts - prev_cap) * marg
+    return jnp.where(counts == 0, 0.0,
+                     jnp.where(counts <= ccap[..., -1:], vals, jnp.inf))
+
+
+# ---------------------------------------------------------------------------
+# Tiled, batched decision core
+# ---------------------------------------------------------------------------
+
+def _decide_tiled_core(sd, jd, rows_init, valid_tiles, *, T: int, d1: int,
+                       use_cache: bool):
+    """Alg. 2 decisions for a lane batch, horizon-tiled with exact early
+    exit (module docstring).
+
+    sd: PADDED state arrays from ``_pad_state`` (g (T_pad,H,R),
+        v (T_pad,K,R), wcaps (H,R), scaps (K,R), U1 (R,), U2 (R,),
+        L1 (), L2 (), pmin (T_pad, R) — the per-slot minimum worker
+        price for the live cost floor, precomputed per state version)
+    jd: lane-batched job arrays —
+        resbw (B, 2R+2) = [wres, sres, wbw, psbw],
+        WZ (B, 2, M) i32, u (B, T_pad), usmax (B, T_pad) suffix-max of u,
+        meta (B, 3) i32 = [a, nchunks, d_tot], lb (B,) — the price-free
+        lower-bound base from ``_cost_lower_bound`` (a live price floor
+        is multiplied in on device).
+    rows_init/valid_tiles: ``use_cache`` row cache — (B, T_pad, M) rows at
+        the current prices plus a (B, n_tiles) tile-validity mask; a tile
+        is recomputed unless it is valid for EVERY lane.  Scalars when
+        ``use_cache`` is False.
+    T: static — the real (unpadded) horizon.
+    d1: static — DP columns (padded D_total + 1).
+
+    Returns (best_t i32 (-1 = reject), payoff, total_cost, d_left i32,
+    d_slots (B, T_pad) i32, rows (B, T_pad, M) — the refreshed row cache —
+    k0, k_end i32: the visited tile range [k0, k_end)).
+    """
+    g, v, wcaps, scaps, U1, U2, L1, L2, pmin = sd
+    resbw, WZ, u, usmax, meta, lb = jd
+    B = resbw.shape[0]
+    T_pad = u.shape[1]
+    n_tiles = T_pad // TILE
+    M = WZ.shape[2]
+    dt = g.dtype
+    wres, sres = resbw[:, :R], resbw[:, R:2 * R]
+    wbw, psbw = resbw[:, 2 * R], resbw[:, 2 * R + 1]
+    W, Z = WZ[:, 0], WZ[:, 1]                                    # (B, M) i32
+    a, nchunks, d_tot = meta[:, 0], meta[:, 1], meta[:, 2]
+
+    # dual price bases p = L1 (U1/L1)^(g/c), q = L2 (U2/L2)^(v/c) (eq. 22/25)
+    ratio1 = jnp.maximum(U1 / L1, 1.0 + 1e-9)
+    ratio2 = jnp.maximum(U2 / L2, 1.0 + 1e-9)
+    cw = jnp.maximum(wcaps, 1e-12)
+    cs = jnp.maximum(scaps, 1e-12)
+    Wf = W.astype(dt)
+    deploy_target = jnp.minimum(Z, W).astype(dt)                 # (B, M)
+    feas_n = (W <= nchunks[:, None])[:, None, :]                 # (B, 1, M)
+    ms = jnp.arange(M)
+
+    def rows_for_tile(t0):
+        """COST_t rows for slots [t0, t0+TILE), all lanes: (B, TILE, M)."""
+        zero = jnp.zeros_like(t0)
+        g_t = jax.lax.dynamic_slice(
+            g, (t0, zero, zero), (TILE,) + g.shape[1:])
+        v_t = jax.lax.dynamic_slice(
+            v, (t0, zero, zero), (TILE,) + v.shape[1:])
+        p = L1 * _price_pow(ratio1[None, None, :], g_t / cw[None])
+        q = L2 * _price_pow(ratio2[None, None, :], v_t / cs[None])
+        w_scost, w_ccap, w_ccost = _prefix_tables_b(
+            p, wcaps[None] - g_t, wres)
+        s_scost, s_ccap, s_ccost = _prefix_tables_b(
+            q, scaps[None] - v_t, sres)
+        Wt = jnp.broadcast_to(Wf[:, None, :], (B, TILE, M))
+        w_costs = _greedy_cost_b(w_ccap, w_ccost, w_scost, Wt)
+        pool = s_ccap[..., -1:]                                  # (B, TILE, 1)
+        deploy = jnp.minimum(deploy_target[:, None, :], pool)
+        feas_ps = deploy * psbw[:, None, None] >= Wt * wbw[:, None, None] - 1e-9
+        z_costs = _greedy_cost_b(s_ccap, s_ccost, s_scost, deploy)
+        rows = jnp.where(feas_n & feas_ps, w_costs + z_costs, jnp.inf)
+        rows = rows.at[:, :, 0].set(0.0)
+        # pre-arrival and beyond-horizon slots carry the DP unchanged
+        ts = t0 + jnp.arange(TILE, dtype=jnp.int32)
+        dead = (ts[None, :] < a[:, None]) | (ts >= T)[None, :]
+        return jnp.where(dead[:, :, None] & (ms > 0)[None, None, :],
+                         jnp.inf, rows)
+
+    a_min = jnp.min(a)
+    init_col = jnp.full((B, d1), jnp.inf, dt).at[:, 0].set(0.0)
+    if use_cache:
+        rows_buf0 = rows_init
+    else:
+        rows_buf0 = jnp.full((B, T_pad, M), jnp.inf, dt).at[:, :, 0].set(0.0)
+    cost_buf0 = jnp.full((B, T_pad, d1), jnp.inf, dt)
+    k0 = jnp.min(a).astype(jnp.int32) // TILE
+    t_start = k0 * TILE
+
+    # Live early-exit cost floor.  ``lb`` from the host is the price-free
+    # base workload * min_d(W(d)/d) (times _LB_MARGIN); every worker a
+    # schedule deploys in slot s costs >= sum_r wres_r * min_h p[s,h,r],
+    # so ANY schedule's total cost is >= base * min over the job's
+    # feasible slots of that floor — the static L1 bound with the
+    # *actual* current prices in place of the price floor, exact for the
+    # same reason and far tighter once the cluster fills up.  ``pmin``
+    # (the per-slot minimum worker price, (T_pad, R)) is computed once
+    # per state version in ``_pad_state``, not per launch.
+    wslot = jnp.einsum("tr,br->bt", pmin, wres)
+    ts_all = jnp.arange(T_pad, dtype=jnp.int32)
+    feas_t = (ts_all[None, :] >= a[:, None]) & (ts_all < T)[None, :]
+    fmin = jnp.min(jnp.where(feas_t, wslot, jnp.inf), axis=1)    # (B,)
+    lb = jnp.where(lb > 0, lb * fmin, 0.0)
+
+    def cond(c):
+        k, _, best, _, _, _ = c
+        t_next = jnp.clip(k * TILE, 0, T_pad - 1)
+        um = jax.lax.dynamic_slice_in_dim(usmax, t_next, 1, axis=1)[:, 0]
+        active = um > best + _PAY_EPS + lb
+        return (k < n_tiles) & jnp.any(active)
+
+    def body(c):
+        k, prev, best, best_t, cost_buf, rows_buf = c
+        t0 = k * TILE
+        zero = jnp.zeros_like(t0)
+        if use_cache:
+            tile_ok = jnp.all(
+                jax.lax.dynamic_slice_in_dim(valid_tiles, k, 1, axis=1))
+            rows_tile = jax.lax.cond(
+                tile_ok,
+                lambda: jax.lax.dynamic_slice(
+                    rows_init, (zero, t0, zero), (B, TILE, M)),
+                lambda: rows_for_tile(t0))
+        else:
+            rows_tile = rows_for_tile(t0)
+        u_tile = jax.lax.dynamic_slice(u, (zero, t0), (B, TILE))
+        ts_tile = t0 + jnp.arange(TILE, dtype=jnp.int32)
+
+        def slot(carry, x):
+            prev, best, best_t = carry
+            row, u_t, t = x
+
+            def live(_):
+                new = minplus_chain_step(row, prev)
+                costD = jnp.take_along_axis(new, d_tot[:, None],
+                                            axis=1)[:, 0]
+                pay = jnp.where(jnp.isfinite(costD) & (t >= a) & (t < T),
+                                u_t - costD, -jnp.inf)
+                switch = pay > best + _PAY_EPS
+                return (new, jnp.where(switch, pay, best),
+                        jnp.where(switch, t, best_t))
+
+            def dead(_):
+                # slots before every lane's arrival (or past the horizon)
+                # have the identity row [0, inf, ...]: the chain step
+                # would return ``prev`` bit-for-bit, so skip it at
+                # runtime — with single-lane launches this skips the DP
+                # for the whole pre-arrival prefix of the first tile
+                return (prev, best, best_t)
+
+            new, best, best_t = jax.lax.cond(
+                (t >= a_min) & (t < T), live, dead, None)
+            return (new, best, best_t), new
+
+        (prev, best, best_t), cols = jax.lax.scan(
+            slot, (prev, best, best_t),
+            (jnp.swapaxes(rows_tile, 0, 1), u_tile.T, ts_tile))
+        cost_buf = jax.lax.dynamic_update_slice(
+            cost_buf, jnp.swapaxes(cols, 0, 1), (zero, t0, zero))
+        rows_buf = jax.lax.dynamic_update_slice(
+            rows_buf, rows_tile, (zero, t0, zero))
+        return k + 1, prev, best, best_t, cost_buf, rows_buf
+
+    k_end, _, best, best_t, cost_buf, rows_buf = jax.lax.while_loop(
+        cond, body,
+        (k0, init_col, jnp.zeros((B,), dt), jnp.full((B,), -1, jnp.int32),
+         cost_buf0, rows_buf0))
+    return best_t, best, rows_buf, cost_buf, k0, k_end
+
+
+@functools.partial(jax.jit, static_argnames=("T", "d1", "use_cache"))
+def _decide_tiled(sd, jd, rows_init, valid_tiles, T: int, d1: int,
+                  use_cache: bool):
+    return _decide_tiled_core(sd, jd, rows_init, valid_tiles, T=T, d1=d1,
+                              use_cache=use_cache)
+
+
+@jax.jit
+def _backtrack(rows_lane: jax.Array, cost_lane: jax.Array, best_t, d_tot,
+               t_start):
+    """Split recovery for ONE accepted lane, from the decision loop's
+    stored row/cost tables (device-resident; rejects never pay this).
+
+    Walks t from the horizon down to 0, recomputing each slot's split as
+    the FIRST j with rows[t, j] + cost_{t-1}[d_rem - j] within
+    ``_SPLIT_TOL`` of the minimum — an exact argmin would make the split
+    (and so the committed placements) a function of launch-shape ulp
+    noise; see the ``_SPLIT_TOL`` note.  ``t_start`` is the first slot
+    the decision loop processed (earlier slots carry the DP identity).
+    Returns (total_cost, d_left, d_slots (T_pad,) i32)."""
+    T_pad, M = rows_lane.shape
+    d1 = cost_lane.shape[1]
+    dt = cost_lane.dtype
+    init_col = jnp.full((d1,), jnp.inf, dt).at[0].set(0.0)
+    js = jnp.arange(M)
+    ts = jnp.arange(T_pad, dtype=jnp.int32)
+
+    def _back(d_rem, t):
+        def live(_):
+            row = jax.lax.dynamic_slice_in_dim(rows_lane, t, 1, axis=0)[0]
+            prev = jax.lax.dynamic_slice_in_dim(
+                cost_lane, jnp.maximum(t - 1, 0), 1, axis=0)[0]
+            prev = jnp.where(t <= t_start, init_col, prev)
+            idx = d_rem - js
+            vals = jnp.where(idx >= 0, row + prev[jnp.clip(idx, 0, d1 - 1)],
+                             jnp.inf)
+            m = jnp.min(vals)
+            band = vals <= m * (1.0 + _SPLIT_TOL)
+            return jnp.argmax(band).astype(jnp.int32)
+        # slots past the chosen finish place nothing — skip their row/col
+        # loads entirely (identical to computing and forcing d_here = 0)
+        d_here = jax.lax.cond(t <= best_t, live,
+                              lambda _: jnp.int32(0), None)
+        return d_rem - d_here, d_here
+
+    d_left, d_slots = jax.lax.scan(_back, d_tot, ts, reverse=True)
+    bt = jnp.clip(best_t, 0, T_pad - 1)
+    col = jax.lax.dynamic_slice_in_dim(cost_lane, bt, 1, axis=0)[0]
+    total_cost = col[jnp.minimum(d_tot, d1 - 1)]
+    return total_cost, d_left, d_slots
+
+
+@functools.partial(jax.jit, static_argnames=("wa",))
+def _place_slots(sd, resbw, Wc, Zc, ts, wa: int):
+    """Greedy placements for the ACTIVE slots of an accepted schedule.
+
+    ``ts``: (wa,) i32 slot indices with a nonzero split (padded by
+    repeating the last index; padding lanes carry ``Wc = 0`` and are
+    discarded by the caller).  ``Wc``/``Zc``: per-slot worker / PS-target
+    counts (wa,) from the decided split.  Returns (y (wa, H'), z (wa, K'))
+    int32 — the same cheapest-first fills the reference ``cost_t_ref``
+    greedy produces.  Each slot's fill depends only on that slot's state
+    column, so gathering the active subset is bit-identical to slicing
+    the whole [arrival, finish] window and discarding the idle slots."""
+    g, v, wcaps, scaps, U1, U2, L1, L2 = sd
+    g_w = jnp.take(g, ts, axis=0)
+    v_w = jnp.take(v, ts, axis=0)
+    wres, sres = resbw[:R], resbw[R:2 * R]
+    p = L1 * _price_pow(jnp.maximum(U1 / L1, 1.0 + 1e-9)[None, None, :],
+                        g_w / jnp.maximum(wcaps, 1e-12)[None])
+    q = L2 * _price_pow(jnp.maximum(U2 / L2, 1.0 + 1e-9)[None, None, :],
+                        v_w / jnp.maximum(scaps, 1e-12)[None])
+    w_order, w_scap, _, w_ccap, _ = _prefix_tables_jnp(
+        p, wcaps[None] - g_w, wres)
+    s_order, s_scap, _, s_ccap, _ = _prefix_tables_jnp(
+        q, scaps[None] - v_w, sres)
+    y = _greedy_place_jnp(w_order, w_scap, w_ccap, Wc)
+    pool = s_ccap[:, -1]
+    deploy = jnp.minimum(jnp.minimum(Zc, Wc), pool)
+    z = _greedy_place_jnp(s_order, s_scap, s_ccap, deploy)
+    return y, z
+
+
+# ---------------------------------------------------------------------------
+# Legacy monolithic core — kept for the TPU/Pallas path (use_pallas=True)
+# ---------------------------------------------------------------------------
+
 def _decide_core(sd, jd, *, d1: int, use_pallas: bool):
-    """One Alg. 2 decision, fully fused.
+    """One Alg. 2 decision, fully fused, whole horizon in one block.
 
     sd: state arrays (g (T,H,R), v (T,K,R), wcaps (H,R), scaps (K,R),
         U1 (R,), U2 (R,), L1 (), L2 ())
     jd: bundled job arrays (resbw (2R+2,) = [wres, sres, wbw, psbw],
-        WZ (2, M) i32, u (T,), meta (3,) i32 = [a, nchunks, d_tot])
+        WZ (2, M) i32, u (T,), meta (3,) i32 = [a, nchunks, workload])
     d1: static — DP columns (padded D_total + 1).
 
     Returns (best_t i32 (-1 = reject), payoff, total_cost, d_left i32 —
@@ -144,10 +519,10 @@ def _decide_core(sd, jd, *, d1: int, use_pallas: bool):
     dt = g.dtype
 
     # dual prices p = L1 (U1/L1)^(g/c), q = L2 (U2/L2)^(v/c)   (eq. 22, 25)
-    p = L1 * jnp.maximum(U1 / L1, 1.0 + 1e-9)[None, None, :] ** (
-        g / jnp.maximum(wcaps, 1e-12)[None])
-    q = L2 * jnp.maximum(U2 / L2, 1.0 + 1e-9)[None, None, :] ** (
-        v / jnp.maximum(scaps, 1e-12)[None])
+    p = L1 * _price_pow(jnp.maximum(U1 / L1, 1.0 + 1e-9)[None, None, :],
+                        g / jnp.maximum(wcaps, 1e-12)[None])
+    q = L2 * _price_pow(jnp.maximum(U2 / L2, 1.0 + 1e-9)[None, None, :],
+                        v / jnp.maximum(scaps, 1e-12)[None])
 
     w_order, w_scap, w_scost, w_ccap, w_ccost = _prefix_tables_jnp(
         p, wcaps[None] - g, wres)
@@ -227,10 +602,62 @@ def _decide_one(sd, jd, d1: int, use_pallas: bool):
     return _decide_core(sd, jd, d1=d1, use_pallas=use_pallas)
 
 
-@functools.partial(jax.jit, static_argnames=("d1",))
-def _decide_many(sd, jds, d1: int):
-    return jax.vmap(
-        lambda jd: _decide_core(sd, jd, d1=d1, use_pallas=False))(jds)
+# ---------------------------------------------------------------------------
+# Row cache (incremental COST-row maintenance)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RowCache:
+    """Per-job COST-row cache across price-state versions.
+
+    ``rows`` holds the (T_pad, m_pad) COST_t table the engine computed
+    at ``version``; ``valid`` marks which ``TILE``-slot blocks of it are
+    both *visited* (actually computed, not the identity placeholder) and
+    *fresh* (no commit/release has moved prices inside them since).  The
+    engine recomputes exactly the invalid tiles (``use_cache`` path of
+    ``_decide_tiled``); :meth:`sync` invalidates against the price
+    state's dirty-slot log (``PriceState.dirty_spans_since``)."""
+    rows: Optional[jax.Array]       # (T_pad, m_pad) device-resident
+    valid: np.ndarray               # (n_tiles,) bool, host
+    version: int
+    m_pad: int
+    d1: int
+
+    @classmethod
+    def empty(cls, state: PriceState, job: Job) -> Optional["RowCache"]:
+        """A cache with no valid tiles (first decision fills it).  None
+        for dcap-0 jobs (the engine rejects those without solving)."""
+        key = _shape_bucket(job)
+        if key is None:
+            return None
+        m_pad, d1 = key
+        n_tiles = _pad_tiles(state.horizon) // TILE
+        return cls(rows=None, valid=np.zeros(n_tiles, bool),
+                   version=state.version, m_pad=m_pad, d1=d1)
+
+    def invalidate_spans(self, spans) -> None:
+        """Mark every tile overlapping a dirtied [t0, t1) slot span stale."""
+        for t0, t1 in spans:
+            k0 = max(int(t0) // TILE, 0)
+            k1 = min((int(t1) - 1) // TILE + 1, len(self.valid))
+            self.valid[k0:k1] = False
+
+    def invalidate_all(self) -> None:
+        self.valid[:] = False
+
+    def sync(self, state: PriceState) -> "RowCache":
+        """Invalidate whatever ``state`` has dirtied since ``version``.
+
+        Uses the commit/release dirty-slot log; an unknown delta (window
+        slide, log trimmed) invalidates everything.  Returns self."""
+        if state.version != self.version:
+            spans = state.dirty_spans_since(self.version)
+            if spans is None:
+                self.invalidate_all()
+            else:
+                self.invalidate_spans(spans)
+            self.version = state.version
+        return self
 
 
 # ---------------------------------------------------------------------------
@@ -248,11 +675,158 @@ def _state_arrays(state: PriceState, dtype):
     return state.device_state(dtype)
 
 
+@functools.partial(jax.jit, static_argnames=("T_pad",))
+def _pad_state(g, v, wcaps, U1, L1, T_pad: int):
+    """Tile-pad the allocation tensors and precompute the live-floor
+    minimum worker price ``pmin`` (module docstring: every deployed
+    worker in slot s costs >= sum_r wres_r * min_h p[s,h,r]; with
+    ratio >= 1, min_h ratio^(g/c) == ratio^(min_h g/c), so the floor
+    needs only (T_pad, R) pows)."""
+    T = g.shape[0]
+    g = jnp.pad(g, ((0, T_pad - T), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, T_pad - T), (0, 0), (0, 0)))
+    ratio1 = jnp.maximum(U1 / L1, 1.0 + 1e-9)
+    umin = jnp.min(g / jnp.maximum(wcaps, 1e-12)[None], axis=1)
+    pmin = L1 * _price_pow(ratio1[None, :], umin)
+    return g, v, pmin
+
+
+@functools.partial(jax.jit, static_argnames=("span",))
+def _pad_patch(g_pad, v_pad, pmin, g, v, wcaps, U1, L1, t0, span: int):
+    """Refresh one dirty slot span of the padded-state cache in place:
+    re-slice ``g``/``v`` and recompute the ``pmin`` floor rows with the
+    exact ``_pad_state`` formula, so the patched tensors are bit-identical
+    to a from-scratch pad at the new state version."""
+    zero = jnp.zeros_like(t0)
+    g_s = jax.lax.dynamic_slice(g, (t0, zero, zero), (span,) + g.shape[1:])
+    v_s = jax.lax.dynamic_slice(v, (t0, zero, zero), (span,) + v.shape[1:])
+    ratio1 = jnp.maximum(U1 / L1, 1.0 + 1e-9)
+    umin = jnp.min(g_s / jnp.maximum(wcaps, 1e-12)[None], axis=1)
+    pmin_s = L1 * _price_pow(ratio1[None, :], umin)
+    g_pad = jax.lax.dynamic_update_slice(g_pad, g_s, (t0, zero, zero))
+    v_pad = jax.lax.dynamic_update_slice(v_pad, v_s, (t0, zero, zero))
+    pmin = jax.lax.dynamic_update_slice(pmin, pmin_s, (t0, zero))
+    return g_pad, v_pad, pmin
+
+
+_pad_cache: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+# full-repad fallback threshold: more dirty spans than this and the
+# span-by-span patching would launch more kernels than one full pad
+_PATCH_MAX_SPANS = 8
+
+
+def _padded_state(state: PriceState, dtype, T_pad: int):
+    """``_state_arrays`` extended with the decide core's per-launch
+    prologue — tile padding + the live-floor price ``pmin`` — computed
+    once per (state version, dtype) and reused across every decision
+    launch until the next commit/release, instead of inside each one.
+
+    Between consecutive versions the cache is patched incrementally:
+    ``PriceState.dirty_spans_since`` names the slots the commits touched
+    and ``_pad_patch`` refreshes just those rows (the same maintenance
+    contract ``RowCache`` uses).  Falls back to a full re-pad when the
+    delta is unknowable or fragmented."""
+    g, v, wcaps, scaps, U1, U2, L1, L2 = _state_arrays(state, dtype)
+    key = (state.version, T_pad, jnp.dtype(dtype).name)
+    hit = _pad_cache.get(state)
+    if hit is not None and hit[0] == key:
+        return hit[1]
+    T = g.shape[0]
+    if hit is not None and hit[0][1:] == key[1:]:
+        spans = state.dirty_spans_since(hit[0][0])
+        if spans is not None and len(spans) <= _PATCH_MAX_SPANS:
+            g_pad, v_pad, pmin = hit[1][0], hit[1][1], hit[1][8]
+            for s0, s1 in spans:
+                span = _bucket(max(s1 - s0, 1), floor=8, step=64)
+                if span > T:
+                    break
+                start = min(max(int(s0), 0), T - span)
+                g_pad, v_pad, pmin = _pad_patch(
+                    g_pad, v_pad, pmin, g, v, wcaps, U1, L1,
+                    jnp.int32(start), span)
+            else:
+                hit = (key, (g_pad, v_pad, wcaps, scaps, U1, U2, L1, L2,
+                             pmin))
+                _pad_cache[state] = hit
+                return hit[1]
+    g_pad, v_pad, pmin = _pad_state(g, v, wcaps, U1, L1, T_pad=T_pad)
+    hit = (key, (g_pad, v_pad, wcaps, scaps, U1, U2, L1, L2, pmin))
+    _pad_cache[state] = hit
+    return hit[1]
+
+
+def _pad_tiles(T: int) -> int:
+    return ((T + TILE - 1) // TILE) * TILE
+
+
+def _utility_curve(job: Job, T: int, T_pad: int) -> np.ndarray:
+    u = np.zeros(T_pad)
+    a = job.arrival
+    u[a:T] = [job.utility(t - a) for t in range(a, T)]
+    return u
+
+
+def _cost_lower_bound(job: Job, state: PriceState, W: np.ndarray) -> float:
+    """Price-free base of the cost lower bound: workload * min_d W(d)/d.
+
+    Any split's total worker-slots is >= workload * min_d W(d)/d, so ANY
+    schedule's cost is >= this base times the cheapest single-worker slot
+    cost over the job's feasible window — the device side of
+    ``_decide_tiled_core`` multiplies in that live price floor (which is
+    itself >= L1 * sum(worker_res), the old static bound).  Scaled by
+    ``_LB_MARGIN`` so engine float64 rounding stays above the bound."""
+    if len(W) < 2:
+        return 0.0
+    per_unit = float(np.min(W[1:] / np.arange(1, len(W), dtype=np.float64)))
+    return _LB_MARGIN * job.workload * per_unit
+
+
+def _job_arrays_tiled(job: Job, state: PriceState, T: int, T_pad: int,
+                      m_pad: int, dtype):
+    """Lane arrays for the tiled core.  Padded d entries get a sentinel
+    worker count larger than any N so they are infeasible."""
+    from .subroutine import workload_tables
+    dcap = min(job.max_chunks_per_slot, job.workload)
+    W, Z = workload_tables(job, dcap)
+    WZ = np.zeros((2, m_pad), np.int32)
+    WZ[0] = np.int32(1) << 30
+    WZ[0, :dcap + 1] = W
+    WZ[1, :dcap + 1] = Z
+    u = _utility_curve(job, T, T_pad)
+    usmax = np.maximum.accumulate(u[::-1])[::-1].copy()
+    lb = _cost_lower_bound(job, state, W)
+    resbw = np.concatenate([job.worker_res, job.ps_res,
+                            [job.worker_bw, job.ps_bw]])
+    meta = np.array([job.arrival, job.num_chunks, job.workload], np.int32)
+    return (resbw.astype(np.float64), WZ, u, usmax, meta, np.float64(lb)), (W, Z)
+
+
+def _reject_lane(T: int, T_pad: int, m_pad: int):
+    """A batch-padding dummy: infeasible everywhere (nchunks = -1), arrival
+    at T so it never drags the start tile down, zero utility so it never
+    keeps the early-exit loop alive."""
+    resbw = np.zeros(2 * R + 2)
+    resbw[-2:] = 1.0
+    WZ = np.zeros((2, m_pad), np.int32)
+    WZ[0] = np.int32(1) << 30
+    meta = np.array([T, -1, 1], np.int32)
+    z = np.zeros(T_pad)
+    return (resbw, WZ, z, z, meta, np.float64(0.0)), (WZ[0, :1], WZ[1, :1])
+
+
+def _stack_lanes(lanes, dtype):
+    cols = list(zip(*lanes))
+    return (jnp.asarray(np.stack(cols[0]), dtype),      # resbw
+            jnp.asarray(np.stack(cols[1])),             # WZ
+            jnp.asarray(np.stack(cols[2]), dtype),      # u
+            jnp.asarray(np.stack(cols[3]), dtype),      # usmax
+            jnp.asarray(np.stack(cols[4])),             # meta
+            jnp.asarray(np.stack(cols[5]), dtype))      # lb
+
+
 def _job_arrays(job: Job, T: int, m_pad: int, dtype):
-    """Pad the per-job tables to the ``m_pad`` bucket and bundle them into
-    four device arrays (res+bw, W/Z, utilities, int metadata) to keep the
-    per-decision host→device transfer count low.  Padded d entries get a
-    sentinel worker count larger than any N so they are infeasible."""
+    """Legacy bundling for the monolithic (Pallas) core."""
     from .subroutine import workload_tables
     dcap = min(job.max_chunks_per_slot, job.workload)
     W, Z = workload_tables(job, dcap)
@@ -269,16 +843,6 @@ def _job_arrays(job: Job, T: int, m_pad: int, dtype):
             jnp.asarray(meta))
 
 
-def _reject_job_arrays(T: int, m_pad: int, dtype):
-    """A batch-padding dummy whose every d > 0 is infeasible (nchunks = -1)."""
-    resbw = np.zeros(2 * R + 2)
-    resbw[-2:] = 1.0
-    WZ = np.zeros((2, m_pad), np.int32)
-    WZ[0] = np.int32(1) << 30
-    return (jnp.asarray(resbw, dtype), jnp.asarray(WZ),
-            jnp.zeros((T,), dtype), jnp.asarray(np.array([0, -1, 1], np.int32)))
-
-
 def _x64_context(precision: str):
     """Engine precision policy.  "auto": float64 on CPU (exact agreement with
     the numpy paths), float32 on TPU.  An ambient jax_enable_x64 always wins.
@@ -292,14 +856,91 @@ def _x64_context(precision: str):
     return contextlib.nullcontext()
 
 
+@dataclasses.dataclass
+class _Pending:
+    """A decided-but-unplaced candidate from the tiled core.
+
+    Holds the launch's device-resident row/cost tables (shared across the
+    lanes of one launch) so the split backtrack — and the placement — run
+    only if the candidate is actually accepted AND survives the commit
+    pass.  Rejects never pay for either."""
+    job: Job
+    best_t: int
+    payoff: float
+    rows_full: jax.Array            # (B, T_pad, M) device, shared
+    cost_full: jax.Array            # (B, T_pad, d1) device, shared
+    lane: int                       # this job's lane in the launch
+    t_start: int                    # first slot the decision loop visited
+    W: np.ndarray                   # (dcap+1,) workload tables
+    Z: np.ndarray
+    cache: RowCache
+    cost: float = float("nan")      # filled by _materialize for accepts
+
+
+def _materialize(pend: _Pending, state: PriceState, sd, dtype
+                 ) -> Optional[Schedule]:
+    """Extract the split + placement for an accepted candidate (None =
+    reject).
+
+    Runs ``_backtrack`` over the stored lane tables and ``_place_slots``
+    over just the deploying slots — MUST be called at the same price
+    state the decision was made at."""
+    job, best_t = pend.job, pend.best_t
+    if best_t < 0:
+        return None
+    total_cost, d_left, d_slots = _backtrack(
+        pend.rows_full[pend.lane], pend.cost_full[pend.lane],
+        jnp.int32(best_t), jnp.int32(job.workload), jnp.int32(pend.t_start))
+    d_slots = np.asarray(d_slots)
+    pend.cost = float(total_cost)
+    # mirrors _extract's backtrack assert: an accepted schedule must place
+    # the whole workload (guards e.g. mixed-precision runs)
+    assert int(d_left) == 0, \
+        f"fused backtrack failed: {int(d_left)} chunk-passes unassigned"
+    a = job.arrival
+    # place only the slots that actually deploy (typically well under
+    # half the [arrival, finish] window): each slot's greedy fill reads
+    # its own state column only, so the gather changes nothing bit-wise
+    ts_active = np.nonzero(d_slots[a:best_t + 1])[0] + a
+    if len(ts_active) == 0:        # degenerate zero-workload accept
+        utility = job.utility(best_t - a)
+        return Schedule(jid=job.jid, workers={}, ps={}, finish=int(best_t),
+                        cost=float(pend.cost),
+                        payoff=utility - float(pend.cost), utility=utility)
+    wa = _bucket(len(ts_active), floor=8, step=32)
+    ts = np.full(wa, ts_active[-1], np.int32)
+    ts[:len(ts_active)] = ts_active
+    d_act = np.zeros(wa, d_slots.dtype)
+    d_act[:len(ts_active)] = d_slots[ts_active]
+    Wc = pend.W[d_act].astype(np.float64)
+    Zc = pend.Z[d_act].astype(np.float64)
+    Wc[len(ts_active):] = 0.0
+    Zc[len(ts_active):] = 0.0
+    y, z = _place_slots(sd, jnp.asarray(
+        np.concatenate([job.worker_res, job.ps_res,
+                        [job.worker_bw, job.ps_bw]]), dtype),
+        jnp.asarray(Wc, dtype), jnp.asarray(Zc, dtype),
+        jnp.asarray(ts), wa)
+    y = np.asarray(y)
+    z = np.asarray(z)
+    H, K = state.cluster.H, state.cluster.K
+    workers, ps = {}, {}
+    for k, t in enumerate(ts_active):
+        workers[int(t)] = y[k, :H].astype(np.int64)
+        ps[int(t)] = z[k, :K].astype(np.int64)
+    utility = job.utility(best_t - a)
+    return Schedule(jid=job.jid, workers=workers, ps=ps, finish=int(best_t),
+                    cost=float(pend.cost), payoff=utility - float(pend.cost),
+                    utility=utility)
+
+
 def _schedule_from_outputs(job: Job, state: PriceState, best_t: int,
                            cost: float, d_left: int, d_slots: np.ndarray,
                            y: np.ndarray, z: np.ndarray
                            ) -> Optional[Schedule]:
+    """Schedule assembly for the legacy monolithic core's outputs."""
     if best_t < 0:
         return None
-    # mirrors _extract's backtrack assert: an accepted schedule must place
-    # the whole workload (guards e.g. mixed-precision pallas-on-CPU runs)
     assert d_left == 0, \
         f"fused backtrack failed: {d_left} chunk-passes unassigned"
     H, K = state.cluster.H, state.cluster.K
@@ -314,79 +955,200 @@ def _schedule_from_outputs(job: Job, state: PriceState, best_t: int,
                     utility=utility)
 
 
-def best_schedule_fused(job: Job, state: PriceState, *,
-                        use_pallas: Optional[bool] = None,
-                        precision: str = "auto") -> Optional[Schedule]:
-    """Alg. 2 for one job as a single fused jit call."""
+@functools.lru_cache(maxsize=32)
+def _empty_cache(b_pad: int, T_pad: int, n_tiles: int, m_pad: int,
+                 dtype_name: str):
+    """Device-resident all-invalid row cache, one per launch shape: lets
+    the cache-less decision path run the ``use_cache=True`` compiled
+    variant without uploading a fresh buffer per launch."""
+    rows0 = np.zeros((b_pad, T_pad, m_pad))
+    rows0[:, :, 1:] = np.inf
+    return (jnp.asarray(rows0, jnp.dtype(dtype_name)),
+            jnp.zeros((b_pad, n_tiles), bool))
+
+
+def _decide_jobs(jobs: Sequence[Tuple[int, Job]], state: PriceState, dtype,
+                 m_pad: int, d1: int,
+                 caches: Optional[dict] = None) -> List[_Pending]:
+    """Run the tiled core over one shape-bucket group (<= _MAX_LANES jobs
+    per launch).  ``caches``: optional {index: RowCache} serving lanes."""
+    T = state.horizon
+    T_pad = _pad_tiles(T)
+    n_tiles = T_pad // TILE
+    sd = _padded_state(state, dtype, T_pad)
+    out: List[_Pending] = []
+    for c0 in range(0, len(jobs), _MAX_LANES):
+        chunk = jobs[c0:c0 + _MAX_LANES]
+        b_pad = _bucket(len(chunk), floor=1, step=_MAX_LANES)
+        lanes, tables = [], []
+        for _, j in chunk:
+            la, wz = _job_arrays_tiled(j, state, T, T_pad, m_pad, dtype)
+            lanes.append(la)
+            tables.append(wz)
+        for _ in range(b_pad - len(chunk)):
+            la, wz = _reject_lane(T, T_pad, m_pad)
+            lanes.append(la)
+            tables.append(wz)
+        jd = _stack_lanes(lanes, dtype)
+        # the no-cache case runs the SAME compiled variant with an
+        # all-invalid (device-cached) empty cache: every distinct
+        # (shape, use_cache) pair is a separate multi-second XLA
+        # compilation, and the cond-per-tile overhead of the cached
+        # variant is microseconds
+        use_cache = caches is not None and any(
+            caches.get(i) is not None for i, _ in chunk)
+        if use_cache:
+            rows0 = np.zeros((b_pad, T_pad, m_pad))
+            rows0[:, :, 1:] = np.inf
+            valid0 = np.zeros((b_pad, n_tiles), bool)
+            rows_list = [None] * b_pad
+            for bi, (i, _) in enumerate(chunk):
+                cache = caches.get(i)
+                if cache is not None and cache.rows is not None:
+                    rows_list[bi] = cache.rows
+                    valid0[bi] = cache.valid
+            base = jnp.asarray(rows0, dtype)
+            stackable = [rows_list[bi] if rows_list[bi] is not None
+                         else base[bi] for bi in range(b_pad)]
+            rows_init = jnp.stack(stackable)
+            valid_tiles = jnp.asarray(valid0)
+        else:
+            rows_init, valid_tiles = _empty_cache(
+                b_pad, T_pad, n_tiles, m_pad, jnp.dtype(dtype).name)
+        best_t, payoff, rows_buf, cost_buf, k0, k_end = \
+            _decide_tiled(sd, jd, rows_init, valid_tiles, T=T, d1=d1,
+                          use_cache=True)
+        best_t = np.asarray(best_t)
+        payoff = np.asarray(payoff)
+        k0, k_end = int(k0), int(k_end)
+        for bi, (i, job) in enumerate(chunk):
+            valid = np.zeros(n_tiles, bool)
+            if use_cache and caches.get(i) is not None:
+                valid |= caches[i].valid
+            valid[k0:k_end] = True
+            cache = RowCache(rows=rows_buf[bi], valid=valid,
+                             version=state.version, m_pad=m_pad, d1=d1)
+            out.append(_Pending(
+                job=job, best_t=int(best_t[bi]), payoff=float(payoff[bi]),
+                rows_full=rows_buf, cost_full=cost_buf, lane=bi,
+                t_start=k0 * TILE, W=tables[bi][0], Z=tables[bi][1],
+                cache=cache))
+    return out
+
+
+def _pow2_bucket(n: int, floor: int) -> int:
+    b = floor
+    while b < n:
+        b *= 2
+    return b
+
+
+def _shape_bucket(job: Job) -> Optional[Tuple[int, int]]:
+    """Padded (m_pad, d1) compile bucket for a job's DP tables.
+
+    Deliberately coarse — powers of two with high floors — because every
+    distinct (m_pad, d1, lanes) triple is a separate XLA compilation of
+    the decision loop, and compile time dominates wall clock at scale.
+    The d1 floor covers the auto-quantized workload range (engine quantum
+    targets <= 1200 chunk-passes) so scale runs see a SINGLE d1."""
     dcap = min(job.max_chunks_per_slot, job.workload)
     if dcap == 0:
         return None
+    return (_pow2_bucket(dcap + 1, 64), _pow2_bucket(job.workload + 1, 1280))
+
+
+def best_schedule_fused(job: Job, state: PriceState, *,
+                        use_pallas: Optional[bool] = None,
+                        precision: str = "auto",
+                        row_cache: Optional[RowCache] = None
+                        ) -> Optional[Schedule]:
+    """Alg. 2 for one job through the fused jit engine.
+
+    The default path is the tiled early-exit core; ``row_cache`` (from a
+    previous decision for the SAME job, ``sync``-ed against the state)
+    lets it recompute only dirtied tiles.  ``use_pallas=True`` routes
+    through the legacy monolithic core with the Pallas sweep kernel (the
+    TPU path)."""
+    key = _shape_bucket(job)
+    if key is None:
+        return None
+    m_pad, d1 = key
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
     T = state.horizon      # window-local lookahead (== cluster.T episodic)
-    m_pad = _bucket(dcap + 1, step=64)
-    d1 = _bucket(job.workload + 1, step=256)
     with _x64_context(precision):
         dtype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+        if use_pallas:
+            sd = _state_arrays(state, dtype)
+            jd = _job_arrays(job, T, m_pad, dtype)
+            best_t, _, cost, d_left, d_slots, y, z = _decide_one(
+                sd, jd, d1=d1, use_pallas=True)
+            return _schedule_from_outputs(
+                job, state, int(best_t), float(cost), int(d_left),
+                np.asarray(d_slots), np.asarray(y), np.asarray(z))
+        caches = {0: row_cache} if row_cache is not None else None
+        pend = _decide_jobs([(0, job)], state, dtype, m_pad, d1,
+                            caches=caches)[0]
+        if row_cache is not None:
+            row_cache.rows = pend.cache.rows
+            row_cache.valid = pend.cache.valid
+            row_cache.version = pend.cache.version
         sd = _state_arrays(state, dtype)
-        jd = _job_arrays(job, T, m_pad, dtype)
-        best_t, _, cost, d_left, d_slots, y, z = _decide_one(
-            sd, jd, d1=d1, use_pallas=bool(use_pallas))
-        return _schedule_from_outputs(
-            job, state, int(best_t), float(cost), int(d_left),
-            np.asarray(d_slots), np.asarray(y), np.asarray(z))
+        return _materialize(pend, state, sd, dtype)
+
+
+def decide_burst(jobs: Sequence[Job], state: PriceState, *,
+                 precision: str = "auto",
+                 timings: Optional[List[float]] = None) -> List[_Pending]:
+    """Speculative batched Alg. 2: the whole burst decided at the CURRENT
+    prices, one tiled launch per shape bucket (jobs are grouped by
+    (dcap, workload) bucket so a small job is never padded up to the
+    burst's largest DP table).  Returns per-job ``_Pending`` candidates —
+    decision + split + row cache, placement deferred to
+    ``_materialize`` — in input order (None for dcap-0 jobs).  Commit
+    order / price updates are the caller's job (``OASiS.on_arrivals``
+    re-solves any job whose prices moved).
+
+    ``timings``, when given, is filled in place with each job's share of
+    its own shape group's wall time."""
+    out: List[Optional[_Pending]] = [None] * len(jobs)
+    if timings is not None:
+        timings[:] = [0.0] * len(jobs)
+    groups = {}
+    for i, j in enumerate(jobs):
+        key = _shape_bucket(j)
+        if key is None:
+            continue
+        groups.setdefault(key, []).append((i, j))
+    if not groups:
+        return out
+    with _x64_context(precision):
+        dtype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+        for (m_pad, d1), live in groups.items():
+            t0 = time.perf_counter()
+            pends = _decide_jobs(live, state, dtype, m_pad, d1)
+            for (i, _), pend in zip(live, pends):
+                out[i] = pend
+            if timings is not None:
+                share = (time.perf_counter() - t0) / len(live)
+                for i, _ in live:
+                    timings[i] = share
+    return out
 
 
 def best_schedule_fused_batch(jobs: Sequence[Job], state: PriceState, *,
                               precision: str = "auto",
                               timings: Optional[List[float]] = None
                               ) -> List[Optional[Schedule]]:
-    """Speculative batched Alg. 2: vmapped jit calls for all jobs at the
-    CURRENT prices.  Jobs are grouped by (dcap, workload) shape bucket and
-    each group is decided in one vmapped call — batching a burst must not
-    pad a small job up to the burst's largest DP table (the sweep cost is
-    linear in both padded axes).  Commit order / price updates are the
-    caller's job (``OASiS.on_arrivals`` re-solves any job whose prices
-    moved).
-
-    ``timings``, when given, is filled in place with each job's share of
-    its own shape group's wall time (len(jobs) entries) — a fair
-    per-decision latency attribution for the scheduler's stats."""
+    """Speculative batched Alg. 2 with placements materialized for every
+    accepted candidate (all at the CURRENT prices — the caller must not
+    commit between the call and using the results)."""
+    pends = decide_burst(jobs, state, precision=precision, timings=timings)
     out: List[Optional[Schedule]] = [None] * len(jobs)
-    if timings is not None:
-        timings[:] = [0.0] * len(jobs)
-    groups = {}
-    for i, j in enumerate(jobs):
-        dcap = min(j.max_chunks_per_slot, j.workload)
-        if dcap == 0:
-            continue
-        key = (_bucket(dcap + 1, step=64), _bucket(j.workload + 1, step=256))
-        groups.setdefault(key, []).append((i, j))
-    if not groups:
-        return out
-    T = state.horizon      # window-local lookahead (== cluster.T episodic)
     with _x64_context(precision):
         dtype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
         sd = _state_arrays(state, dtype)
-        for (m_pad, d1), live in groups.items():
-            t0 = time.perf_counter()
-            b_pad = _bucket(len(live), floor=1, step=8)
-            jds = [_job_arrays(j, T, m_pad, dtype) for _, j in live]
-            jds += [_reject_job_arrays(T, m_pad, dtype)] * (b_pad - len(live))
-            stacked = tuple(jnp.stack(cols) for cols in zip(*jds))
-            best_t, _, cost, d_left, d_slots, y, z = _decide_many(
-                sd, stacked, d1=d1)
-            best_t = np.asarray(best_t)
-            cost = np.asarray(cost)
-            d_left = np.asarray(d_left)
-            d_slots = np.asarray(d_slots)
-            y, z = np.asarray(y), np.asarray(z)
-            for bi, (i, job) in enumerate(live):
-                out[i] = _schedule_from_outputs(
-                    job, state, int(best_t[bi]), float(cost[bi]),
-                    int(d_left[bi]), d_slots[bi], y[bi], z[bi])
-            if timings is not None:
-                share = (time.perf_counter() - t0) / len(live)
-                for i, _ in live:
-                    timings[i] = share
+        for i, pend in enumerate(pends):
+            if pend is not None:
+                out[i] = _materialize(pend, state, sd, dtype)
     return out

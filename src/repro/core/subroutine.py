@@ -252,29 +252,45 @@ def workload_tables(job: Job, dcap: int) -> Tuple[np.ndarray, np.ndarray]:
 
 
 def cost_t_rows(job: Job, state: PriceState, p: np.ndarray, q: np.ndarray,
-                dcap: int) -> np.ndarray:
+                dcap: int, slots: Optional[np.ndarray] = None) -> np.ndarray:
     """rows[t, d] = COST_t(t, d) for every slot and d in [0, dcap].
 
     Fully vectorized over (t, d): capacity tables, the cost sort, and the
     prefix-sum greedy costs are whole-array ops — no per-slot Python loop.
+
+    ``slots`` (sorted 1-D slot indices) restricts the computation to those
+    slots, returning ``(len(slots), dcap + 1)`` — the host-side form of
+    the partial recompute the fused engine's row cache does per dirty
+    tile, and bit-identical to ``cost_t_rows(...)[slots]``.
     """
-    T = state.horizon      # window-local lookahead (== cluster.T episodic)
     a = job.arrival
+    # read-only access to the host mirrors (not the mutable ``g``/``v``
+    # views, which would drop the device residency and row caches)
+    if slots is None:
+        g_s, v_s, p_s, q_s = state._g_host, state._v_host, p, q
+    else:
+        slots = np.asarray(slots, np.int64)
+        g_s, v_s = state._g_host[slots], state._v_host[slots]
+        p_s, q_s = p[slots], q[slots]
+    n = p_s.shape[0]
     wc_cap, wc_cost, wc_scost = _prefix_tables(
-        p, state.cluster.worker_caps[None] - state.g, job.worker_res)
+        p_s, state.cluster.worker_caps[None] - g_s, job.worker_res)
     ps_cap, ps_cost, ps_scost = _prefix_tables(
-        q, state.cluster.ps_caps[None] - state.v, job.ps_res)
+        q_s, state.cluster.ps_caps[None] - v_s, job.ps_res)
     W, Z = workload_tables(job, dcap)                        # (M,)
     feas_n = W <= job.num_chunks
-    w_costs = _greedy_cost_rows(wc_cap, wc_cost, wc_scost, W)      # (T, M)
+    w_costs = _greedy_cost_rows(wc_cap, wc_cost, wc_scost, W)      # (n, M)
     # PS deployed = min(target, W, pool capacity); feasible iff >= (b/B) W
-    pool = ps_cap[:, -1:] if ps_cap.shape[1] else np.zeros((T, 1), np.int64)
-    deploy = np.minimum(np.minimum(Z, W)[None, :], pool)           # (T, M)
+    pool = ps_cap[:, -1:] if ps_cap.shape[1] else np.zeros((n, 1), np.int64)
+    deploy = np.minimum(np.minimum(Z, W)[None, :], pool)           # (n, M)
     feas_ps = deploy * job.ps_bw >= W[None, :] * job.worker_bw - 1e-9
     z_costs = _greedy_cost_rows(ps_cap, ps_cost, ps_scost, deploy)
     rows = np.where(feas_n[None, :] & feas_ps, w_costs + z_costs, INF)
     rows[:, 0] = 0.0
-    rows[:a] = INF
+    if slots is None:
+        rows[:a] = INF
+    else:
+        rows[slots < a] = INF
     return rows
 
 

@@ -1,0 +1,129 @@
+"""Horizon-tiled min-plus DP building blocks.
+
+The full-horizon sweeps in ``ref.py`` process all ``T`` slots
+unconditionally, so a decision's DP cost scales linearly in the horizon
+even when the job's utility has decayed to nothing long before ``T``.
+The tiled engine (``core/schedule_jax``) instead walks the horizon in
+``TILE``-slot blocks inside a ``lax.while_loop``, skipping the blocks
+before the job's arrival and stopping as soon as no remaining slot can
+beat the incumbent payoff (an exact bound — see the engine docstring).
+
+This module holds the batched per-slot/per-tile primitives that make the
+tile body cheap and keeps them independently testable against
+``minplus_sweep_cost``:
+
+* ``minplus_chain_step``  — one DP slot for a whole lane batch,
+  ``new[b, d] = min_j rows[b, j] + prev[b, d - j]``, as an unrolled (or
+  block-scanned, for wide bands) chain of static slices of the
+  left-padded carry: the same candidate ordering as the reference scan,
+  so costs are bit-identical in any dtype.
+* ``minplus_tile``        — a ``TILE``-slot chain segment: scan of
+  ``minplus_chain_step`` over the tile, returning every intermediate
+  column (the engine stores them for the split backtrack).
+* ``minplus_sweep_tiled`` — a full sweep built from tiles with a dynamic
+  ``start`` slot, equal to ``minplus_sweep_cost`` on identity prefixes;
+  the oracle form the kernel tests pin.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+# Tile width shared with the fused engine: big enough that per-tile fixed
+# costs (price slices, argsorts, while_loop bookkeeping) amortize, small
+# enough that the early-exit check fires with useful granularity.
+TILE = 64
+
+# fully-unrolled chains above this band width blow up compile time; fall
+# back to dynamically-indexed blocks of this many taps (same thresholds
+# as the untiled ref sweep).
+_UNROLL_MAX = 512
+_CHAIN_BLOCK = 32
+
+
+def minplus_chain_step(row: jax.Array, prev: jax.Array) -> jax.Array:
+    """One banded min-plus DP slot for a batch of lanes.
+
+    row: (B, DC+1) slot costs; prev: (B, D+1) carry.  Returns
+    ``new[b, d] = min_j row[b, j] + prev[b, d - j]`` (out-of-range
+    ``d - j`` contributes +inf), evaluated as a chain of static slices of
+    the left-padded carry so XLA fuses it into one vectorised loop.
+    """
+    B, dc1 = row.shape
+    d1 = prev.shape[1]
+    prev_pad = jnp.concatenate(
+        [jnp.full((B, dc1), jnp.inf, prev.dtype), prev], axis=1)
+    if dc1 <= _UNROLL_MAX:
+        cands = [row[:, j:j + 1] + jax.lax.slice(
+            prev_pad, (0, dc1 - j), (B, dc1 - j + d1)) for j in range(dc1)]
+        return functools.reduce(jnp.minimum, cands)
+    blk = _CHAIN_BLOCK
+    nb = (dc1 + blk - 1) // blk
+    rowp = jnp.concatenate(
+        [row, jnp.full((B, nb * blk - dc1), jnp.inf, row.dtype)], axis=1)
+    prev_pad = jnp.concatenate(
+        [jnp.full((B, nb * blk), jnp.inf, prev.dtype), prev], axis=1)
+
+    def step(best, b):
+        base = nb * blk - b * blk
+        win = jax.lax.dynamic_slice(
+            prev_pad, (0, base - (blk - 1)), (B, d1 + blk - 1))
+        rb = jax.lax.dynamic_slice(rowp, (0, b * blk), (B, blk))
+        for i in range(blk):
+            best = jnp.minimum(best, rb[:, i:i + 1] + jax.lax.slice(
+                win, (0, blk - 1 - i), (B, blk - 1 - i + d1)))
+        return best, None
+
+    best, _ = jax.lax.scan(
+        step, jnp.full((B, d1), jnp.inf, prev.dtype), jnp.arange(nb))
+    return best
+
+
+def minplus_tile(rows_tile: jax.Array, prev: jax.Array):
+    """One tile of the DP sweep for a lane batch.
+
+    rows_tile: (TILE', B, DC+1) slot-major tile of COST rows; prev:
+    (B, D+1) carry entering the tile.  Returns ``(carry_out, cols)``
+    with ``cols`` (TILE', B, D+1) — the DP column after each slot, which
+    the engine stores for the split backtrack.
+    """
+    def slot(carry, row):
+        new = minplus_chain_step(row, carry)
+        return new, new
+
+    return jax.lax.scan(slot, prev, rows_tile)
+
+
+def minplus_sweep_tiled(rows: jax.Array, d_total: int, *, tile: int = TILE,
+                        start=0) -> jax.Array:
+    """Cost-only sweep over (T, DC+1) rows, processed ``tile`` slots at a
+    time from the tile containing ``start`` (a traced value is fine).
+
+    Slots before ``start`` must be identity rows (``[0, inf, ...]``) —
+    the DP carry is unchanged there, which is how the engine encodes
+    pre-arrival slots — so the result rows from ``start`` on equal
+    ``minplus_sweep_cost``'s; earlier rows are returned as +inf (they are
+    never inspected).  ``T`` must be a multiple of ``tile``.
+    """
+    T, dc1 = rows.shape
+    assert T % tile == 0, f"horizon {T} not a multiple of tile {tile}"
+    n_tiles = T // tile
+    d1 = d_total + 1
+    init = jnp.full((1, d1), jnp.inf, rows.dtype).at[0, 0].set(0.0)
+    cost = jnp.full((T, d1), jnp.inf, rows.dtype)
+    k0 = jnp.asarray(start, jnp.int32) // tile
+
+    def body(carry):
+        k, prev, cost = carry
+        t0 = k * tile
+        zero = jnp.zeros_like(t0)
+        seg = jax.lax.dynamic_slice(rows, (t0, zero), (tile, dc1))
+        prev, cols = minplus_tile(seg[:, None, :], prev)
+        cost = jax.lax.dynamic_update_slice(cost, cols[:, 0, :], (t0, zero))
+        return k + 1, prev, cost
+
+    _, _, cost = jax.lax.while_loop(
+        lambda c: c[0] < n_tiles, body, (k0, init, cost))
+    return cost

@@ -305,6 +305,20 @@ def run(cluster: ClusterSpec, jobs: Sequence[Job], scheduler: str = "oasis",
     ``scheduler="learned"``) answers each per-arrival decision point —
     see :func:`decisions`; without one the scheduler decides for itself
     on the exact pre-existing code path (no generator yields).
+
+    Example — the same four-job trace under a reactive baseline and
+    OASiS (price params derived from the trace when not given)::
+
+        >>> from repro.sim import engine
+        >>> from repro.sim.workload import make_cluster, make_jobs
+        >>> cluster = make_cluster(T=20, H=3, K=3)
+        >>> jobs = make_jobs(4, T=20, seed=0, small=True)
+        >>> r = engine.run(cluster, jobs, scheduler="fifo")
+        >>> (r.n_jobs, r.accepted, r.completed)
+        (4, 4, 4)
+        >>> r = engine.run(cluster, jobs, scheduler="oasis")
+        >>> r.accepted, r.total_utility > 0
+        (4, True)
     """
     if scheduler == "learned" and policy is None:
         raise ValueError(
@@ -714,7 +728,22 @@ def run_stream(cluster: ClusterSpec, jobs: Iterable[Job],
     ``utilization`` is a running aggregate over the elapsed clock, and
     memory stays bounded by the window (``SimResult.window_bytes``).
     ``policy`` answers each decision point as in :func:`run` (required
-    for ``scheduler="learned"``)."""
+    for ``scheduler="learned"``).
+
+    Example — a short bounded slice of an open-ended stream through the
+    rolling 16-slot price window::
+
+        >>> import itertools
+        >>> from repro.sim import engine
+        >>> from repro.sim.workload import make_cluster, stream_jobs
+        >>> cluster = make_cluster(T=20, H=3, K=3)
+        >>> arrivals = itertools.islice(
+        ...     stream_jobs(rate=0.5, seed=1, small=True), 12)
+        >>> r = engine.run_stream(cluster, arrivals, scheduler="oasis",
+        ...                       window=16)
+        >>> (r.n_jobs, r.accepted, r.window_bytes is not None)
+        (12, 12, True)
+    """
     if scheduler == "learned" and policy is None:
         raise ValueError(
             "scheduler='learned' needs a policy — pass engine.run_stream("

@@ -1,0 +1,71 @@
+"""Markdown link check over the repo's docs surface.
+
+Every relative link and intra-document anchor in README.md, ROADMAP.md,
+and docs/ must resolve: a renamed file or a reworded heading breaks the
+docs silently otherwise.  External (http/mailto) links are not fetched —
+this is a structural check, not a crawler.  Runs in tier-1 and as the
+lint job's ``docs link check`` step.
+"""
+import re
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+DOC_FILES = sorted(
+    [REPO / "README.md", REPO / "ROADMAP.md"] + list((REPO / "docs").glob("*.md")))
+
+# inline markdown links [text](target); images share the syntax
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+_CODE_FENCE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def _anchor_slug(heading: str) -> str:
+    """GitHub's heading -> #fragment rule: lowercase, drop punctuation
+    (keeping word chars and hyphens), spaces to hyphens."""
+    text = re.sub(r"[`*_]", "", heading.strip())
+    text = re.sub(r"[^\w\- ]", "", text.lower())
+    return text.replace(" ", "-")
+
+
+def _anchors(md: Path) -> set:
+    return {_anchor_slug(h) for h in _HEADING.findall(md.read_text())}
+
+
+def _links(md: Path):
+    text = _CODE_FENCE.sub("", md.read_text())
+    return _LINK.findall(text)
+
+
+@pytest.mark.parametrize("md", DOC_FILES, ids=lambda p: str(p.relative_to(REPO)))
+def test_markdown_links_resolve(md):
+    assert md.exists(), f"doc file vanished: {md}"
+    problems = []
+    for target in _links(md):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, fragment = target.partition("#")
+        dest = md if not path_part else (md.parent / path_part).resolve()
+        if path_part and REPO not in dest.parents and dest != REPO:
+            # GitHub-relative URL escaping the checkout (e.g. the
+            # ../../actions/... CI badge) — not a repo file; skip
+            continue
+        if not dest.exists():
+            problems.append(f"{target}: file not found ({dest})")
+            continue
+        if fragment and dest.suffix == ".md" and \
+                fragment not in _anchors(dest):
+            problems.append(f"{target}: no heading anchors to "
+                            f"#{fragment} in {dest.name}")
+    assert not problems, (
+        f"{md.relative_to(REPO)} has dead links:\n  " + "\n  ".join(problems))
+
+
+def test_docs_are_linked_from_readme():
+    """Every file in docs/ must be reachable from the README (the docs
+    layer's entry point)."""
+    readme = (REPO / "README.md").read_text()
+    missing = [p.name for p in (REPO / "docs").glob("*.md")
+               if f"docs/{p.name}" not in readme]
+    assert not missing, f"docs/ files not linked from README.md: {missing}"

@@ -222,6 +222,56 @@ def test_jax_equals_fast_on_tie_heavy_workload():
     assert fz.total_utility == pytest.approx(fast.total_utility, rel=1e-9)
 
 
+@pytest.mark.parametrize("seed", range(5))
+def test_backend_trajectories_identical_paper_scale(seed):
+    """The acceptance contract: on the 5 seeded paper-scale equivalence
+    instances (the same T=100 / 50+50 / 200-job setting test_sim_v2 pins
+    v1-vs-v2 on), the fused jax engine — burst-batched, tiled, row-cached
+    — reproduces the ref oracle's whole trajectory BIT-identically:
+    accept set, completion slots, and total utility (exact float
+    equality, not approx)."""
+    from repro.sim import simulate
+    cluster = make_cluster(T=100, H=50, K=50)
+    jobs = make_jobs(200, T=100, seed=seed, small=True)
+    a = simulate(cluster, jobs, scheduler="oasis", impl="ref", quantum=0)
+    b = simulate(cluster, jobs, scheduler="oasis", impl="jax", quantum=0)
+    assert a.completion == b.completion
+    assert a.accepted == b.accepted
+    assert a.total_utility == b.total_utility
+
+
+def test_on_arrivals_burst_equals_sequential_full_size_jobs():
+    """Regression for the split-tie trajectory fork: with full-size jobs
+    the DP cost sits on near-zero tie plateaus, and two launch shapes
+    (lane-batched burst vs B=1 sequential) can disagree in the last ulps
+    of a DP cell.  The eps-banded backtrack (_SPLIT_TOL) must keep the
+    burst path's placements — not just its accept set — identical to the
+    sequential path, or the committed price trajectories fork."""
+    from repro.sim.engine import _with_quantum
+    T, H, K = 60, 40, 40
+    cluster = make_cluster(T=T, H=H, K=K)
+    jobs = [_with_quantum(j, 0)
+            for j in make_jobs(100, T=T, seed=0, small=False)]
+    params = price_params_from_jobs(jobs, cluster)
+    seq = OASiS(cluster, params, impl="jax")
+    for j in sorted(jobs, key=lambda x: (x.arrival, x.jid)):
+        seq.on_arrival(j)
+    bat = OASiS(cluster, params, impl="jax")
+    by_slot = {}
+    for j in jobs:
+        by_slot.setdefault(j.arrival, []).append(j)
+    for t in range(T):
+        bat.on_arrivals(sorted(by_slot.get(t, []), key=lambda x: x.jid))
+    assert set(seq.accepted) == set(bat.accepted)
+    assert bat.total_utility == seq.total_utility       # exact
+    for jid, s in seq.accepted.items():
+        b = bat.accepted[jid]
+        assert b.finish == s.finish
+        for t in s.workers:
+            assert np.array_equal(b.workers[t], s.workers[t]), (jid, t)
+            assert np.array_equal(b.ps[t], s.ps[t]), (jid, t)
+
+
 def test_dp_sweep_jax_respects_x64():
     """dp_sweep_jax keeps float64 when jax_enable_x64 is on (the seed cast
     everything to float32, silently diverging near ties)."""
