@@ -21,6 +21,11 @@ Compared leaves:
   serving mode (gate fires when baseline/fresh exceeds the ratio, i.e.
   throughput dropped).  ``serving_quick`` is the CI smoke — never gated
   (see ``SERVING_SECTIONS``)
+* ``churn.retention.<sched>.<variant>`` — utility retention under fleet
+  churn, also inverted (higher is better): the gate fires when a
+  scheduler keeps a ``ratio``-times smaller share of its churn-free
+  utility than the baseline recorded.  ``churn_quick`` is the CI smoke
+  — never gated (see ``CHURN_SECTIONS``)
 
 A section is only ever compared against a like-configured baseline
 (``quick`` flag for the decision sections; T/H/K/n_jobs dims for the
@@ -60,6 +65,12 @@ SCALE_SECTIONS = ("sim_scale", "sim_scale_100x")
 # sim_scale_quick.
 SERVING_SECTIONS = ("serving",)
 
+# gated churn sections.  churn_quick is the CI smoke — informational
+# only, same rationale as sim_scale_quick.  Retention is deterministic
+# (seeded trace, seeded workload), so unlike the wall-clock leaves a
+# drop here is a semantic robustness regression, not runner weather.
+CHURN_SECTIONS = ("churn",)
+
 
 def _leaves(doc: dict) -> Iterator[Tuple[str, float]]:
     """Yield (path, value) for every gated numeric leaf in ``doc``."""
@@ -89,6 +100,13 @@ def _rate_leaves(doc: dict) -> Iterator[Tuple[str, float]]:
         srv = doc.get(section, {})
         for sched, dps in sorted(srv.get("decisions_per_sec", {}).items()):
             yield f"{section}.decisions_per_sec.{sched}", float(dps)
+    for section in CHURN_SECTIONS:
+        ch = doc.get(section, {})
+        for sched, per_variant in sorted(ch.get("retention", {}).items()):
+            if not isinstance(per_variant, dict):
+                continue
+            for variant, ret in sorted(per_variant.items()):
+                yield f"{section}.retention.{sched}.{variant}", float(ret)
 
 
 def _section_quick(doc: dict, section: str):
@@ -119,6 +137,8 @@ def _config_mismatches(base: dict, fresh: dict) -> Dict[str, str]:
                 for section in SCALE_SECTIONS}
     dim_sets.update({section: ("H", "K", "window", "slots", "n_jobs",
                                "quick") for section in SERVING_SECTIONS})
+    dim_sets.update({section: ("T", "H", "K", "n_jobs", "levels", "quick")
+                     for section in CHURN_SECTIONS})
     for section, dims in dim_sets.items():
         bs, fs = base.get(section, {}), fresh.get(section, {})
         if bs and fs and any(bs.get(d) != fs.get(d) for d in dims):
@@ -177,14 +197,14 @@ def check(base: dict, fresh: dict, ratio: float,
         if bval <= 0.0 or 1.0 / bval < MIN_BASELINE_SECONDS:
             # a baseline sustaining >1k decisions/sec spends sub-ms per
             # decision — same noise floor as the latency leaves
-            print(f"SKIP  {path}: baseline {bval:.1f}/s below noise floor")
+            print(f"SKIP  {path}: baseline {bval:.1f} below noise floor")
             continue
         fval = fresh_rates[path]
         r = bval / max(fval, 1e-12)
         compared += 1
         mark = "FAIL" if r > ratio else "ok  "
-        print(f"{mark}  {path}: {bval:.1f}/s -> {fval:.1f}/s "
-              f"({r:.2f}x slowdown)")
+        print(f"{mark}  {path}: {bval:.4g} -> {fval:.4g} "
+              f"({r:.2f}x drop)")
         if r > ratio:
             failures.append((path, r))
     if failures:

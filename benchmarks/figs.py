@@ -297,6 +297,53 @@ def serving_table(quick: bool = False,
     return rows
 
 
+def churn_table(quick: bool = False,
+                stats_out: Optional[dict] = None) -> List[str]:
+    """Fleet-churn robustness: utility retention (churned / churn-free
+    utility, higher is better) per scheduler at each churn level of
+    ``sim.scenarios.run_churn``, plus the preemption counters.  The
+    churned runs execute with ``check=True`` — a capacity violation on
+    the surviving fleet aborts the benchmark.  ``stats_out`` receives
+    the ``churn`` (or, under ``quick``, ``churn_quick``) record for
+    BENCH_decision.json."""
+    results = scenarios.run_churn(seed=0, quick=quick)
+    rows = []
+    for r in results:
+        rows.append(f"churn[{r.scheduler};{r.variant}],"
+                    f"{r.wall_seconds*1e6:.0f},{r.utility:.2f}")
+        if r.retention is not None:
+            rows.append(f"churn[{r.scheduler};{r.variant};retention],0,"
+                        f"{r.retention:.4f}")
+            rows.append(f"churn[{r.scheduler};{r.variant};preempted],0,"
+                        f"{r.preempted}")
+    if stats_out is not None:
+        dims = scenarios.CHURN_DIMS_QUICK if quick else scenarios.CHURN_DIMS
+        wall: dict = {}
+        utility: dict = {}
+        retention: dict = {}
+        preempted: dict = {}
+        dropped: dict = {}
+        for r in results:
+            wall[r.scheduler] = wall.get(r.scheduler, 0.0) + r.wall_seconds
+            utility.setdefault(r.scheduler, {})[r.variant] = r.utility
+            if r.retention is not None:
+                retention.setdefault(r.scheduler, {})[r.variant] = r.retention
+                preempted.setdefault(r.scheduler, {})[r.variant] = r.preempted
+                dropped.setdefault(r.scheduler, {})[r.variant] = \
+                    r.preempt_dropped
+        stats_out.update({
+            "T": dims["T"], "H": dims["H"], "K": dims["K"],
+            "n_jobs": dims["n"], "quick": bool(quick),
+            "levels": [float(f) for f in dims["levels"]],
+            "wall_seconds": wall,
+            "utility": utility,
+            "retention": retention,
+            "preempted": preempted,
+            "preempt_dropped": dropped,
+        })
+    return rows
+
+
 def scenario_table(quick: bool = False,
                    names=("hetero", "cancel", "straggler", "misest")
                    ) -> List[str]:

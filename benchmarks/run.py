@@ -13,8 +13,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
   minplus[...]        scheduler DP kernel micro-benchmarks
 
 Machine-readable perf tracking (``--json``, default
-``BENCH_decision.json``, schema ``bench_decision/v3``; v2 baselines are
-read compatibly): the ``decision`` section writes p50/p95 per backend
+``BENCH_decision.json``, schema ``bench_decision/v4``; v2/v3 baselines
+are read compatibly): the ``decision`` section writes p50/p95 per backend
 plus the sim-v2 wall-clock comparison, and the ``simscale`` section
 times the 10x-scale fig3 run per scheduler *including OASiS itself* on
 the fused jit engine + device-resident price state (``sim_scale``: wall
@@ -27,7 +27,12 @@ on every PR.  ``serving`` records the continuous-traffic mode (the
 >=20k-slot diurnal x bursty stream over the paper-scale fleet through
 the rolling-window engine): sustained decisions/sec and the resident
 ``window_bytes`` memory proxy per scheduler; ``serving_quick`` is its
-CI-smoke shrink.  Sections *merge* into an existing ``--json`` file, so
+CI-smoke shrink.  ``churn`` records the fleet-churn robustness table
+(per-scheduler utility **retention** — churned / churn-free utility,
+higher is better — at each churn level of ``sim.scenarios.run_churn``,
+plus preemption counters; churned runs execute with capacity checks
+on); ``churn_quick`` is its CI-smoke shrink.  Sections *merge* into an
+existing ``--json`` file, so
 the committed baseline can accumulate all records; CI regenerates the
 file and fails on >2x regressions via
 ``python -m benchmarks.check_regression``.
@@ -49,7 +54,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 SECTIONS = ("fig3", "fig4", "fig5", "fig6", "latency", "decision",
             "simspeed", "scale", "simscale", "simscale_quick", "serving",
-            "serving_quick", "scenarios", "rl", "kernels")
+            "serving_quick", "churn", "churn_quick", "scenarios", "rl",
+            "kernels")
 
 
 def _is_num(x) -> bool:
@@ -64,9 +70,10 @@ def _num_dict(sec: str, name: str, d, problems) -> None:
 
 
 def validate_tracked(payload: dict) -> list:
-    """Structural validation of a bench_decision payload (v2 or v3; v3
-    adds the ``serving``/``serving_quick`` sections — readers stay
-    backward-compatible with committed v2 baselines).
+    """Structural validation of a bench_decision payload (v2/v3/v4; v3
+    added the ``serving``/``serving_quick`` sections, v4 adds
+    ``churn``/``churn_quick`` — readers stay backward-compatible with
+    committed v2/v3 baselines).
 
     Returns a list of problems (empty = valid).  ``_merge_json`` refuses
     to write an invalid file: a malformed section used to be caught only
@@ -74,20 +81,21 @@ def validate_tracked(payload: dict) -> list:
     time the broken file was already committed as the baseline.
 
     >>> from benchmarks.run import validate_tracked
-    >>> validate_tracked({"schema": "bench_decision/v3"})
+    >>> validate_tracked({"schema": "bench_decision/v4"})
     []
-    >>> validate_tracked({"schema": "bench_decision/v3",
+    >>> validate_tracked({"schema": "bench_decision/v4",
     ...                   "decision_seconds": {"jax": {"p50": 0.01}}})
     ['decision_seconds.jax: needs finite p50/p95/mean']
     """
     problems = []
     if payload.get("schema") not in ("bench_decision/v2",
-                                     "bench_decision/v3"):
-        problems.append(f"schema: expected 'bench_decision/v2' or "
-                        f"'bench_decision/v3', got {payload.get('schema')!r}")
+                                     "bench_decision/v3",
+                                     "bench_decision/v4"):
+        problems.append(f"schema: expected 'bench_decision/v2'..'v4', "
+                        f"got {payload.get('schema')!r}")
     known = {"schema", "platform", "python", "decision_seconds", "sim_v2",
              "sim_scale", "sim_scale_quick", "sim_scale_100x", "serving",
-             "serving_quick", "rl"}
+             "serving_quick", "churn", "churn_quick", "rl"}
     for sec in sorted(set(payload) - known):
         problems.append(f"{sec}: unknown section (known: {sorted(known)})")
 
@@ -163,6 +171,26 @@ def validate_tracked(payload: dict) -> list:
                     v is None or _is_num(v) for v in stats.values()):
                 problems.append(f"{sec}.decision.{sched}: expected dict of "
                                 "numbers/nulls")
+    for sec in ("churn", "churn_quick"):
+        ch = _section(sec)
+        if ch is None:
+            continue
+        for dim in ("T", "H", "K", "n_jobs"):
+            if not isinstance(ch.get(dim), int):
+                problems.append(f"{sec}.{dim}: expected int")
+        levels = ch.get("levels")
+        if not isinstance(levels, list) or not levels or \
+                not all(_is_num(f) for f in levels):
+            problems.append(f"{sec}.levels: expected non-empty list of "
+                            "finite numbers")
+        _num_dict(sec, "wall_seconds", ch.get("wall_seconds"), problems)
+        for name in ("utility", "retention", "preempted", "preempt_dropped"):
+            per_sched = ch.get(name)
+            if not isinstance(per_sched, dict):
+                problems.append(f"{sec}.{name}: expected dict")
+                continue
+            for sched, per_variant in per_sched.items():
+                _num_dict(sec, f"{name}.{sched}", per_variant, problems)
     rl = _section("rl")
     if rl is not None:
         if not _is_num(rl.get("train_seconds")):
@@ -199,8 +227,8 @@ def _merge_json(path: str, updates: dict) -> None:
     payload.pop("quick", None)                  # v1 leftover
     payload.update(updates)
     payload.update({
-        # always write the current version; reads accept v2 baselines
-        "schema": "bench_decision/v3",
+        # always write the current version; reads accept v2/v3 baselines
+        "schema": "bench_decision/v4",
         "platform": platform.platform(),
         "python": platform.python_version(),
     })
@@ -348,6 +376,19 @@ def main() -> None:
         sqstats: dict = {}
         rows += figs.serving_table(quick=True, stats_out=sqstats)
         tracked["serving_quick"] = sqstats
+    if "churn" in which:
+        # the tracked fleet-churn robustness configuration (full-size
+        # jobs over the 40+40 fleet): never shrunk by --quick
+        chstats: dict = {}
+        rows += figs.churn_table(quick=False, stats_out=chstats)
+        tracked["churn"] = chstats
+    if "churn_quick" in which:
+        # CI smoke: the shrunk churn instance through every scheduler
+        # (capacity checks on under churn); kept as a separate record so
+        # it is never diffed against the full-instance baseline
+        cqstats: dict = {}
+        rows += figs.churn_table(quick=True, stats_out=cqstats)
+        tracked["churn_quick"] = cqstats
     if "rl" in which:
         # the learned-scheduler acceptance row: budgeted CPU training +
         # held-out eval vs FIFO (quality claim lives here; the

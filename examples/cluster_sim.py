@@ -29,6 +29,13 @@ through the rolling-window engine and prints sustained decisions/sec
 plus the resident price-window bytes per scheduler:
 
     PYTHONPATH=src python examples/cluster_sim.py --scenario serving --quick
+
+The churn scenario fails a seeded fraction of each server pool mid-run,
+preempts the victims with checkpoint/restart cost, and prints the
+utility-retention table (churned / churn-free utility per scheduler and
+churn level — higher is better):
+
+    PYTHONPATH=src python examples/cluster_sim.py --scenario churn --quick
 """
 import argparse
 import os
@@ -106,6 +113,14 @@ def run_one_scenario(args):
                   f"p50={r.decision_p50*1e3:8.2f}ms "
                   f"p95={r.decision_p95*1e3:8.2f}ms "
                   f"mean={r.decision_mean*1e3:8.2f}ms")
+    churned = [r for r in rows if r.retention is not None]
+    if churned:
+        print("\n== utility retention under fleet churn "
+              "(churned / churn-free; higher is better) ==")
+        for r in churned:
+            print(f"{r.scheduler:6s} {r.variant:14s} ret={r.retention:6.3f} "
+                  f"preempted={r.preempted:3d} dropped={r.preempt_dropped:3d}  "
+                  f"{bar(r.retention, 1.0, width=24)}")
     streamed = [r for r in rows if r.decisions_per_sec is not None]
     if streamed:
         print("\n== sustained throughput (streamed trace) ==")

@@ -77,6 +77,12 @@ class ReactiveScheduler:
         self.alloc: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
         self.pool = DensePool(cluster.worker_caps.shape[1])
         self.dirty = True
+        # Effective capacities every repack packs against.  They default
+        # to the cluster's own arrays (the *same objects* — the zero-churn
+        # paths stay bit-identical) and are swapped for masked copies by
+        # ``set_capacity`` when the fleet-churn engine takes servers down.
+        self.worker_caps = cluster.worker_caps
+        self.ps_caps = cluster.ps_caps
 
     # -- events -------------------------------------------------------------
     def would_admit(self, job: Job, t: int) -> bool:
@@ -104,6 +110,24 @@ class ReactiveScheduler:
         # never clear an already-pending dirty (e.g. an arrival in the
         # same event batch that has not been stepped yet)
         self.dirty = self.dirty or self._completion_dirties()
+
+    # -- fleet churn (sim/fleet.py) -----------------------------------------
+    def set_capacity(self, worker_caps: np.ndarray,
+                     ps_caps: np.ndarray) -> None:
+        """Swap in the surviving fleet's effective capacity arrays
+        (``FleetState.worker_caps``/``ps_caps``: dead servers masked to
+        0-rows).  Every repack thereafter packs against the survivors."""
+        self.worker_caps = worker_caps
+        self.ps_caps = ps_caps
+        self.dirty = True
+
+    def preempt(self, jid: int, t: int) -> None:
+        """Evict ``jid``'s allocation (its servers died); the job stays
+        enrolled — ``unfinished`` keeps its arrival position, RRH keeps
+        its admission ``_meta`` — so the next repack re-queues it through
+        the scheduler's own resume order."""
+        self.alloc.pop(jid, None)
+        self.dirty = True
 
     def _completion_dirties(self) -> bool:
         """Can this completion change the next ``step`` output?  Freed
@@ -139,8 +163,8 @@ class FIFO(ReactiveScheduler):
         return any(j not in self.alloc for j in self.unfinished)
 
     def step_reference(self, t: int) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
-        free_w = self.cluster.worker_caps.astype(float).copy()
-        free_s = self.cluster.ps_caps.astype(float).copy()
+        free_w = self.worker_caps.astype(float).copy()
+        free_s = self.ps_caps.astype(float).copy()
         out: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
         # running jobs keep their placement (deduct first)
         for jid in self.unfinished:
@@ -168,8 +192,8 @@ class FIFO(ReactiveScheduler):
         return out
 
     def step_kernel(self, t: int) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
-        free_w = self.cluster.worker_caps.astype(float).copy()
-        free_s = self.cluster.ps_caps.astype(float).copy()
+        free_w = self.worker_caps.astype(float).copy()
+        free_s = self.ps_caps.astype(float).copy()
         out: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
         running = [j for j in self.unfinished if j in self.alloc]
         repack.deduct_running(free_w, [self.alloc[j][0] for j in running],
@@ -200,9 +224,9 @@ class DRF(ReactiveScheduler):
     name = "drf"
 
     def step_reference(self, t: int) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
-        free_w = self.cluster.worker_caps.astype(float).copy()
-        free_s = self.cluster.ps_caps.astype(float).copy()
-        total_w = np.maximum(self.cluster.worker_caps.sum(axis=0), 1e-9)
+        free_w = self.worker_caps.astype(float).copy()
+        free_s = self.ps_caps.astype(float).copy()
+        total_w = np.maximum(self.worker_caps.sum(axis=0), 1e-9)
         counts = {jid: 0 for jid in self.unfinished}
         shares = {jid: 0.0 for jid in self.unfinished}
         placements = {jid: (np.zeros(self.cluster.H, dtype=np.int64),
@@ -236,7 +260,7 @@ class DRF(ReactiveScheduler):
         return {j: pl for j, pl in placements.items() if pl[0].sum() > 0}
 
     def step_kernel(self, t: int) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
-        return repack.drf_repack(self.cluster.worker_caps, self.cluster.ps_caps,
+        return repack.drf_repack(self.worker_caps, self.ps_caps,
                                  self.pool, self.unfinished)
 
 
@@ -279,8 +303,8 @@ class RRH(ReactiveScheduler):
         return any(j not in self.alloc for j in self.unfinished)
 
     def step_reference(self, t: int) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
-        free_w = self.cluster.worker_caps.astype(float).copy()
-        free_s = self.cluster.ps_caps.astype(float).copy()
+        free_w = self.worker_caps.astype(float).copy()
+        free_s = self.ps_caps.astype(float).copy()
         out: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
         for jid in self.unfinished:           # running keep allocation
             if jid in self.alloc:
@@ -312,8 +336,8 @@ class RRH(ReactiveScheduler):
         return out
 
     def step_kernel(self, t: int) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
-        free_w = self.cluster.worker_caps.astype(float).copy()
-        free_s = self.cluster.ps_caps.astype(float).copy()
+        free_w = self.worker_caps.astype(float).copy()
+        free_s = self.ps_caps.astype(float).copy()
         out: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
         running = [j for j in self.unfinished if j in self.alloc]
         repack.deduct_running(free_w, [self.alloc[j][0] for j in running],
@@ -347,8 +371,8 @@ class Dorm(ReactiveScheduler):
     name = "dorm"
 
     def step_reference(self, t: int) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
-        free_w = self.cluster.worker_caps.astype(float).copy()
-        free_s = self.cluster.ps_caps.astype(float).copy()
+        free_w = self.worker_caps.astype(float).copy()
+        free_s = self.ps_caps.astype(float).copy()
         placements = {jid: (np.zeros(self.cluster.H, dtype=np.int64),
                             np.zeros(self.cluster.K, dtype=np.int64))
                       for jid in self.unfinished}
@@ -375,7 +399,7 @@ class Dorm(ReactiveScheduler):
         return {j: pl for j, pl in placements.items() if pl[0].sum() > 0}
 
     def step_kernel(self, t: int) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
-        return repack.dorm_repack(self.cluster.worker_caps, self.cluster.ps_caps,
+        return repack.dorm_repack(self.worker_caps, self.ps_caps,
                                   self.pool, self.unfinished)
 
 

@@ -432,11 +432,17 @@ class PriceState:
         if ps and self.cluster.K:
             deltas.append((1, self._v_host) + self._window_delta(
                 ps, sres, T, sign))
+        self._apply_deltas(deltas, negative=sign < 0)
+
+    def _apply_deltas(self, deltas, negative: bool) -> None:
+        """Common tail of every state mutation (job commits/releases and
+        fleet-churn server blocks): host add, incremental device stream,
+        version bump, dirty-span logging."""
         for _, host, t0, delta in deltas:
             host[t0:t0 + delta.shape[0]] += delta
         if self._dev is not None and deltas:
             if np.dtype(self._dev_dtype) != np.float64 and (
-                    sign < 0
+                    negative
                     or self._commits_since_sync >= self._F32_RESYNC_EVERY):
                 # float32 residency (GPU/TPU): incremental adds round per
                 # commit, so the residency slowly drifts from the float64
@@ -478,6 +484,61 @@ class PriceState:
         """Inverse of commit — used when a running job is preempted/killed
         (fault handling), not part of the paper's committed schedules."""
         self._apply(workers, ps, job.worker_res, job.ps_res, -1.0)
+
+    # -- fleet churn (sim/fleet.py): capacity-aware headroom ----------------
+    def _server_pool(self, pool: str):
+        if pool == "worker":
+            return 0, self._g_host, self.cluster.worker_caps
+        if pool == "ps":
+            return 1, self._v_host, self.cluster.ps_caps
+        raise ValueError(f"unknown pool {pool!r}")
+
+    def block_server(self, pool: str, server: int, t0: int = 0) -> float:
+        """Fill one server's resident slots ``[t0, horizon)`` to capacity.
+
+        Called when the server fails or drains (after its victims' tails
+        have been released): its prices rise to the U bound and — the
+        property the scheduling subroutines actually rely on — its
+        per-slot headroom drops to exactly 0, so Alg. 2 can never plan
+        onto a dead server.  Applied through the same delta machinery as
+        ``commit`` (incremental device stream, dirty-span log), so the
+        O(1)-upload residency invariant is preserved.  Idempotent per
+        slot (already-full slots get an exact-0.0 delta) — the streaming
+        engine re-blocks after every ``advance`` to cover the freshly
+        opened tail slots.  Returns the GPU-slot units (resource 0)
+        added, for the caller's utilization accounting."""
+        pool_i, host, caps = self._server_pool(pool)
+        T = host.shape[0]
+        t0 = int(min(max(t0, 0), T))
+        if t0 >= T or host.shape[1] == 0:
+            return 0.0
+        amt = caps[server][None, :] - host[t0:, server, :]
+        win = min(size_bucket(T - t0, floor=8, step=64), T)
+        w0 = T - win
+        delta = np.zeros((win, host.shape[1], R))
+        delta[t0 - w0:, server, :] = amt
+        self._apply_deltas([(pool_i, host, w0, delta)], negative=False)
+        return float(amt[:, 0].sum())
+
+    def unblock_server(self, pool: str, server: int, t0: int = 0) -> float:
+        """Inverse of :meth:`block_server`: zero the server's resident
+        content on ``[t0, horizon)`` when it recovers.  While blocked the
+        server's headroom is 0, so nothing can have committed onto it —
+        its content *is* the blocked amount, and removing it restores
+        the pre-block zeros bit-exactly.  Returns the GPU-slot units
+        (resource 0) released."""
+        pool_i, host, _ = self._server_pool(pool)
+        T = host.shape[0]
+        t0 = int(min(max(t0, 0), T))
+        if t0 >= T or host.shape[1] == 0:
+            return 0.0
+        amt = host[t0:, server, :].copy()
+        win = min(size_bucket(T - t0, floor=8, step=64), T)
+        w0 = T - win
+        delta = np.zeros((win, host.shape[1], R))
+        delta[t0 - w0:, server, :] = -amt
+        self._apply_deltas([(pool_i, host, w0, delta)], negative=True)
+        return float(amt[:, 0].sum())
 
     def dirty_spans_since(self, version: int):
         """Slot spans whose prices may have moved since ``version``.

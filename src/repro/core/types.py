@@ -60,6 +60,13 @@ class Job:
     # quantum of q groups q chunk-passes into one DP unit; the schedule then
     # over-provisions by < one quantum (still feasible, slightly costlier).
     quantum: int = 1
+    # Fraction of the job's workload still to run.  The fleet-churn engine
+    # re-admits a preempted job as a scaled copy carrying only the work not
+    # covered by its last checkpoint (sim/fleet.py); per-unit quantities
+    # (chunk_time, workers_for, ps_for) are scale-free.  The default 1.0
+    # multiplies through as an IEEE identity, keeping every derived value
+    # bit-identical to the pre-churn definition.
+    work_scale: float = 1.0
 
     # ---- derived quantities --------------------------------------------
     @property
@@ -69,18 +76,21 @@ class Job:
 
     @property
     def total_work_slots(self) -> float:
-        """E_i N_i M_i (tau + 2e/b): total worker-slots of work (RHS of (2))."""
-        return self.epochs * self.num_chunks * self.chunk_time
+        """E_i N_i M_i (tau + 2e/b): total worker-slots of work (RHS of (2)),
+        scaled by ``work_scale`` (1.0 — exact — except for churn restarts)."""
+        return self.work_scale * self.epochs * self.num_chunks * self.chunk_time
 
     @property
     def workload(self) -> int:
-        """DP units: ceil(E_i * N_i / quantum) chunk-pass groups."""
-        return math.ceil(self.epochs * self.num_chunks / self.quantum)
+        """DP units: ceil(work_scale * E_i * N_i / quantum) chunk-pass groups."""
+        return math.ceil(self.work_scale * self.epochs * self.num_chunks
+                         / self.quantum)
 
     @property
     def min_duration(self) -> int:
         """Fastest possible completion: N_i workers at all times -> ceil(E_i M_i (tau+2e/b))."""
-        return max(1, math.ceil(self.epochs * self.minibatches_per_chunk
+        return max(1, math.ceil(self.work_scale * self.epochs
+                                * self.minibatches_per_chunk
                                 * (self.tau + 2.0 * self.grad_size / self.worker_bw)))
 
     def workers_for(self, d: int) -> int:

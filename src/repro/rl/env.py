@@ -55,8 +55,12 @@ except ImportError:                          # pragma: no cover - CI has no gym
     _gym = None
     _spaces = None
 
-# observation layout: job/context scalars + two capacity windows
-N_SCALAR_FEATURES = 24
+# observation layout: job/context scalars + two capacity windows.  The
+# last two scalars are the fleet-churn context: live-capacity fraction
+# (1.0 on a healthy fleet) and whether this decision re-admits a
+# preempted job — both 24-feature-era defaults on churn-free traces, so
+# policies trained before churn see identical leading features.
+N_SCALAR_FEATURES = 26
 OBS_DIM = N_SCALAR_FEATURES + 2 * DECISION_WINDOW * R
 # index of the best-achievable-utility feature (utility at min_duration,
 # scaled by 1/100) in the scalar block — the trainer's warm-start expert
@@ -110,6 +114,8 @@ def observe(dp: DecisionPoint, cluster: ClusterSpec) -> np.ndarray:
         dp.n_running / 64.0,
         dp.n_waiting / 64.0,
         dp.accepted / max(seen, 1),
+        dp.live_frac,
+        float(dp.preempted),
     ])
     assert scalars.shape[0] == N_SCALAR_FEATURES
     return np.concatenate([scalars,

@@ -79,12 +79,18 @@ import numpy as np
 from ..core.baselines import BASELINES, Learned, ReactiveScheduler
 from ..core.oasis import OASiS
 from ..core.pricing import PriceParams, price_params_from_jobs
-from ..core.types import ClusterSpec, Job, Schedule
+from ..core.types import ClusterSpec, Job, Schedule, SigmoidUtility
+from .fleet import DOWN_LOSSY, UP, FleetState, FleetTrace
 
 ThroughputFn = Callable[[Job, int, int], float]
 
 # slots of look-ahead in DecisionPoint capacity windows (rl/ observations)
 DECISION_WINDOW = 8
+
+# default checkpoint cadence for fleet churn, in slots: victims of a lossy
+# failure roll back to the last multiple of this on the global clock — the
+# slot-level analogue of runtime/driver.py::run_with_restarts(save_every=20)
+CKPT_INTERVAL = 20
 
 
 @dataclasses.dataclass
@@ -99,6 +105,11 @@ class SimResult:
     decision_seconds: List[float]
     utilization: float                      # mean worker-pool GPU utilization
     canceled: int = 0                       # jobs departed mid-run (sim v2)
+    # fleet churn (sim/fleet.py): preemption events suffered by admitted
+    # jobs, and how many of those victims the shrunken fleet could not
+    # re-admit (OASiS drops them; reactive baselines re-queue, never drop)
+    preempted: int = 0
+    preempt_dropped: int = 0
     arrivals: Dict[int, int] = dataclasses.field(default_factory=dict)
     # streaming runs only: host bytes of the price-state's rolling window
     # (the peak-RSS proxy the serving benchmark records); None episodic,
@@ -120,6 +131,8 @@ class SimResult:
             "accepted": self.accepted,
             "completed": self.completed,
             "canceled": self.canceled,
+            "preempted": self.preempted,
+            "preempt_dropped": self.preempt_dropped,
             "accept_rate": self.accepted / n,
             "completion_rate": self.completed / n,
             "total_utility": float(self.total_utility),
@@ -161,6 +174,13 @@ class DecisionPoint:
     rejected: int
     free_frac_workers: np.ndarray
     free_frac_ps: np.ndarray
+    # fleet churn (sim/fleet.py): fraction of the worker pool's GPU
+    # capacity currently alive, and whether this decision re-admits a
+    # preempted victim (its remaining work already rescaled).  Both keep
+    # their defaults on churn-free runs, so the zero-churn observation
+    # stream is unchanged.
+    live_frac: float = 1.0
+    preempted: bool = False
 
 
 def _as_counts(action) -> Tuple[int, int]:
@@ -214,6 +234,21 @@ def _with_quantum(job: Job, quantum: Optional[int]) -> Job:
     return dataclasses.replace(job, quantum=q)
 
 
+def _shift_utility(u: Callable[[float], float],
+                   shift: int) -> Callable[[float], float]:
+    """Utility of a victim re-admitted ``shift`` slots after its original
+    arrival: the engine evaluates durations from the *re-admission* slot,
+    so the original ``f(d)`` becomes ``f(d + shift)`` — for the paper's
+    sigmoid that is the same curve with the deadline pulled ``shift``
+    slots closer.  Shifting always from the original job's utility (not
+    the previous shifted copy) keeps repeated preemptions exact."""
+    if not shift:
+        return u
+    if isinstance(u, SigmoidUtility):
+        return dataclasses.replace(u, gamma3=u.gamma3 - shift)
+    return lambda d, _u=u, _s=shift: _u(d + _s)
+
+
 def _target_gaps(jmap: Dict[int, Job], completion: Dict[int, int]) -> List[float]:
     gaps = []
     for jid, tdone in completion.items():
@@ -243,20 +278,28 @@ def _group_events(jobs: Sequence[Job], cancellations: Optional[Dict[int, int]],
 
 
 def _check_alloc(cluster: ClusterSpec, jmap: Dict[int, Job],
-                 alloc: Dict[int, tuple]) -> None:
-    """Whole-array capacity feasibility of one allocation snapshot."""
+                 alloc: Dict[int, tuple],
+                 worker_caps: Optional[np.ndarray] = None,
+                 ps_caps: Optional[np.ndarray] = None) -> None:
+    """Whole-array capacity feasibility of one allocation snapshot.
+
+    ``worker_caps``/``ps_caps`` override the cluster's static capacities
+    with the surviving fleet's effective arrays under churn — down
+    servers then have 0-rows, so any placement on them trips the assert."""
     if not alloc:
         return
+    wc = cluster.worker_caps if worker_caps is None else worker_caps
+    pc = cluster.ps_caps if ps_caps is None else ps_caps
     ids = list(alloc)
     ys = np.stack([alloc[j][0] for j in ids]).astype(float)        # (n, H)
     wres = np.stack([jmap[j].worker_res for j in ids])             # (n, R)
-    assert np.all(ys.T @ wres <= cluster.worker_caps + 1e-6), \
+    assert np.all(ys.T @ wres <= wc + 1e-6), \
         "worker capacity violated"
     zs = [(j, alloc[j][1]) for j in ids if alloc[j][1] is not None]
     if zs:
         zmat = np.stack([z for _, z in zs]).astype(float)
         sres = np.stack([jmap[j].ps_res for j, _ in zs])
-        assert np.all(zmat.T @ sres <= cluster.ps_caps + 1e-6), \
+        assert np.all(zmat.T @ sres <= pc + 1e-6), \
             "PS capacity violated"
 
 
@@ -266,20 +309,25 @@ def decisions(cluster: ClusterSpec, jobs: Sequence[Job],
               fixed_workers: int = 8, check: bool = True,
               quantum: Optional[int] = None,
               cancellations: Optional[Dict[int, int]] = None,
-              throughput: Optional[ThroughputFn] = None
+              throughput: Optional[ThroughputFn] = None,
+              fleet: Optional[FleetTrace] = None,
+              ckpt_interval: int = CKPT_INTERVAL
               ) -> Generator[DecisionPoint, object, SimResult]:
     """The engine as a stepwise decision process (the rl/ env's substrate).
 
     Yields a :class:`DecisionPoint` per arrival; the caller ``send``s the
     action — ``(n_workers, n_ps)``, a bare worker count, or ``None``/0 to
     reject — and the final :class:`SimResult` is the generator's return
-    value (``StopIteration.value``).
+    value (``StopIteration.value``).  With a non-empty ``fleet`` trace,
+    victim re-admissions are decision points too (``preempted=True``).
     """
     if scheduler == "oasis":
         return _drive_oasis(cluster, jobs, params, impl, check, quantum,
-                            cancellations, throughput, decide=True)
+                            cancellations, throughput, decide=True,
+                            fleet=fleet, ckpt_interval=ckpt_interval)
     return _drive_reactive(cluster, jobs, scheduler, fixed_workers, check,
-                           quantum, cancellations, throughput, decide=True)
+                           quantum, cancellations, throughput, decide=True,
+                           fleet=fleet, ckpt_interval=ckpt_interval)
 
 
 def _exhaust(gen) -> SimResult:
@@ -296,6 +344,8 @@ def run(cluster: ClusterSpec, jobs: Sequence[Job], scheduler: str = "oasis",
         quantum: Optional[int] = None,
         cancellations: Optional[Dict[int, int]] = None,
         throughput: Optional[ThroughputFn] = None,
+        fleet: Optional[FleetTrace] = None,
+        ckpt_interval: int = CKPT_INTERVAL,
         policy: Optional[Callable[[DecisionPoint], object]] = None
         ) -> SimResult:
     """Drive ``scheduler`` through the trace event-by-event.
@@ -329,15 +379,18 @@ def run(cluster: ClusterSpec, jobs: Sequence[Job], scheduler: str = "oasis",
         if scheduler == "oasis":
             return _exhaust(_drive_oasis(cluster, jobs, params, impl, check,
                                          quantum, cancellations, throughput,
-                                         decide=False))
+                                         decide=False, fleet=fleet,
+                                         ckpt_interval=ckpt_interval))
         return _exhaust(_drive_reactive(cluster, jobs, scheduler,
                                         fixed_workers, check, quantum,
                                         cancellations, throughput,
-                                        decide=False))
+                                        decide=False, fleet=fleet,
+                                        ckpt_interval=ckpt_interval))
     gen = decisions(cluster, jobs, scheduler=scheduler, params=params,
                     impl=impl, fixed_workers=fixed_workers, check=check,
                     quantum=quantum, cancellations=cancellations,
-                    throughput=throughput)
+                    throughput=throughput, fleet=fleet,
+                    ckpt_interval=ckpt_interval)
     policy_seconds: List[float] = []
     try:
         dp = next(gen)
@@ -359,7 +412,8 @@ def run(cluster: ClusterSpec, jobs: Sequence[Job], scheduler: str = "oasis",
 
 def _oasis_decision_point(osched: OASiS, cluster: ClusterSpec, job: Job,
                           t: int, cand: Optional[Schedule],
-                          utility_so_far: float) -> DecisionPoint:
+                          utility_so_far: float, live_frac: float = 1.0,
+                          preempted: bool = False) -> DecisionPoint:
     g_win, v_win = osched.state.alloc_window(t, DECISION_WINDOW)
     fw, fs = _free_window(g_win, v_win, cluster, t)
     n_running = sum(1 for s in osched.accepted.values() if s.finish >= t)
@@ -368,14 +422,17 @@ def _oasis_decision_point(osched: OASiS, cluster: ClusterSpec, job: Job,
         expert=(1, 0) if cand is not None else (0, 0), candidate=cand,
         utility_so_far=utility_so_far, n_running=n_running, n_waiting=0,
         accepted=len(osched.accepted), rejected=len(osched.rejected),
-        free_frac_workers=fw, free_frac_ps=fs)
+        free_frac_workers=fw, free_frac_ps=fs,
+        live_frac=live_frac, preempted=preempted)
 
 
 def _drive_oasis(cluster: ClusterSpec, jobs: Sequence[Job],
                  params: Optional[PriceParams], impl: str, check: bool,
                  quantum: Optional[int],
                  cancellations: Optional[Dict[int, int]],
-                 throughput: Optional[ThroughputFn], decide: bool
+                 throughput: Optional[ThroughputFn], decide: bool,
+                 fleet: Optional[FleetTrace] = None,
+                 ckpt_interval: int = CKPT_INTERVAL
                  ) -> Generator[DecisionPoint, object, SimResult]:
     T = cluster.T
     jmap = {j.jid: j for j in jobs}
@@ -385,17 +442,110 @@ def _drive_oasis(cluster: ClusterSpec, jobs: Sequence[Job],
 
     total_gpu = max(float(cluster.worker_caps[:, 0].sum()), 1e-9)
     canceled: set = set()
+    # fleet churn: every churn branch below is gated on a non-empty trace,
+    # so the empty-trace run is an exact no-op (tests/test_fleet.py pins
+    # bit-identity against the pre-churn engine)
+    churn = fleet is not None and bool(fleet)
+    fs = FleetState(cluster, fleet) if churn else None
+    # current job copy per jid: re-admitted victims are rescaled replicas
+    # (work_scale < 1); identical to jmap on churn-free runs
+    ljobs = dict(jmap) if churn else jmap
+    ck = max(int(ckpt_interval), 1)
+    forced_completion: Dict[int, int] = {}
+    blocked_gpu = 0.0          # filler GPU-slot area on down servers
+    n_preempted = 0
+    n_dropped = 0
 
-    for t in sorted(set(by_slot) | set(cancel_slot)):
+    slots = set(by_slot) | set(cancel_slot)
+    if churn:
+        slots |= set(fs.event_slots)
+    for t in sorted(slots):
+        if churn:
+            trans = fs.step(t)
+            # recoveries first: restored headroom is visible to this
+            # slot's re-admissions and arrivals
+            for pool, srv, kind in trans:
+                if kind == UP:
+                    blocked_gpu -= osched.state.unblock_server(pool, srv, t)
+            victims: Dict[int, str] = {}
+            for pool, srv, kind in trans:
+                if kind == UP:
+                    continue
+                for jid, sched in osched.accepted.items():
+                    if jid in victims or jid in canceled or sched.finish < t:
+                        continue
+                    alloc = sched.workers if pool == "worker" else sched.ps
+                    if any(tt >= t and a[srv] > 0
+                           for tt, a in alloc.items()):
+                        victims[jid] = kind
+            readmit: List[Job] = []
+            for jid, kind in victims.items():
+                sched = osched.accepted.pop(jid)
+                jcur = ljobs[jid]
+                tail_w = {tt: y for tt, y in sched.workers.items()
+                          if tt >= t}
+                tail_z = {tt: z for tt, z in sched.ps.items() if tt >= t}
+                osched.state.release(jcur, tail_w, tail_z)
+                osched.total_utility -= sched.utility
+                n_preempted += 1
+                # checkpoint boundary: lossy failures roll back to the
+                # last global ckpt_interval multiple, graceful drains
+                # checkpoint at drain start (no work lost)
+                cb = (t // ck) * ck if kind == DOWN_LOSSY else t
+                delivered = sum(float(y.sum())
+                                for tt, y in sched.workers.items()
+                                if tt < cb)
+                rem = jcur.total_work_slots - delivered
+                if rem <= 1e-9:
+                    # the checkpoint already covers all work: the job is
+                    # done as of its last delivering slot, no re-admission
+                    done = [tt for tt, y in sched.workers.items()
+                            if tt < cb and y.sum() > 0]
+                    forced_completion[jid] = max(done) if done \
+                        else max(cb - 1, 0)
+                    continue
+                scale = jcur.work_scale * rem / jcur.total_work_slots
+                orig = jmap[jid]
+                readmit.append(dataclasses.replace(
+                    jcur, arrival=t, work_scale=scale,
+                    utility=_shift_utility(orig.utility,
+                                           t - orig.arrival)))
+            # block AFTER the victims' tails are released (their content
+            # is then exactly the fill) and BEFORE re-admission (Alg. 2
+            # must not plan onto the dead servers)
+            for pool, srv, kind in trans:
+                if kind != UP:
+                    blocked_gpu += osched.state.block_server(pool, srv, t)
+            for job_r in readmit:
+                ljobs[job_r.jid] = job_r
+                if decide:
+                    cand = osched.propose(job_r)
+                    action = yield _oasis_decision_point(
+                        osched, cluster, job_r, t, cand,
+                        osched.total_utility, live_frac=fs.live_frac,
+                        preempted=True)
+                    nw, _ = _as_counts(action)
+                    sched = osched._resolve(job_r,
+                                            cand if nw > 0 else None)
+                else:
+                    sched = osched.on_arrival(job_r)
+                if sched is None:
+                    n_dropped += 1
         for jid in cancel_slot.get(t, ()):
             sched = osched.accepted.get(jid)
             if sched is None or sched.finish < t or jid in canceled:
-                continue                        # finished / never admitted
+                # finished / never admitted / already departed — includes
+                # victims the shrunken fleet dropped: their commitment is
+                # gone, so the cancellation must be (and is) a no-op
+                continue
             tail_w = {tt: y for tt, y in sched.workers.items() if tt >= t}
             tail_z = {tt: z for tt, z in sched.ps.items() if tt >= t}
-            osched.state.release(jmap[jid], tail_w, tail_z)
+            osched.state.release(ljobs[jid], tail_w, tail_z)
             canceled.add(jid)
         batch = [_with_quantum(job, quantum) for job in by_slot.get(t, ())]
+        if churn:
+            for job in batch:
+                ljobs[job.jid] = job
         if decide:
             # stepwise: propose at current prices, let the decider gate
             # the commitment.  Sequential per-job decisions are exactly
@@ -405,7 +555,8 @@ def _drive_oasis(cluster: ClusterSpec, jobs: Sequence[Job],
             for job in sorted(batch, key=lambda j: j.arrival):
                 cand = osched.propose(job)
                 action = yield _oasis_decision_point(
-                    osched, cluster, job, t, cand, osched.total_utility)
+                    osched, cluster, job, t, cand, osched.total_utility,
+                    live_frac=fs.live_frac if churn else 1.0)
                 nw, _ = _as_counts(action)
                 osched._resolve(job, cand if nw > 0 else None)
         else:
@@ -425,8 +576,10 @@ def _drive_oasis(cluster: ClusterSpec, jobs: Sequence[Job],
         if throughput is None:
             completion[jid] = sched.finish
             continue
-        # perturbed work accounting over the committed slots
-        job = jmap[jid]
+        # perturbed work accounting over the committed slots (under churn
+        # the live copy carries only the post-checkpoint work, and the
+        # committed schedule is exactly its final segment)
+        job = ljobs[jid]
         slots = sorted(sched.workers)
         w = np.array([float(sched.workers[tt].sum()) for tt in slots])
         f = np.array([throughput(job, int(c), tt)
@@ -435,25 +588,38 @@ def _drive_oasis(cluster: ClusterSpec, jobs: Sequence[Job],
         hit = np.flatnonzero(cum >= job.total_work_slots - 1e-9)
         if hit.size:                            # else: under-delivered
             completion[jid] = slots[int(hit[0])]
+    completion.update(forced_completion)
 
-    if not canceled and throughput is None:
+    if not canceled and throughput is None and not churn:
         total_utility = osched.total_utility    # bit-exact vs v1
     else:
         # evaluate utility at the *actual* completion slot (under
-        # perturbation it can differ from the committed finish), matching
-        # the reactive path's convention
+        # perturbation it can differ from the committed finish; under
+        # churn from the re-admission-shifted curve), always against the
+        # ORIGINAL job's utility and arrival — matching the reactive
+        # path's convention
         total_utility = sum(jmap[jid].utility(tdone - jmap[jid].arrival)
                             for jid, tdone in completion.items())
     # per-slot GPU usage straight off the allocation tensor (commits add,
     # cancellation releases subtract), replacing the per-schedule dict walk
     gpu_slots = osched.state.gpu_slot_usage()
+    if churn and T:
+        # subtract the capacity-block filler on down servers — it is in
+        # the allocation tensor (that is what starves Alg. 2 of headroom)
+        # but is not real usage
+        utilization = float((gpu_slots.sum() - blocked_gpu)
+                            / (total_gpu * T))
+    else:
+        utilization = float(np.mean(gpu_slots / total_gpu)) if T else 0.0
     return SimResult(name="oasis", total_utility=total_utility,
-                     accepted=len(osched.accepted), completed=len(completion),
+                     accepted=len(osched.accepted) + len(forced_completion),
+                     completed=len(completion),
                      n_jobs=len(jobs), completion=completion,
                      target_gap=_target_gaps(jmap, completion),
                      decision_seconds=osched.decision_seconds,
-                     utilization=float(np.mean(gpu_slots / total_gpu)) if T else 0.0,
+                     utilization=utilization,
                      canceled=len(canceled),
+                     preempted=n_preempted, preempt_dropped=n_dropped,
                      arrivals={j.jid: j.arrival for j in jobs
                                if j.arrival < T})
 
@@ -485,7 +651,8 @@ def _reactive_decision_point(rsched: ReactiveScheduler, cluster: ClusterSpec,
                              n_admitted: int,
                              n_rejected: int, n_live: int,
                              utility_so_far: float,
-                             t_max: Optional[int] = ...) -> DecisionPoint:
+                             t_max: Optional[int] = ...,
+                             live_frac: float = 1.0) -> DecisionPoint:
     fw, fs = _free_window(*usage, cluster, t, t_max=t_max)
     admit = rsched.would_admit(job, t)
     nw, nps = rsched._counts(job)
@@ -495,13 +662,15 @@ def _reactive_decision_point(rsched: ReactiveScheduler, cluster: ClusterSpec,
         utility_so_far=utility_so_far,
         n_running=len(cur_alloc), n_waiting=n_live - len(cur_alloc),
         accepted=n_admitted, rejected=n_rejected,
-        free_frac_workers=fw, free_frac_ps=fs)
+        free_frac_workers=fw, free_frac_ps=fs, live_frac=live_frac)
 
 
 def _drive_reactive(cluster: ClusterSpec, jobs: Sequence[Job], scheduler: str,
                     fixed_workers: int, check: bool, quantum: Optional[int],
                     cancellations: Optional[Dict[int, int]],
-                    throughput: Optional[ThroughputFn], decide: bool
+                    throughput: Optional[ThroughputFn], decide: bool,
+                    fleet: Optional[FleetTrace] = None,
+                    ckpt_interval: int = CKPT_INTERVAL
                     ) -> Generator[DecisionPoint, object, SimResult]:
     T = cluster.T
     src = {j.jid: _with_quantum(j, quantum) for j in jobs}
@@ -517,6 +686,15 @@ def _drive_reactive(cluster: ClusterSpec, jobs: Sequence[Job], scheduler: str,
     canceled: set = set()
     total_utility = 0.0
     util_sum = 0.0
+    # fleet churn (all branches gated on a non-empty trace — the empty
+    # trace is an exact no-op).  ``ckpt_rem`` is each admitted job's
+    # remaining work at its last checkpoint: lossy failures roll
+    # ``remaining`` back to it, graceful drains refresh it first.
+    churn = fleet is not None and bool(fleet)
+    fs = FleetState(cluster, fleet) if churn else None
+    ckpt_rem: Dict[int, float] = {}
+    ck = max(int(ckpt_interval), 1)
+    n_preempted = 0
 
     # ``dirty`` gating: the scheduler tells us whether the last event can
     # change its next repack (arrivals and repack-relevant completions
@@ -536,13 +714,43 @@ def _drive_reactive(cluster: ClusterSpec, jobs: Sequence[Job], scheduler: str,
                   and getattr(throughput, "stateless", False)
                   and callable(getattr(throughput, "rate_matrix", None)))
 
-    events = sorted(set(by_slot) | set(cancel_slot))
+    event_set = set(by_slot) | set(cancel_slot)
+    if churn:
+        event_set |= set(fs.event_slots)
+    events = sorted(event_set)
     ei = 0
     n_rejected = 0
     t = events[0] if events else T
     while t < T:
         while ei < len(events) and events[ei] <= t:
             ei += 1
+        if churn:
+            trans = fs.step(t)
+            if trans:
+                for pool, srv, kind in trans:
+                    if kind == UP:
+                        continue
+                    if pool == "worker":
+                        vs = [jid for jid, (y, _) in cur_alloc.items()
+                              if y[srv] > 0]
+                    else:
+                        vs = [jid for jid, (_, z) in cur_alloc.items()
+                              if z is not None and z[srv] > 0]
+                    for jid in vs:
+                        if kind == DOWN_LOSSY:
+                            # crash: work since the last checkpoint lost
+                            remaining[jid] = ckpt_rem.get(
+                                jid, jmap[jid].total_work_slots)
+                        else:
+                            # drain: checkpoint taken at drain start
+                            ckpt_rem[jid] = remaining[jid]
+                        rsched.preempt(jid, t)
+                        cur_alloc.pop(jid, None)
+                        n_preempted += 1
+                # repack over the survivors: victims stay enrolled, so
+                # the scheduler's own queue/resume order re-places them
+                rsched.set_capacity(fs.worker_caps, fs.ps_caps)
+                stale = True
         arrivals_now = by_slot.pop(t, ())
         if decide and arrivals_now:
             # one usage snapshot for the whole arrival burst: admissions
@@ -553,7 +761,8 @@ def _drive_reactive(cluster: ClusterSpec, jobs: Sequence[Job], scheduler: str,
             if decide:
                 action = yield _reactive_decision_point(
                     rsched, cluster, job, t, scheduler, cur_alloc, usage,
-                    len(admitted), n_rejected, len(remaining), total_utility)
+                    len(admitted), n_rejected, len(remaining), total_utility,
+                    live_frac=fs.live_frac if churn else 1.0)
                 nw, nps = _as_counts(action)
                 if nw <= 0:
                     n_rejected += 1
@@ -579,13 +788,19 @@ def _drive_reactive(cluster: ClusterSpec, jobs: Sequence[Job], scheduler: str,
                 del remaining[jid]
                 canceled.add(jid)
                 cur_alloc.pop(jid, None)
+                if churn:
+                    ckpt_rem.pop(jid, None)
                 stale = True
         if rsched.dirty:
             cur_alloc = dict(rsched.step(t))
             rsched.dirty = False
             stale = True
             if check:       # a pruned reuse stays feasible by construction
-                _check_alloc(cluster, jmap, cur_alloc)
+                if churn:   # ...against the surviving fleet's capacity
+                    _check_alloc(cluster, jmap, cur_alloc,
+                                 fs.worker_caps, fs.ps_caps)
+                else:
+                    _check_alloc(cluster, jmap, cur_alloc)
         if stale:
             ids = list(cur_alloc)
             counts = np.array([float(cur_alloc[j][0].sum()) for j in ids])
@@ -635,6 +850,16 @@ def _drive_reactive(cluster: ClusterSpec, jobs: Sequence[Job], scheduler: str,
 
         util_sum += (plan_gpu / total_gpu) * span
         t_end = t + span - 1                    # last slot run with this plan
+        if churn and ids:
+            # record the checkpoint crossed inside this span (if any):
+            # work is consumed uniformly over the span under the exact
+            # rate model, so the boundary's share is (cb - t) / span
+            cb = ((t + span) // ck) * ck
+            if cb > t:
+                frac = (cb - t) / span
+                for j, used in zip(ids, consumed):
+                    ckpt_rem[j] = max(remaining[j] - float(used) * frac,
+                                      0.0)
         done_now = []
         for j, used in zip(ids, consumed):
             remaining[j] -= used
@@ -646,6 +871,8 @@ def _drive_reactive(cluster: ClusterSpec, jobs: Sequence[Job], scheduler: str,
             rsched.on_completion(jid, t_end)
             del remaining[jid]
             cur_alloc.pop(jid, None)
+            if churn:
+                ckpt_rem.pop(jid, None)
             stale = True
         t += span
     return SimResult(name=scheduler, total_utility=total_utility,
@@ -654,7 +881,7 @@ def _drive_reactive(cluster: ClusterSpec, jobs: Sequence[Job], scheduler: str,
                      target_gap=_target_gaps(jmap, completion),
                      decision_seconds=[],
                      utilization=util_sum / T if T else 0.0,
-                     canceled=len(canceled),
+                     canceled=len(canceled), preempted=n_preempted,
                      arrivals={j.jid: j.arrival for j in src.values()
                                if j.arrival < T})
 
@@ -686,7 +913,9 @@ def stream_decisions(cluster: ClusterSpec, jobs: Iterable[Job],
                      impl: str = "fast", window: int = 64,
                      fixed_workers: int = 8, check: bool = False,
                      quantum: Optional[int] = None,
-                     warmup_sample: int = 256
+                     warmup_sample: int = 256,
+                     fleet: Optional[FleetTrace] = None,
+                     ckpt_interval: int = CKPT_INTERVAL
                      ) -> Generator[DecisionPoint, object, SimResult]:
     """Streaming analogue of :func:`decisions`.
 
@@ -709,9 +938,11 @@ def stream_decisions(cluster: ClusterSpec, jobs: Iterable[Job],
             params = stream_price_params(sample, cluster, window)
             jobs = itertools.chain(sample, it)
         return _drive_oasis_stream(cluster, jobs, params, impl, window,
-                                   check, quantum, decide=True)
+                                   check, quantum, decide=True, fleet=fleet,
+                                   ckpt_interval=ckpt_interval)
     return _drive_reactive_stream(cluster, jobs, scheduler, fixed_workers,
-                                  check, quantum, decide=True)
+                                  check, quantum, decide=True, fleet=fleet,
+                                  ckpt_interval=ckpt_interval)
 
 
 def run_stream(cluster: ClusterSpec, jobs: Iterable[Job],
@@ -719,6 +950,8 @@ def run_stream(cluster: ClusterSpec, jobs: Iterable[Job],
                params: Optional[PriceParams] = None, impl: str = "fast",
                window: int = 64, fixed_workers: int = 8, check: bool = False,
                quantum: Optional[int] = None, warmup_sample: int = 256,
+               fleet: Optional[FleetTrace] = None,
+               ckpt_interval: int = CKPT_INTERVAL,
                policy: Optional[Callable[[DecisionPoint], object]] = None
                ) -> SimResult:
     """Drive ``scheduler`` over an open-ended arrival stream.
@@ -758,14 +991,17 @@ def run_stream(cluster: ClusterSpec, jobs: Iterable[Job],
                 jobs = itertools.chain(sample, it)
             return _exhaust(_drive_oasis_stream(cluster, jobs, params, impl,
                                                 window, check, quantum,
-                                                decide=False))
+                                                decide=False, fleet=fleet,
+                                                ckpt_interval=ckpt_interval))
         return _exhaust(_drive_reactive_stream(cluster, jobs, scheduler,
                                                fixed_workers, check, quantum,
-                                               decide=False))
+                                               decide=False, fleet=fleet,
+                                               ckpt_interval=ckpt_interval))
     gen = stream_decisions(cluster, jobs, scheduler=scheduler, params=params,
                            impl=impl, window=window,
                            fixed_workers=fixed_workers, check=check,
-                           quantum=quantum, warmup_sample=warmup_sample)
+                           quantum=quantum, warmup_sample=warmup_sample,
+                           fleet=fleet, ckpt_interval=ckpt_interval)
     policy_seconds: List[float] = []
     try:
         dp = next(gen)
@@ -783,7 +1019,9 @@ def run_stream(cluster: ClusterSpec, jobs: Iterable[Job],
 
 def _drive_oasis_stream(cluster: ClusterSpec, jobs: Iterable[Job],
                         params: PriceParams, impl: str, window: int,
-                        check: bool, quantum: Optional[int], decide: bool
+                        check: bool, quantum: Optional[int], decide: bool,
+                        fleet: Optional[FleetTrace] = None,
+                        ckpt_interval: int = CKPT_INTERVAL
                         ) -> Generator[DecisionPoint, object, SimResult]:
     osched = OASiS(cluster, params, impl=impl, window=window)
     state = osched.state
@@ -799,18 +1037,133 @@ def _drive_oasis_stream(cluster: ClusterSpec, jobs: Iterable[Job],
     n_rejected = 0
     n_jobs = 0
     t = 0
+    # fleet churn: trace slots are absolute; re-blocks after every
+    # advance keep down servers at zero headroom across window slides
+    churn = fleet is not None and bool(fleet)
+    fs = FleetState(cluster, fleet) if churn else None
+    fe: List[int] = fs.event_slots if churn else []
+    fi = 0
+    ljobs: Dict[int, Job] = {}          # live (quantized/rescaled) copies
+    admit_origin: Dict[int, int] = {}   # absolute slot of live commitment
+    ck = max(int(ckpt_interval), 1)
+    blocked_gpu = 0.0
+    n_preempted = 0
+    n_dropped = 0
     it = iter(jobs)
     nxt = next(it, None)
-    while nxt is not None:
-        t = int(nxt.arrival)
+    while True:
+        ta = int(nxt.arrival) if nxt is not None else None
+        tf = fe[fi] if fi < len(fe) else None
+        if ta is None and (tf is None or not active):
+            break                       # fleet events can't touch anything
+        t = ta if (tf is None or (ta is not None and ta <= tf)) else tf
         batch: List[Job] = []
-        while nxt is not None and int(nxt.arrival) == t:
-            batch.append(nxt)
-            nxt = next(it, None)
+        if ta is not None and ta == t:
+            while nxt is not None and int(nxt.arrival) == t:
+                batch.append(nxt)
+                nxt = next(it, None)
         state.advance(t)
         for jid in [j for j, fin in active.items() if fin < t]:
             del active[jid]
             osched.accepted.pop(jid, None)
+            admit_origin.pop(jid, None)
+            ljobs.pop(jid, None)
+        if churn:
+            # slots freshly opened by the slide start at zero — refill
+            # every currently-down server to caps (idempotent elsewhere)
+            for pool, srv in fs.down_servers():
+                blocked_gpu += state.block_server(pool, srv, 0)
+        if churn and tf is not None and tf == t:
+            fi += 1
+            trans = fs.step(t)
+            for pool, srv, kind in trans:
+                if kind == UP:
+                    blocked_gpu -= state.unblock_server(pool, srv, 0)
+            victims: Dict[int, str] = {}
+            for pool, srv, kind in trans:
+                if kind == UP:
+                    continue
+                for jid in active:
+                    if jid in victims:
+                        continue
+                    sched = osched.accepted.get(jid)
+                    if sched is None:
+                        continue
+                    shift = t - admit_origin[jid]
+                    alloc = sched.workers if pool == "worker" else sched.ps
+                    if any(s >= shift and a[srv] > 0
+                           for s, a in alloc.items()):
+                        victims[jid] = kind
+            readmit: List[Tuple[int, Job]] = []
+            for jid, kind in victims.items():
+                sched = osched.accepted.pop(jid)
+                ao = admit_origin[jid]
+                shift = t - ao
+                jcur = ljobs[jid]
+                # the commitment's slots are local to its admission; the
+                # window has since slid by ``shift``
+                tail_w = {s - shift: y for s, y in sched.workers.items()
+                          if s >= shift}
+                tail_z = {s - shift: z for s, z in sched.ps.items()
+                          if s >= shift}
+                state.release(jcur, tail_w, tail_z)
+                osched.total_utility -= sched.utility
+                n_preempted += 1
+                del active[jid]
+                cb = (t // ck) * ck if kind == DOWN_LOSSY else t
+                delivered = sum(float(y.sum())
+                                for s, y in sched.workers.items()
+                                if s + ao < cb)
+                rem = jcur.total_work_slots - delivered
+                if rem <= 1e-9:
+                    done = [s + ao for s, y in sched.workers.items()
+                            if s + ao < cb and y.sum() > 0]
+                    completion[jid] = max(done) if done else max(cb - 1, 0)
+                    admit_origin.pop(jid, None)
+                    ljobs.pop(jid, None)
+                    continue
+                scale = jcur.work_scale * rem / jcur.total_work_slots
+                orig = jmap[jid]
+                readmit.append((jid, dataclasses.replace(
+                    jcur, arrival=0, work_scale=scale,
+                    utility=_shift_utility(orig.utility,
+                                           t - int(orig.arrival)))))
+            for pool, srv, kind in trans:
+                if kind != UP:
+                    blocked_gpu += state.block_server(pool, srv, 0)
+            for jid, loc in readmit:
+                ljobs[jid] = loc
+                if decide:
+                    cand = osched.propose(loc)
+                    g_win, v_win = state.alloc_window(0, DECISION_WINDOW)
+                    fw, fsw = _free_window(g_win, v_win, cluster, t,
+                                           t_max=None)
+                    action = yield DecisionPoint(
+                        job=jmap[jid], t=t, scheduler="oasis",
+                        expert=(1, 0) if cand is not None else (0, 0),
+                        candidate=cand,
+                        utility_so_far=osched.total_utility,
+                        n_running=len(active), n_waiting=0,
+                        accepted=n_accepted, rejected=n_rejected,
+                        free_frac_workers=fw, free_frac_ps=fsw,
+                        live_frac=fs.live_frac, preempted=True)
+                    nw, _ = _as_counts(action)
+                    sched = osched._resolve(loc, cand if nw > 0 else None)
+                else:
+                    sched = osched.on_arrival(loc)
+                if sched is not None:
+                    active[jid] = t + sched.finish
+                    completion[jid] = t + sched.finish
+                    admit_origin[jid] = t
+                else:
+                    # the shrunken fleet can't fit it: the job departs
+                    # with no utility (subtracted above)
+                    n_dropped += 1
+                    n_accepted -= 1
+                    n_rejected += 1
+                    completion.pop(jid, None)
+                    admit_origin.pop(jid, None)
+                    ljobs.pop(jid, None)
         # window-local coordinates: the job arrives at local slot 0 (its
         # durations — hence utility — are translation-invariant)
         local = [dataclasses.replace(_with_quantum(j, quantum), arrival=0)
@@ -823,28 +1176,36 @@ def _drive_oasis_stream(cluster: ClusterSpec, jobs: Iterable[Job],
             for job, loc in zip(batch, local):
                 cand = osched.propose(loc)
                 g_win, v_win = state.alloc_window(0, DECISION_WINDOW)
-                fw, fs = _free_window(g_win, v_win, cluster, t, t_max=None)
+                fw, fsw = _free_window(g_win, v_win, cluster, t, t_max=None)
                 action = yield DecisionPoint(
                     job=job, t=t, scheduler="oasis",
                     expert=(1, 0) if cand is not None else (0, 0),
                     candidate=cand, utility_so_far=osched.total_utility,
                     n_running=len(active), n_waiting=0,
                     accepted=n_accepted, rejected=n_rejected,
-                    free_frac_workers=fw, free_frac_ps=fs)
+                    free_frac_workers=fw, free_frac_ps=fsw,
+                    live_frac=fs.live_frac if churn else 1.0)
                 nw, _ = _as_counts(action)
                 sched = osched._resolve(loc, cand if nw > 0 else None)
                 if sched is not None:
                     n_accepted += 1
                     active[job.jid] = t + sched.finish
                     completion[job.jid] = t + sched.finish
+                    if churn:
+                        ljobs[job.jid] = loc
+                        admit_origin[job.jid] = t
                 else:
                     n_rejected += 1
         else:
-            for job, sched in zip(batch, osched.on_arrivals(local)):
+            for job, loc, sched in zip(batch, local,
+                                       osched.on_arrivals(local)):
                 if sched is not None:
                     n_accepted += 1
                     active[job.jid] = t + sched.finish
                     completion[job.jid] = t + sched.finish
+                    if churn:
+                        ljobs[job.jid] = loc
+                        admit_origin[job.jid] = t
                 else:
                     n_rejected += 1
         if check:
@@ -856,18 +1217,23 @@ def _drive_oasis_stream(cluster: ClusterSpec, jobs: Iterable[Job],
     t_end = max(max(completion.values(), default=0) + 1, t + 1, 1)
     total_gpu = max(float(cluster.worker_caps[:, 0].sum()), 1e-9)
     gpu_slots = state.retired_gpu_slots + float(state.gpu_slot_usage().sum())
+    if churn:
+        gpu_slots -= blocked_gpu        # capacity-block filler, not usage
     return SimResult(name="oasis", total_utility=osched.total_utility,
                      accepted=n_accepted, completed=len(completion),
                      n_jobs=n_jobs, completion=completion,
                      target_gap=_target_gaps(jmap, completion),
                      decision_seconds=osched.decision_seconds,
                      utilization=gpu_slots / (total_gpu * t_end),
+                     preempted=n_preempted, preempt_dropped=n_dropped,
                      arrivals=arrivals, window_bytes=state.window_bytes)
 
 
 def _drive_reactive_stream(cluster: ClusterSpec, jobs: Iterable[Job],
                            scheduler: str, fixed_workers: int, check: bool,
-                           quantum: Optional[int], decide: bool
+                           quantum: Optional[int], decide: bool,
+                           fleet: Optional[FleetTrace] = None,
+                           ckpt_interval: int = CKPT_INTERVAL
                            ) -> Generator[DecisionPoint, object, SimResult]:
     rsched: ReactiveScheduler = BASELINES[scheduler](
         cluster, fixed_workers=fixed_workers)
@@ -886,11 +1252,45 @@ def _drive_reactive_stream(cluster: ClusterSpec, jobs: Iterable[Job],
     stale = True
     n_rejected = 0
     n_jobs = 0
+    # fleet churn (same machinery as the episodic reactive driver)
+    churn = fleet is not None and bool(fleet)
+    fs = FleetState(cluster, fleet) if churn else None
+    fe: List[int] = fs.event_slots if churn else []
+    fi = 0
+    ckpt_rem: Dict[int, float] = {}
+    ck = max(int(ckpt_interval), 1)
+    n_preempted = 0
 
     it = iter(jobs)
     nxt = next(it, None)
     t = int(nxt.arrival) if nxt is not None else 0
     while nxt is not None or remaining:
+        if churn:
+            changed = False
+            while fi < len(fe) and fe[fi] <= t:
+                for pool, srv, kind in fs.step(fe[fi]):
+                    if kind == UP:
+                        continue
+                    if pool == "worker":
+                        vs = [jid for jid, (y, _) in cur_alloc.items()
+                              if y[srv] > 0]
+                    else:
+                        vs = [jid for jid, (_, z) in cur_alloc.items()
+                              if z is not None and z[srv] > 0]
+                    for jid in vs:
+                        if kind == DOWN_LOSSY:
+                            remaining[jid] = ckpt_rem.get(
+                                jid, jmap[jid].total_work_slots)
+                        else:
+                            ckpt_rem[jid] = remaining[jid]
+                        rsched.preempt(jid, t)
+                        cur_alloc.pop(jid, None)
+                        n_preempted += 1
+                changed = True
+                fi += 1
+            if changed:
+                rsched.set_capacity(fs.worker_caps, fs.ps_caps)
+                stale = True
         burst: List[Job] = []
         while nxt is not None and int(nxt.arrival) <= t:
             burst.append(_with_quantum(nxt, quantum))
@@ -905,7 +1305,8 @@ def _drive_reactive_stream(cluster: ClusterSpec, jobs: Iterable[Job],
                 action = yield _reactive_decision_point(
                     rsched, cluster, job, t, scheduler, cur_alloc, usage,
                     len(admitted), n_rejected, len(remaining), total_utility,
-                    t_max=None)
+                    t_max=None,
+                    live_frac=fs.live_frac if churn else 1.0)
                 nw, nps = _as_counts(action)
                 if nw <= 0:
                     n_rejected += 1
@@ -927,7 +1328,11 @@ def _drive_reactive_stream(cluster: ClusterSpec, jobs: Iterable[Job],
             rsched.dirty = False
             stale = True
             if check:
-                _check_alloc(cluster, jmap, cur_alloc)
+                if churn:
+                    _check_alloc(cluster, jmap, cur_alloc,
+                                 fs.worker_caps, fs.ps_caps)
+                else:
+                    _check_alloc(cluster, jmap, cur_alloc)
         if stale:
             ids = list(cur_alloc)
             counts = np.array([float(cur_alloc[j][0].sum()) for j in ids])
@@ -943,6 +1348,10 @@ def _drive_reactive_stream(cluster: ClusterSpec, jobs: Iterable[Job],
                 np.ceil((rem[active] - 1e-9) / counts[active]), 1.0)
         earliest = float(slots_left.min()) if ids else math.inf
         horizon = (int(nxt.arrival) - t) if nxt is not None else math.inf
+        if churn and fi < len(fe):
+            # the next fleet event bounds the plan's validity (and can
+            # un-starve a waiting queue by restoring capacity)
+            horizon = min(horizon, fe[fi] - t)
         if not math.isfinite(earliest) and not math.isfinite(horizon):
             # no future arrivals and no live job is progressing: the plan
             # can never change again — the waiting jobs are starved for
@@ -952,6 +1361,13 @@ def _drive_reactive_stream(cluster: ClusterSpec, jobs: Iterable[Job],
         consumed = counts * span
         util_sum += (plan_gpu / total_gpu) * span
         t_end = t + span - 1
+        if churn and ids:
+            cb = ((t + span) // ck) * ck
+            if cb > t:
+                frac = (cb - t) / span
+                for j, used in zip(ids, consumed):
+                    ckpt_rem[j] = max(remaining[j] - float(used) * frac,
+                                      0.0)
         done_now = []
         for j, used in zip(ids, consumed):
             remaining[j] -= used
@@ -963,6 +1379,8 @@ def _drive_reactive_stream(cluster: ClusterSpec, jobs: Iterable[Job],
             rsched.on_completion(jid, t_end)
             del remaining[jid]
             cur_alloc.pop(jid, None)
+            if churn:
+                ckpt_rem.pop(jid, None)
             stale = True
         t += span
     return SimResult(name=scheduler, total_utility=total_utility,
@@ -971,4 +1389,5 @@ def _drive_reactive_stream(cluster: ClusterSpec, jobs: Iterable[Job],
                      target_gap=_target_gaps(jmap, completion),
                      decision_seconds=[],
                      utilization=util_sum / max(t, 1),
+                     preempted=n_preempted,
                      arrivals=arrivals, window_bytes=0)

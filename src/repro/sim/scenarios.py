@@ -23,6 +23,11 @@ and is runnable from ``python -m benchmarks.run --only scenarios`` or
   fleet, driven through ``engine.run_stream`` with a rolling price-state
   window; records sustained decisions/sec and the window-bytes memory
   proxy per scheduler.
+* ``churn``     — fleet churn: a seeded fraction of each server pool
+  fails mid-run (``fleet.churn_trace``); running jobs are preempted with
+  checkpoint/restart cost and re-admitted through each scheduler's own
+  path.  Reports utility **retention** (churned / churn-free utility,
+  higher is better) per scheduler at each churn level.
 """
 from __future__ import annotations
 
@@ -36,6 +41,7 @@ from ..core.pricing import price_params_from_jobs
 from ..core.types import ClusterSpec, Job
 from ..runtime.straggler import StragglerConfig, StragglerMonitor
 from . import engine
+from .fleet import churn_trace
 from .workload import _P2_LIKE, make_cluster, make_jobs, stream_jobs
 
 REACTIVE = ("fifo", "drf", "rrh", "dorm")
@@ -181,6 +187,12 @@ class ScenarioResult:
     decisions_per_sec: Optional[float] = None
     window_bytes: Optional[int] = None
     n_jobs: Optional[int] = None
+    # churn-scenario extras: utility retention vs. the same scheduler's
+    # churn-free run (higher is better; 1.0 = unhurt) and the preemption
+    # counters from the fleet-churn engine
+    retention: Optional[float] = None
+    preempted: Optional[int] = None
+    preempt_dropped: Optional[int] = None
 
 
 def _row(scenario: str, variant: str, r: engine.SimResult,
@@ -379,6 +391,66 @@ def run_serving(seed: int = 0, quick: bool = False,
     return rows
 
 
+# the tracked fleet-churn instance (and its --quick shrink).  Full-size
+# jobs (small=False) so the fleet actually sustains load — with toy jobs
+# everything completes within a slot or two of arrival and failures never
+# hit a running allocation.  "levels" are the per-pool failure fractions
+# of ``fleet.churn_trace``.
+CHURN_DIMS = {"T": 100, "H": 40, "K": 40, "n": 120, "levels": (0.05, 0.20)}
+CHURN_DIMS_QUICK = {"T": 60, "H": 10, "K": 10, "n": 60,
+                    "levels": (0.05, 0.20)}
+
+
+def run_churn(seed: int = 0, quick: bool = False,
+              schedulers: Sequence[str] = ALL_SCHEDULERS,
+              levels: Optional[Sequence[float]] = None) -> List[ScenarioResult]:
+    """Utility retention under k% fleet churn, per scheduler.
+
+    Every scheduler faces the *same* seeded failure trace at each level
+    (``fleet.churn_trace``: ``round(frac * pool)`` servers of each pool
+    fail once mid-run, then recover).  The ``"none"`` rows are the
+    churn-free anchors; the ``frac=...`` rows carry ``retention`` =
+    churned / churn-free utility (higher is better) plus the engine's
+    preemption counters.  The engine runs with ``check=True`` under
+    churn, so a capacity violation on the surviving fleet fails loudly.
+    """
+    dims = CHURN_DIMS_QUICK if quick else CHURN_DIMS
+    T, H, K, n = dims["T"], dims["H"], dims["K"], dims["n"]
+    lv = tuple(levels if levels is not None else dims["levels"])
+    cluster = make_cluster(T=T, H=H, K=K)
+    jobs = make_jobs(n, T=T, seed=seed, small=quick)
+    jmap = {j.jid: j for j in jobs}
+    traces = {f: churn_trace(cluster, frac=f, seed=seed + 1) for f in lv}
+
+    def _realized(r: engine.SimResult) -> float:
+        # utility evaluated at the *actual* completion slot against the
+        # original job — the accounting the churn engine path uses.  The
+        # reactive drivers already accrue utility this way; for OASiS the
+        # churn-free SimResult carries the committed (planned-finish)
+        # total instead, which auto-quantum over-provisioning can beat,
+        # so retention must re-anchor on the realized value.
+        return sum(jmap[jid].utility(t - jmap[jid].arrival)
+                   for jid, t in r.completion.items())
+
+    rows = []
+    for s in schedulers:
+        q = 0 if s == "oasis" else None
+        t0 = time.perf_counter()
+        rb = engine.run(cluster, jobs, scheduler=s, check=False, quantum=q)
+        rows.append(_row("churn", "none", rb, time.perf_counter() - t0))
+        anchor = _realized(rb)
+        for f in lv:
+            t0 = time.perf_counter()
+            r = engine.run(cluster, jobs, scheduler=s, quantum=q,
+                           check=True, fleet=traces[f])
+            row = _row("churn", f"frac={f}", r, time.perf_counter() - t0)
+            ret = r.total_utility / anchor if anchor > 0 else 1.0
+            rows.append(dataclasses.replace(
+                row, retention=ret, preempted=r.preempted,
+                preempt_dropped=r.preempt_dropped))
+    return rows
+
+
 SCENARIOS = {
     "hetero": run_hetero,
     "cancel": run_cancel,
@@ -386,6 +458,7 @@ SCENARIOS = {
     "misest": run_misest,
     "scale": run_scale,
     "serving": run_serving,
+    "churn": run_churn,
 }
 
 

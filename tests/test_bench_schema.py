@@ -1,7 +1,7 @@
-"""benchmarks/run.py bench_decision schema validation (v3; v2 baselines
-read compatibly): a malformed section must abort the write instead of
-poisoning the committed baseline (it used to surface only later, via
-check_regression)."""
+"""benchmarks/run.py bench_decision schema validation (v4; v2/v3
+baselines read compatibly): a malformed section must abort the write
+instead of poisoning the committed baseline (it used to surface only
+later, via check_regression)."""
 import json
 
 import pytest
@@ -11,7 +11,7 @@ from benchmarks.run import _merge_json, validate_tracked
 
 def _payload():
     return {
-        "schema": "bench_decision/v3",
+        "schema": "bench_decision/v4",
         "platform": "test", "python": "3",
         "decision_seconds": {
             "jax": {"p50": 0.01, "p95": 0.02, "mean": 0.012},
@@ -36,6 +36,16 @@ def _payload():
                     "window_bytes": {"fifo": 0, "oasis": 256000},
                     "decision": {"oasis": {"p50": 0.02, "mean": 0.03,
                                            "p95": None}}},
+        "churn": {"T": 100, "H": 40, "K": 40, "n_jobs": 120,
+                  "quick": False, "levels": [0.05, 0.2],
+                  "wall_seconds": {"fifo": 0.02, "oasis": 20.0},
+                  "utility": {"fifo": {"none": 100.0, "frac=0.05": 100.0,
+                                       "frac=0.2": 90.0}},
+                  "retention": {"fifo": {"frac=0.05": 1.0,
+                                         "frac=0.2": 0.9}},
+                  "preempted": {"fifo": {"frac=0.05": 4, "frac=0.2": 35}},
+                  "preempt_dropped": {"fifo": {"frac=0.05": 0,
+                                               "frac=0.2": 0}}},
         "rl": {"quick": False, "train_seconds": 250.0,
                "train_iterations": 160, "eval_seeds": [5, 6, 7],
                "instance": {"T": 100, "H": 50, "K": 50, "n_jobs": 200},
@@ -50,11 +60,21 @@ def test_valid_payload_passes():
 
 
 def test_v2_schema_still_accepted():
-    """Committed v2 baselines (without the serving sections) must keep
-    validating — the v3 bump is read-compatible."""
+    """Committed v2 baselines (without the serving/churn sections) must
+    keep validating — the v3/v4 bumps are read-compatible."""
     p = _payload()
     p["schema"] = "bench_decision/v2"
     del p["serving"]
+    del p["churn"]
+    assert validate_tracked(p) == []
+
+
+def test_v3_schema_still_accepted():
+    """Committed v3 baselines (without the churn sections) must keep
+    validating — the v4 bump is read-compatible."""
+    p = _payload()
+    p["schema"] = "bench_decision/v3"
+    del p["churn"]
     assert validate_tracked(p) == []
 
 
@@ -107,14 +127,38 @@ def test_serving_section_checked():
     assert validate_tracked(p) == []
 
 
+def test_churn_section_checked():
+    p = _payload()
+    p["churn"]["T"] = "100"
+    assert any("churn.T" in x for x in validate_tracked(p))
+    p = _payload()
+    p["churn"]["levels"] = []
+    assert any("churn.levels" in x for x in validate_tracked(p))
+    p = _payload()
+    p["churn"]["levels"] = [0.05, "lots"]
+    assert any("churn.levels" in x for x in validate_tracked(p))
+    p = _payload()
+    p["churn"]["retention"]["fifo"]["frac=0.2"] = float("nan")
+    assert any("churn.retention.fifo" in x for x in validate_tracked(p))
+    p = _payload()
+    p["churn"]["retention"] = [0.9]
+    assert any("churn.retention" in x for x in validate_tracked(p))
+    p = _payload()
+    p["churn"]["preempted"]["fifo"] = 35            # not nested per-variant
+    assert any("churn.preempted.fifo" in x for x in validate_tracked(p))
+    p = _payload()
+    p["churn_quick"] = {**p.pop("churn"), "quick": True}
+    assert validate_tracked(p) == []
+
+
 def test_corrupted_non_dict_sections_report_instead_of_raising():
     """The baseline file on disk can be arbitrarily corrupted (that is
     the validator's whole job) — a non-dict section must come back as a
     problem, never as an AttributeError."""
     for bad in ("corrupted", [1], 3):
         for sec in ("decision_seconds", "sim_v2", "sim_scale", "serving",
-                    "rl"):
-            p = {"schema": "bench_decision/v3", sec: bad}
+                    "churn", "rl"):
+            p = {"schema": "bench_decision/v4", sec: bad}
             assert any(sec in x for x in validate_tracked(p))
     p = _payload()
     p["rl"]["per_seed"] = [1]
@@ -152,18 +196,23 @@ def test_merge_json_merges_and_preserves_sections(tmp_path):
     _merge_json(str(path), {"rl": _payload()["rl"]})
     doc = json.loads(path.read_text())
     assert "sim_scale" in doc and "rl" in doc     # sections accumulate
-    assert doc["schema"] == "bench_decision/v3"
+    assert doc["schema"] == "bench_decision/v4"
 
 
-def test_merge_json_upgrades_v2_baseline(tmp_path):
-    """Merging fresh sections into a committed v2 file keeps its sections
-    and rewrites the schema tag as v3."""
+def test_merge_json_upgrades_old_baselines(tmp_path):
+    """Merging fresh sections into a committed v2/v3 file keeps its
+    sections and rewrites the schema tag as v4."""
     path = tmp_path / "bench.json"
     v2 = _payload()
     v2["schema"] = "bench_decision/v2"
     del v2["serving"]
+    del v2["churn"]
     path.write_text(json.dumps(v2))
     _merge_json(str(path), {"serving": _payload()["serving"]})
     doc = json.loads(path.read_text())
-    assert doc["schema"] == "bench_decision/v3"
+    assert doc["schema"] == "bench_decision/v4"
     assert "sim_scale" in doc and "serving" in doc
+    _merge_json(str(path), {"churn": _payload()["churn"]})
+    doc = json.loads(path.read_text())
+    assert doc["schema"] == "bench_decision/v4"
+    assert "serving" in doc and "churn" in doc

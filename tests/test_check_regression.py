@@ -1,15 +1,15 @@
-"""benchmarks/check_regression gate: leaf extraction for the scale and
-serving sections (incl. the inverted higher-is-better throughput
-leaves), and the hard refusal on quick-vs-full configuration
-mismatches (PR 4)."""
+"""benchmarks/check_regression gate: leaf extraction for the scale,
+serving, and churn sections (incl. the inverted higher-is-better
+throughput/retention leaves), and the hard refusal on quick-vs-full
+configuration mismatches (PR 4)."""
 from benchmarks.check_regression import _leaves, _rate_leaves, check
 
 
 def _doc(quick_dec=True, scale_T=500, oasis_p50=0.2, fifo_wall=1.0,
          quick_scale=False, serving_window=64, oasis_dps=40.0,
-         serving_wall=100.0):
+         serving_wall=100.0, oasis_ret=0.8, churn_levels=(0.05, 0.2)):
     return {
-        "schema": "bench_decision/v3",
+        "schema": "bench_decision/v4",
         "decision_seconds": {"jax": {"p50": 0.01}, "quick": quick_dec},
         "sim_scale": {
             "T": scale_T, "H": 100, "K": 100, "n_jobs": 2000,
@@ -24,6 +24,19 @@ def _doc(quick_dec=True, scale_T=500, oasis_p50=0.2, fifo_wall=1.0,
             "decisions_per_sec": {"fifo": 2000.0, "oasis": oasis_dps},
             "window_bytes": {"fifo": 0, "oasis": 256000},
             "decision": {"oasis": {"p50": 0.02, "mean": 0.03}},
+        },
+        "churn": {
+            "T": 100, "H": 40, "K": 40, "n_jobs": 120, "quick": False,
+            "levels": list(churn_levels),
+            "wall_seconds": {"fifo": 0.02, "oasis": 20.0},
+            "utility": {"fifo": {"none": 100.0, "frac=0.2": 90.0},
+                        "oasis": {"none": 200.0, "frac=0.2": 160.0}},
+            "retention": {"fifo": {"frac=0.2": 0.9},
+                          "oasis": {"frac=0.2": oasis_ret}},
+            "preempted": {"fifo": {"frac=0.2": 35},
+                          "oasis": {"frac=0.2": 55}},
+            "preempt_dropped": {"fifo": {"frac=0.2": 0},
+                                "oasis": {"frac=0.2": 7}},
         },
     }
 
@@ -44,7 +57,9 @@ def test_serving_leaves_and_rate_leaves():
     assert not any("decisions_per_sec" in p for p in paths)
     rates = dict(_rate_leaves(_doc()))
     assert rates == {"serving.decisions_per_sec.fifo": 2000.0,
-                     "serving.decisions_per_sec.oasis": 40.0}
+                     "serving.decisions_per_sec.oasis": 40.0,
+                     "churn.retention.fifo.frac=0.2": 0.9,
+                     "churn.retention.oasis.frac=0.2": 0.8}
 
 
 def test_serving_throughput_drop_gates_inverted():
@@ -64,6 +79,42 @@ def test_serving_throughput_drop_gates_inverted():
 
 def test_serving_wall_regression_gates():
     assert check(_doc(), _doc(serving_wall=450.0), ratio=2.0) == 1
+
+
+def test_churn_retention_drop_gates_inverted():
+    """Retention is higher-is-better: the gate fires when a scheduler
+    keeps a ratio-times smaller share of its churn-free utility than
+    the baseline — and never when retention improved."""
+    base = _doc()
+    collapsed = _doc(oasis_ret=0.3)               # 0.8 -> 0.3: >2x drop
+    assert check(base, collapsed, ratio=2.0) == 1
+    better = _doc(oasis_ret=1.0)                  # improvement: fine
+    assert check(base, better, ratio=2.0) == 0
+    # churn retention never appears among the lower-is-better leaves
+    assert not any("retention" in p for p in dict(_leaves(base)))
+
+
+def test_churn_levels_mismatch_refuses():
+    base, fresh = _doc(), _doc(churn_levels=(0.05, 0.5))
+    assert check(base, fresh, ratio=2.0) == 2
+    assert check(base, fresh, ratio=2.0, allow_config_mismatch=True) == 0
+
+
+def test_churn_quick_section_never_gated():
+    base, fresh = _doc(), _doc()
+    base["churn_quick"] = {**base["churn"], "quick": True}
+    fresh["churn_quick"] = {**fresh["churn"], "quick": True,
+                            "retention": {"oasis": {"frac=0.2": 0.01}}}
+    assert check(base, fresh, ratio=2.0) == 0
+
+
+def test_v3_baseline_without_churn_not_gated():
+    """Diffing a fresh v4 run against a committed v3 baseline (no churn
+    section) must neither refuse nor gate the new retention leaves."""
+    base = _doc()
+    del base["churn"]
+    base["schema"] = "bench_decision/v3"
+    assert check(base, _doc(oasis_ret=0.01), ratio=2.0) == 0
 
 
 def test_serving_dims_mismatch_refuses():

@@ -1,0 +1,302 @@
+"""Fleet-churn subsystem tests (sim/fleet.py + the engine's churn paths).
+
+Pins:
+* zero-churn exactness — an empty ``FleetTrace`` produces bit-identical
+  trajectories to ``fleet=None`` for every scheduler, episodic AND
+  streaming, across seeded paper-scale instances;
+* no over-commit on the surviving fleet (churned runs execute with
+  ``check=True``; the reactive driver additionally validates against the
+  shrunken effective capacities);
+* price-state inversion properties (commit→release on fresh slots is
+  bit-exact; ``block_server``/``unblock_server`` round-trips exactly);
+* cancellation x churn composition: cancelling a job the shrunken fleet
+  already preempted-and-dropped is a no-op, not a double subtraction.
+"""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core.pricing import PriceState, price_params_from_jobs
+from repro.core.types import ClusterSpec, Job, SigmoidUtility
+from repro.sim import engine
+from repro.sim.fleet import (DOWN_GRACEFUL, DOWN_LOSSY, UP, FleetEvent,
+                             FleetState, FleetTrace, churn_trace,
+                             make_fleet_trace)
+from repro.sim.workload import make_cluster, make_jobs, stream_jobs
+
+ALL = ("oasis", "fifo", "drf", "rrh", "dorm")
+
+
+# ---------------------------------------------------------------------------
+# fleet.py unit behaviour
+# ---------------------------------------------------------------------------
+
+def test_empty_trace_is_falsy():
+    assert not FleetTrace()
+    assert not FleetTrace(())
+    assert FleetTrace((FleetEvent(3, "fail", "worker", 0),))
+
+
+def test_make_fleet_trace_deterministic_and_well_formed():
+    cluster = make_cluster(T=80, H=6, K=6)
+    a = make_fleet_trace(cluster, seed=4, mtbf=120.0, mttr=10.0)
+    b = make_fleet_trace(cluster, seed=4, mtbf=120.0, mttr=10.0)
+    assert a.events == b.events
+    c = make_fleet_trace(cluster, seed=5, mtbf=120.0, mttr=10.0)
+    assert a.events != c.events
+    for ev in a.events:
+        assert 0 <= ev.slot < 80
+        assert ev.kind in ("fail", "recover", "drain_start", "drain_end")
+        assert ev.pool in ("worker", "ps")
+
+
+def test_churn_trace_fails_exact_fraction_of_each_pool():
+    cluster = make_cluster(T=100, H=40, K=40)
+    tr = churn_trace(cluster, frac=0.20, seed=1)
+    fails = [e for e in tr.events if e.kind == "fail"]
+    assert sum(1 for e in fails if e.pool == "worker") == 8
+    assert sum(1 for e in fails if e.pool == "ps") == 8
+    # one failure per chosen server, inside the mid-run window
+    assert len({(e.pool, e.server) for e in fails}) == len(fails)
+    assert all(100 // 8 <= e.slot < 100 for e in fails)
+
+
+def test_fleet_state_caps_and_recovery():
+    cluster = make_cluster(T=50, H=4, K=4)
+    tr = FleetTrace((FleetEvent(10, "fail", "worker", 1),
+                     FleetEvent(20, "recover", "worker", 1)))
+    fs = FleetState(cluster, tr)
+    assert fs.live_frac == 1.0 and fs.down_servers() == []
+    assert fs.step(10) == [("worker", 1, DOWN_LOSSY)]
+    assert fs.down_servers() == [("worker", 1)]
+    assert np.all(fs.worker_caps[1] == 0.0)
+    assert np.array_equal(fs.worker_caps[0], cluster.worker_caps[0])
+    assert fs.live_frac < 1.0
+    assert fs.step(15) == []                     # no transition between
+    assert fs.step(20) == [("worker", 1, UP)]
+    assert np.array_equal(fs.worker_caps, cluster.worker_caps)
+    assert fs.live_frac == 1.0
+
+
+def test_drain_windows_are_graceful():
+    cluster = make_cluster(T=100, H=10, K=10)
+    tr = make_fleet_trace(cluster, seed=0, mtbf=1e9,  # failures off
+                          drain_every=30, drain_duration=8, drain_frac=0.2)
+    kinds = {e.kind for e in tr.events}
+    assert kinds <= {"drain_start", "drain_end"}
+    fs = FleetState(cluster, tr)
+    first = min(e.slot for e in tr.events)
+    trans = fs.step(first)
+    assert trans and all(kind == DOWN_GRACEFUL for _, _, kind in trans)
+
+
+# ---------------------------------------------------------------------------
+# zero-churn exactness: empty trace == no fleet argument, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheduler", ALL)
+@pytest.mark.parametrize("seed", range(5))
+def test_zero_churn_bit_identity_episodic(scheduler, seed):
+    cluster = make_cluster(T=100, H=50, K=50)
+    jobs = make_jobs(200, T=100, seed=seed, small=True)
+    a = engine.run(cluster, jobs, scheduler=scheduler, check=False)
+    b = engine.run(cluster, jobs, scheduler=scheduler, check=False,
+                   fleet=FleetTrace())
+    assert a.total_utility == b.total_utility
+    assert a.completion == b.completion
+    assert a.accepted == b.accepted
+    assert a.utilization == b.utilization
+    assert b.preempted == 0 and b.preempt_dropped == 0
+
+
+@pytest.mark.parametrize("scheduler", ALL)
+@pytest.mark.parametrize("seed", range(5))
+def test_zero_churn_bit_identity_streaming(scheduler, seed):
+    cluster = make_cluster(T=32, H=12, K=12)
+
+    def trace():
+        return itertools.islice(
+            stream_jobs(rate=0.3, seed=seed, small=True), 60)
+
+    a = engine.run_stream(cluster, trace(), scheduler=scheduler, window=32,
+                          check=False)
+    b = engine.run_stream(cluster, trace(), scheduler=scheduler, window=32,
+                          check=False, fleet=FleetTrace())
+    assert a.total_utility == b.total_utility
+    assert a.completion == b.completion
+    assert a.accepted == b.accepted
+    assert a.utilization == b.utilization
+    assert b.preempted == 0 and b.preempt_dropped == 0
+
+
+# ---------------------------------------------------------------------------
+# churned runs: counters plumb through, no over-commit on survivors
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheduler", ALL)
+def test_churn_run_feasible_on_surviving_fleet(scheduler):
+    """check=True validates every repack/commit against the *effective*
+    (shrunken) capacities; a plan onto a failed server would assert."""
+    cluster = make_cluster(T=60, H=12, K=12)
+    jobs = make_jobs(30, T=60, seed=0, small=True)
+    tr = churn_trace(cluster, frac=0.25, seed=2)
+    r = engine.run(cluster, jobs, scheduler=scheduler, check=True, fleet=tr)
+    assert r.preempted >= 0 and r.completed > 0
+
+
+@pytest.mark.parametrize("scheduler", ("oasis", "fifo", "rrh"))
+def test_churn_run_stream_feasible(scheduler):
+    cluster = make_cluster(T=32, H=8, K=8)
+    tr = churn_trace(cluster, frac=0.25, seed=2, T=120)
+    jobs = itertools.islice(stream_jobs(rate=0.4, seed=0, small=True), 40)
+    r = engine.run_stream(cluster, jobs, scheduler=scheduler, window=32,
+                          check=True, fleet=tr)
+    assert r.completed > 0
+
+
+def test_churn_preempts_under_load():
+    """A dense instance where the seeded failures demonstrably hit
+    running allocations (the scenario/benchmark configuration)."""
+    cluster = make_cluster(T=60, H=12, K=12)
+    jobs = make_jobs(30, T=60, seed=0, small=True)
+    tr = churn_trace(cluster, frac=0.25, seed=2)
+    pre = {s: engine.run(cluster, jobs, scheduler=s, check=True,
+                         fleet=tr).preempted for s in ALL}
+    assert any(v > 0 for v in pre.values()), pre
+
+
+def test_checkpoint_rollback_delays_completion():
+    """A lossy failure rolls victims back to the last checkpoint
+    boundary: with everything else fixed, no completion may move
+    earlier, and the failure's victims finish no earlier than before."""
+    cluster = make_cluster(T=60, H=12, K=12)
+    jobs = make_jobs(30, T=60, seed=0, small=True)
+    tr = churn_trace(cluster, frac=0.25, seed=2)
+    base = engine.run(cluster, jobs, scheduler="fifo", check=False)
+    churned = engine.run(cluster, jobs, scheduler="fifo", check=True,
+                         fleet=tr)
+    assert churned.preempted > 0
+    for jid, t in churned.completion.items():
+        if jid in base.completion:
+            assert t >= base.completion[jid]
+
+
+# ---------------------------------------------------------------------------
+# cancellation x churn composition
+# ---------------------------------------------------------------------------
+
+def _lone_job(T=40):
+    # min_duration 8 slots, so the slot-3 failure hits it mid-flight
+    return Job(jid=0, arrival=0, epochs=6, num_chunks=4,
+               minibatches_per_chunk=10, tau=0.02, grad_size=0.05,
+               worker_bw=1.0, ps_bw=4.0,
+               worker_res=np.array([1.0, 1.0, 1.0, 1.0, 1.0]),
+               ps_res=np.array([0.0, 1.0, 1.0, 1.0, 4.0]),
+               utility=SigmoidUtility(50.0, 5.0, 10.0))
+
+
+def test_cancel_of_dropped_victim_is_noop():
+    """All workers fail mid-run, so the preempted job cannot be
+    re-admitted (zero worker capacity + sharply decayed shifted
+    utility) and is dropped.  Its later cancellation slot must then be
+    a no-op — not a second release of an already-released commitment
+    (which would corrupt the price state / books)."""
+    caps = np.full((2, 5), 8.0)
+    cluster = ClusterSpec(T=40, worker_caps=caps.copy(),
+                          ps_caps=caps.copy())
+    job = _lone_job()
+    tr = FleetTrace((FleetEvent(3, "fail", "worker", 0),
+                     FleetEvent(3, "fail", "worker", 1),
+                     FleetEvent(30, "recover", "worker", 0),
+                     FleetEvent(30, "recover", "worker", 1)))
+    r = engine.run(cluster, [job], scheduler="oasis", check=True,
+                   fleet=tr, cancellations={0: 20})
+    assert r.preempted == 1
+    assert r.preempt_dropped == 1
+    assert r.canceled == 0                       # nothing left to cancel
+    assert r.completed == 0
+    assert r.total_utility == 0.0
+
+
+def test_cancel_of_requeued_victim_still_releases():
+    """Reactive path: the victim stays enrolled (re-queued, not
+    dropped), so a later cancellation is real and must release it."""
+    caps = np.full((2, 5), 8.0)
+    cluster = ClusterSpec(T=40, worker_caps=caps.copy(),
+                          ps_caps=caps.copy())
+    job = _lone_job()
+    tr = FleetTrace((FleetEvent(3, "fail", "worker", 0),
+                     FleetEvent(3, "fail", "worker", 1),
+                     FleetEvent(30, "recover", "worker", 0),
+                     FleetEvent(30, "recover", "worker", 1)))
+    r = engine.run(cluster, [job], scheduler="fifo", check=True,
+                   fleet=tr, cancellations={0: 20})
+    assert r.preempted == 1
+    assert r.canceled == 1
+    assert r.completed == 0
+
+
+# ---------------------------------------------------------------------------
+# price-state inversion properties
+# ---------------------------------------------------------------------------
+
+def _price_state(T=16, H=3, K=3):
+    cluster = make_cluster(T=T, H=H, K=K)
+    jobs = make_jobs(6, T=T, seed=0, small=True)
+    params = price_params_from_jobs(jobs, cluster)
+    return cluster, jobs, PriceState(cluster, params)
+
+
+def test_block_unblock_roundtrip_is_bit_exact():
+    """The engine's failure protocol: victims on the dead server release
+    their tails first, THEN the server is blocked; on recovery, unblock
+    removes exactly the content it finds (x - x == 0 bitwise), restoring
+    the post-release usage arrays exactly."""
+    cluster, jobs, state = _price_state()
+    from repro.core import best_schedule
+    committed = []
+    for j in jobs[:3]:
+        s = best_schedule(j, state)
+        if s is not None:
+            state.commit(j, s.workers, s.ps)
+            committed.append((j, s))
+    # victims: release every schedule that touches worker server 1
+    for j, s in committed:
+        if any(y[1] > 0 for y in s.workers.values()):
+            state.release(j, s.workers, s.ps)
+    g0 = state._g_host.copy()
+    v0 = state._v_host.copy()
+    amt = state.block_server("worker", 1, 0)
+    assert amt >= 0.0
+    # blocked: the server's headroom is gone on every slot
+    assert np.all(state._g_host[:, 1, :] >= cluster.worker_caps[1] - 1e-9)
+    state.unblock_server("worker", 1, 0)
+    assert np.array_equal(state._g_host, g0)
+    assert np.array_equal(state._v_host, v0)
+    # and PS pool round-trips the same way
+    state.block_server("ps", 2, 0)
+    state.unblock_server("ps", 2, 0)
+    assert np.array_equal(state._v_host, v0)
+
+
+def test_commit_release_roundtrip_on_fresh_slots_is_bit_exact():
+    """d - d == 0 bitwise: committing then releasing the same placement
+    on fresh (all-zero) slots restores exact zeros."""
+    cluster, jobs, state = _price_state()
+    from repro.core import best_schedule
+    g0 = state._g_host.copy()
+    v0 = state._v_host.copy()
+    j = jobs[0]
+    s = best_schedule(j, state)
+    assert s is not None
+    state.commit(j, s.workers, s.ps)
+    assert not np.array_equal(state._g_host, g0)
+    state.release(j, s.workers, s.ps)
+    assert np.array_equal(state._g_host, g0)
+    assert np.array_equal(state._v_host, v0)
+
+
+# hypothesis-driven inversion/feasibility properties live in
+# tests/test_fleet_property.py (skips cleanly when hypothesis is absent,
+# matching tests/test_property.py)

@@ -1,0 +1,91 @@
+"""Hypothesis properties of the fleet-churn machinery.
+
+``hypothesis`` is an optional dev dependency (requirements-dev.txt);
+this module skips cleanly at collection when it is absent, matching
+``tests/test_property.py``.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import best_schedule
+from repro.core.pricing import PriceState, price_params_from_jobs
+from repro.sim import engine
+from repro.sim.fleet import churn_trace
+from repro.sim.workload import make_cluster, make_jobs
+
+ALL = ("oasis", "fifo", "drf", "rrh", "dorm")
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 50), srv=st.integers(0, 2),
+       pool=st.sampled_from(["worker", "ps"]), t0=st.integers(0, 12))
+def test_block_unblock_inverts_from_any_state(seed, srv, pool, t0):
+    """From an arbitrarily-populated price state, block_server followed
+    by unblock_server restores the usage tables bit-exactly (unblock
+    removes exactly the content it finds: x - x == 0 bitwise; the
+    engine's recover path relies on this after victims release)."""
+    cluster = make_cluster(T=16, H=3, K=3)
+    jobs = make_jobs(5, T=16, seed=seed, small=True)
+    params = price_params_from_jobs(jobs, cluster)
+    state = PriceState(cluster, params)
+    committed = []
+    for j in jobs:
+        s = best_schedule(j, state)
+        if s is not None:
+            state.commit(j, s.workers, s.ps)
+            committed.append((j, s))
+    # the engine's failure protocol: victims on the dead server release
+    # their tails from t0 onward BEFORE the block fills it
+    for j, s in committed:
+        alloc = s.workers if pool == "worker" else s.ps
+        if any(a is not None and a[srv] > 0
+               for tt, a in alloc.items() if tt >= t0):
+            state.release(j,
+                          {tt: y for tt, y in s.workers.items() if tt >= t0},
+                          {tt: z for tt, z in s.ps.items() if tt >= t0})
+    g0 = state._g_host.copy()
+    v0 = state._v_host.copy()
+    state.block_server(pool, srv, t0)
+    state.unblock_server(pool, srv, t0)
+    assert np.array_equal(state._g_host, g0)
+    assert np.array_equal(state._v_host, v0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 40))
+def test_commit_release_inverts_on_fresh_state(seed):
+    """Preemption releases invert commits bit-exactly on fresh slots
+    (d - d == 0): commit then release restores exact zeros."""
+    cluster = make_cluster(T=16, H=3, K=3)
+    jobs = make_jobs(4, T=16, seed=seed, small=True)
+    params = price_params_from_jobs(jobs, cluster)
+    state = PriceState(cluster, params)
+    g0 = state._g_host.copy()
+    v0 = state._v_host.copy()
+    committed = []
+    for j in jobs:
+        s = best_schedule(j, state)
+        if s is not None:
+            state.commit(j, s.workers, s.ps)
+            committed.append((j, s))
+    for j, s in reversed(committed):
+        state.release(j, s.workers, s.ps)
+    assert np.array_equal(state._g_host, g0)
+    assert np.array_equal(state._v_host, v0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 30), frac=st.sampled_from([0.2, 0.3, 0.5]),
+       scheduler=st.sampled_from(list(ALL)))
+def test_no_overcommit_on_surviving_fleet(seed, frac, scheduler):
+    """Whatever the failure pattern, every commitment stays within the
+    live fleet's capacity (engine check=True asserts per event slot,
+    against the shrunken effective caps on the reactive paths)."""
+    cluster = make_cluster(T=40, H=6, K=6)
+    jobs = make_jobs(14, T=40, seed=seed, small=True)
+    tr = churn_trace(cluster, frac=frac, seed=seed + 7)
+    r = engine.run(cluster, jobs, scheduler=scheduler, check=True, fleet=tr)
+    assert r.n_jobs == 14
