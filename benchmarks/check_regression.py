@@ -21,6 +21,12 @@ Compared leaves:
   serving mode (gate fires when baseline/fresh exceeds the ratio, i.e.
   throughput dropped).  ``serving_quick`` is the CI smoke — never gated
   (see ``SERVING_SECTIONS``)
+* ``minplus.<case>.p50`` — the structure-aware DP slot kernel
+  micro-bench (chain vs monotone dispatch vs plateau); like the
+  decision sections, a ``quick`` flag mismatch between baseline and
+  fresh refuses the check.  The ``sim_scale``/``serving``
+  ``decision.stages`` sub-record (per-stage profiling wall) is
+  diagnostic and never gated
 * ``churn.retention.<sched>.<variant>`` — utility retention under fleet
   churn, also inverted (higher is better): the gate fires when a
   scheduler keeps a ``ratio``-times smaller share of its churn-free
@@ -89,8 +95,14 @@ def _leaves(doc: dict) -> Iterator[Tuple[str, float]]:
         for sched, wall in sorted(scale.get("wall_seconds", {}).items()):
             yield f"{section}.wall_seconds.{sched}", float(wall)
         for sched, stats in sorted(scale.get("decision", {}).items()):
+            if sched == "stages":
+                continue        # diagnostic sub-record, never gated
             if isinstance(stats, dict) and stats.get("p50") is not None:
                 yield f"{section}.decision.{sched}.p50", float(stats["p50"])
+    mp = doc.get("minplus", {})
+    for case, stats in sorted(mp.items()):
+        if isinstance(stats, dict) and stats.get("p50") is not None:
+            yield f"minplus.{case}.p50", float(stats["p50"])
 
 
 def _rate_leaves(doc: dict) -> Iterator[Tuple[str, float]]:
@@ -126,7 +138,7 @@ def _config_mismatches(base: dict, fresh: dict) -> Dict[str, str]:
     decides whether that refuses the whole check (default) or merely
     skips the section (``--allow-config-mismatch``)."""
     skip: Dict[str, str] = {}
-    for section in ("decision_seconds", "sim_v2"):
+    for section in ("decision_seconds", "sim_v2", "minplus"):
         if not (base.get(section) and fresh.get(section)):
             continue            # missing on one side: MISS leaves, no refusal
         bq, fq = _section_quick(base, section), _section_quick(fresh, section)

@@ -124,9 +124,71 @@ def table(root: str = "experiments/final", mesh: str = "single") -> str:
     return "\n".join(lines)
 
 
+# ---------------------------------------------------------------------------
+# Scheduler DP kernels: analytic arithmetic intensity
+# ---------------------------------------------------------------------------
+
+def dp_kernel_cells(T: int = 500, dc1: int = 65, d1: int = 4097,
+                    runs: int = 13, dtype_bytes: int = 4) -> Dict[str, Dict]:
+    """FLOPs / HBM bytes per horizon sweep for the min-plus slot kernels
+    (``kernels/minplus``), at the 10x-scale shape by default.
+
+    All variants stream the same HBM traffic — the (T, DC+1) COST rows
+    once, the (D+1,) carry in and out per slot — because the plateau's
+    doubling table and the chain's band window live in VMEM scratch.
+    What differs is the FLOP count per slot:
+
+    * chain: one fused add+min per band tap — ``2 * DC1 * D1``;
+    * plateau (run-compressed): a ``log2(DC1)``-level doubling-table
+      build over DC1+D1 lanes plus one add and two window mins per run —
+      ``(DC1 + D1) * log2(DC1) + 3 * runs * D1`` (``runs`` defaults to
+      the measured p50 run count of real COST rows, 13);
+    * monotone D&C: candidate evaluations along the recursion —
+      ``~2 * D1 * log2(DC1)``.
+
+    The monotone sweep dispatches per row, so its cost sits between the
+    plateau and chain cells depending on the workload's run structure.
+    """
+    import math
+    lg = max(math.ceil(math.log2(max(dc1, 2))), 1)
+    sweep_bytes = float(T * (dc1 + 2 * d1) * dtype_bytes)
+    flops = {
+        "minplus_chain": 2.0 * T * dc1 * d1,
+        "minplus_plateau": float(T * ((dc1 + d1) * lg + 3 * runs * d1)),
+        "minplus_dnc": 2.0 * T * d1 * lg,
+    }
+    cells = {}
+    for name, fl in flops.items():
+        cells[name] = {
+            "flops": fl, "bytes": sweep_bytes,
+            "intensity": fl / sweep_bytes,
+            # v5e ridge point: below CHIP_FLOPS/HBM_BW flop/B a kernel
+            # cannot be compute-bound no matter how well it is scheduled
+            "bound": ("compute" if fl / sweep_bytes > CHIP_FLOPS / HBM_BW
+                      else "memory"),
+        }
+    return cells
+
+
+def dp_kernel_table(T: int = 500, dc1: int = 65, d1: int = 4097,
+                    runs: int = 13) -> str:
+    cells = dp_kernel_cells(T=T, dc1=dc1, d1=d1, runs=runs)
+    lines = [f"| DP slot kernel (T={T}, DC={dc1 - 1}, D={d1 - 1}, "
+             f"runs={runs}) | GFLOP/sweep | MiB/sweep | flop/B | bound |",
+             "|---|---|---|---|---|"]
+    for name in sorted(cells):
+        c = cells[name]
+        lines.append(f"| {name} | {c['flops'] / 1e9:.3f} | "
+                     f"{c['bytes'] / 2 ** 20:.2f} | {c['intensity']:.1f} | "
+                     f"{c['bound']} |")
+    return "\n".join(lines)
+
+
 def main() -> None:
     root = sys.argv[1] if len(sys.argv) > 1 else "experiments/final"
     print(table(root))
+    print()
+    print(dp_kernel_table())
 
 
 if __name__ == "__main__":

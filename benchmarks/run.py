@@ -31,7 +31,14 @@ CI-smoke shrink.  ``churn`` records the fleet-churn robustness table
 (per-scheduler utility **retention** — churned / churn-free utility,
 higher is better — at each churn level of ``sim.scenarios.run_churn``,
 plus preemption counters; churned runs execute with capacity checks
-on); ``churn_quick`` is its CI-smoke shrink.  Sections *merge* into an
+on); ``churn_quick`` is its CI-smoke shrink.  ``minplus`` records the
+structure-aware DP slot kernel micro-bench (chain vs monotone dispatch
+vs plateau across band widths, convex and adversarial rows); its
+per-case p50s are regression-gated.  Under ``REPRO_DECIDE_PROFILE=1``
+the ``simscale``/``serving`` sections additionally record the fused
+engine's per-stage wall clock (row build / DP sweep / backtrack /
+placement) as a ``decision.stages`` sub-record — diagnostic only
+(profiling re-runs each DP launch).  Sections *merge* into an
 existing ``--json`` file, so
 the committed baseline can accumulate all records; CI regenerates the
 file and fails on >2x regressions via
@@ -55,7 +62,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 SECTIONS = ("fig3", "fig4", "fig5", "fig6", "latency", "decision",
             "simspeed", "scale", "simscale", "simscale_quick", "serving",
             "serving_quick", "churn", "churn_quick", "scenarios", "rl",
-            "kernels")
+            "kernels", "minplus")
 
 
 def _is_num(x) -> bool:
@@ -95,7 +102,7 @@ def validate_tracked(payload: dict) -> list:
                         f"got {payload.get('schema')!r}")
     known = {"schema", "platform", "python", "decision_seconds", "sim_v2",
              "sim_scale", "sim_scale_quick", "sim_scale_100x", "serving",
-             "serving_quick", "churn", "churn_quick", "rl"}
+             "serving_quick", "churn", "churn_quick", "rl", "minplus"}
     for sec in sorted(set(payload) - known):
         problems.append(f"{sec}: unknown section (known: {sorted(known)})")
 
@@ -191,6 +198,15 @@ def validate_tracked(payload: dict) -> list:
                 continue
             for sched, per_variant in per_sched.items():
                 _num_dict(sec, f"{name}.{sched}", per_variant, problems)
+    mp = _section("minplus")
+    if mp is not None:
+        for case, stats in mp.items():
+            if case == "quick":
+                if not isinstance(stats, bool):
+                    problems.append("minplus.quick: expected bool")
+            elif not isinstance(stats, dict) or not _is_num(
+                    stats.get("p50")):
+                problems.append(f"minplus.{case}: needs finite p50")
     rl = _section("rl")
     if rl is not None:
         if not _is_num(rl.get("train_seconds")):
@@ -271,6 +287,56 @@ def _kernel_micro() -> list:
     us = (time.perf_counter() - t0) / 20 * 1e6
     rows.append(f"minplus_numpy[D=4096;DC=256],{us:.0f},")
     return rows
+
+
+def _minplus_micro(quick: bool = False):
+    """Chain vs monotone-dispatch vs plateau slot kernels across band
+    widths, on certified-convex, staircase (few-run), and adversarial
+    (many-run, non-convex) rows — the structure split real COST_t rows
+    live on (see ``kernels/minplus/monotone.py``: real rows are
+    staircases, so the plateau path is the one that matters and the
+    convex D&C fires only on synthetic rows).
+
+    Returns (CSV rows, tracked record): the record's per-case ``p50``
+    (median of the timed reps, in seconds) is the leaf
+    ``benchmarks.check_regression`` gates."""
+    import jax
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.kernels.minplus.monotone import monotone_step, plateau_step
+    from repro.kernels.minplus.tiled import minplus_chain_step
+
+    rows_out = []
+    tracked: dict = {"quick": bool(quick)}
+    rng = np.random.default_rng(0)
+    d1 = 1024 if quick else 4096
+    reps = 5 if quick else 11
+    chain = jax.jit(lambda r, p: minplus_chain_step(r[None], p[None])[0])
+    mono = jax.jit(monotone_step)
+    plat = jax.jit(plateau_step)
+    prev = jnp.asarray((rng.random(d1) * 10).astype(np.float32))
+    for dc1 in ((65,) if quick else (65, 513)):
+        js = np.arange(dc1, dtype=np.float32)
+        # integer-valued convex row: exact second difference 1 in f32
+        convex = jnp.asarray(js * (js - 1.0) / 2.0)
+        stair = jnp.asarray(np.repeat(
+            (rng.random(max(dc1 // 8, 1)) * 5).astype(np.float32), 8)[:dc1])
+        advers = jnp.asarray(rng.random(dc1).astype(np.float32))
+        for name, fn, row in (("chain", chain, advers),
+                              ("monotone_convex", mono, convex),
+                              ("monotone_adversarial", mono, advers),
+                              ("plateau_stair", plat, stair)):
+            fn(row, prev).block_until_ready()
+            times = []
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                fn(row, prev).block_until_ready()
+                times.append(time.perf_counter() - t0)
+            p50 = sorted(times)[len(times) // 2]
+            rows_out.append(f"minplus[{name};DC={dc1 - 1};D={d1 - 1}],"
+                            f"{p50 * 1e6:.0f},")
+            tracked[f"{name}_dc{dc1 - 1}"] = {"p50": p50}
+    return rows_out, tracked
 
 
 def _setup_jax_cache() -> None:
@@ -396,6 +462,12 @@ def main() -> None:
         rlstats: dict = {}
         rows += figs.rl_scoreboard(quick=args.quick, stats_out=rlstats)
         tracked["rl"] = rlstats
+    if "minplus" in which:
+        # structure-aware DP slot kernels (chain / monotone / plateau);
+        # the tracked per-case p50s are regression-gated
+        mp_rows, mp_tracked = _minplus_micro(quick=args.quick)
+        rows += mp_rows
+        tracked["minplus"] = mp_tracked
     if args.json and tracked:
         _merge_json(args.json, tracked)
     if "scenarios" in which:

@@ -554,6 +554,18 @@ class PriceState:
             return None
         return [(t0, t1) for v, t0, t1 in self._dirty_log if v > version]
 
+    def patch_spans(self, version: int, limit: int = 8):
+        """Dirty spans in the form an incremental table patcher consumes:
+        the :meth:`dirty_spans_since` list when it has at most ``limit``
+        entries, else ``None`` — more spans than that and span-by-span
+        patching launches more kernels than one full rebuild.  Shared by
+        the engine's padded-state price-table cache and the per-job
+        sorted-order/cumsum cache (``schedule_jax._sorted_fill``)."""
+        spans = self.dirty_spans_since(version)
+        if spans is None or len(spans) > limit:
+            return None
+        return spans
+
     def headroom_workers(self, t: int) -> np.ndarray:
         return self.cluster.worker_caps - self._g_host[t]
 

@@ -58,6 +58,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels.minplus.kernel import minplus_sweep_pallas
+from ..kernels.minplus.monotone import (PATH_CHAIN, PATH_DNC, PATH_PLATEAU,
+                                        convex_certificate, monotone_dnc_step,
+                                        plateau_step_unrolled, run_count)
 from ..kernels.minplus.ref import minplus_sweep_cost, minplus_sweep_ref
 from ..kernels.minplus.tiled import TILE, minplus_chain_step
 from .pricing import PriceState, size_bucket as _bucket
@@ -93,6 +96,41 @@ _SPLIT_TOL = 1e-12
 # while parallel backends get real fusion.  Override with REPRO_BURST_LANES.
 _MAX_LANES = int(os.environ.get(
     "REPRO_BURST_LANES", "8" if jax.default_backend() == "tpu" else "1"))
+
+
+# ---------------------------------------------------------------------------
+# Decision-phase stage profiling (REPRO_DECIDE_PROFILE=1)
+# ---------------------------------------------------------------------------
+
+_PROFILE_STAGES = ("row_build", "dp_sweep", "backtrack", "placement")
+_profile_acc = {k: 0.0 for k in _PROFILE_STAGES}
+_profile_acc["decisions"] = 0.0
+
+
+def _profiling() -> bool:
+    """Re-read the environment per launch so callers (e.g.
+    ``examples/cluster_sim.py --profile``) can toggle profiling after
+    this module is imported."""
+    return os.environ.get("REPRO_DECIDE_PROFILE", "") not in ("", "0")
+
+
+def decide_profile_reset() -> None:
+    for k in _profile_acc:
+        _profile_acc[k] = 0.0
+
+
+def decide_profile_snapshot() -> dict:
+    """Accumulated per-stage decision wall clock since the last reset.
+
+    Stages: ``row_build`` (COST-row construction inside the decide
+    launch), ``dp_sweep`` (min-plus DP + early-exit loop), ``backtrack``
+    (split recovery for accepts), ``placement`` (greedy fills).  The
+    row/DP split is measured by re-running the decide launch with every
+    visited tile served from the just-refreshed row cache — the second
+    launch is DP-only, so ``row_build = total - dp_only``.  Profiling
+    therefore roughly doubles decision latency; it is a diagnostic mode,
+    not a benchmark mode."""
+    return dict(_profile_acc)
 
 
 # ---------------------------------------------------------------------------
@@ -239,11 +277,85 @@ def _greedy_cost_b(ccap: jax.Array, ccost: jax.Array, scost: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Per-job sorted-order / cumsum tables (the "order cache")
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _sorted_fill_lanes(p, q, g, v, wcaps, scaps, resbw):
+    """Full sorted-order/cumsum table set for every lane: 6 arrays
+    (B, T_pad, H|K) — ``(w_scost, w_ccap, w_ccost, s_scost, s_ccap,
+    s_ccost)``.
+
+    ``_prefix_tables_b``'s ops (reduce over R, argsort + cumsum along
+    the trailing server axis) touch each slot independently, so TILE
+    slices of these tables are bit-identical to the per-tile tables the
+    decide loop used to build inline — and the per-tile argsorts leave
+    the decide launch entirely."""
+    wres, sres = resbw[:, :R], resbw[:, R:2 * R]
+    w = _prefix_tables_b(p, wcaps[None] - g, wres)
+    s = _prefix_tables_b(q, scaps[None] - v, sres)
+    return w + s
+
+
+@functools.partial(jax.jit, static_argnames=("span",))
+def _sorted_fill(tabs, p, q, g, v, wcaps, scaps, resbw, t0, span: int):
+    """Patch one dirty slot span of a single lane's (T_pad, S) table set
+    in place — the exact ``_sorted_fill_lanes`` formulas on the span's
+    rows, so the patched tables are bit-identical to a full rebuild at
+    the new state version (per-slot sort cost O(dirty) on re-solves)."""
+    zero = jnp.zeros_like(t0)
+    p_s = jax.lax.dynamic_slice(p, (t0, zero, zero), (span,) + p.shape[1:])
+    q_s = jax.lax.dynamic_slice(q, (t0, zero, zero), (span,) + q.shape[1:])
+    g_s = jax.lax.dynamic_slice(g, (t0, zero, zero), (span,) + g.shape[1:])
+    v_s = jax.lax.dynamic_slice(v, (t0, zero, zero), (span,) + v.shape[1:])
+    wres, sres = resbw[None, :R], resbw[None, R:2 * R]
+    w = _prefix_tables_b(p_s, wcaps[None] - g_s, wres)
+    s = _prefix_tables_b(q_s, scaps[None] - v_s, sres)
+    return tuple(jax.lax.dynamic_update_slice(tab, n[0], (t0, zero))
+                 for tab, n in zip(tabs, w + s))
+
+
+# ---------------------------------------------------------------------------
 # Tiled, batched decision core
 # ---------------------------------------------------------------------------
 
-def _decide_tiled_core(sd, jd, rows_init, valid_tiles, *, T: int, d1: int,
-                       use_cache: bool):
+def _mono_band() -> int:
+    """Band-width ceiling for the monotone min-plus dispatch (env-tunable;
+    0 disables).  Re-read per launch so tests can toggle it."""
+    return int(os.environ.get("REPRO_MONOTONE_BAND", "64"))
+
+
+def _mono_dnc() -> bool:
+    """Whether the decide loop may take the SMAWK-style divide-and-conquer
+    branch (vs plateau/chain only).  Default off: on CPU XLA the D&C's
+    scatter-heavy lowering loses to the unrolled chain at every shape we
+    measured, and compiling it per shape bucket adds seconds of cold
+    latency — the kernel stays fully exercised via ops/tests/benchmarks."""
+    return os.environ.get("REPRO_MONOTONE_DNC", "") not in ("", "0")
+
+def _table_max() -> int:
+    """Order-cache footprint ceiling: full sorted-table sets are only
+    built (and thereafter span-patched) when ``T_pad * max(H, K)`` is at
+    most this many slot-server cells.  Above it the one-shot build costs
+    more than it can ever amortize — XLA CPU's stable argsort over a
+    (512, 100) table runs ~26 ms while the early-exit decide loop sorts
+    only the tiles it visits — so big shapes keep the inline per-tile
+    path and small re-solve-heavy shapes (serving windows) get O(dirty)
+    patching.  Env-tunable for the order-cache tests."""
+    return int(os.environ.get("REPRO_ORDER_CACHE_MAX", "16384"))
+
+
+@functools.lru_cache(maxsize=4)
+def _dummy_tabs(dtype_name: str):
+    """Placeholder tabs operand for ``use_tabs=False`` launches (the
+    static flag keeps them out of the compiled program entirely)."""
+    z = jnp.zeros((1, 1, 1), jnp.dtype(dtype_name))
+    return (z,) * 6
+
+
+def _decide_tiled_core(sd, jd, tabs, rows_init, valid_tiles, *, T: int,
+                       d1: int, use_cache: bool, mono: int,
+                       use_tabs: bool):
     """Alg. 2 decisions for a lane batch, horizon-tiled with exact early
     exit (module docstring).
 
@@ -254,21 +366,37 @@ def _decide_tiled_core(sd, jd, rows_init, valid_tiles, *, T: int, d1: int,
     jd: lane-batched job arrays —
         resbw (B, 2R+2) = [wres, sres, wbw, psbw],
         WZ (B, 2, M) i32, u (B, T_pad), usmax (B, T_pad) suffix-max of u,
-        meta (B, 3) i32 = [a, nchunks, d_tot], lb (B,) — the price-free
-        lower-bound base from ``_cost_lower_bound`` (a live price floor
-        is multiplied in on device).
+        meta (B, 4) i32 = [a, nchunks, d_tot, dcap], lb (B,) — the
+        price-free per-chunk-pass lower-bound base from
+        ``_cost_lower_bound`` (a live greedy price floor over the
+        cheapest feasible slots is multiplied in on device).
+    tabs: per-job sorted-order/cumsum tables from ``_sorted_fill_lanes``
+        — 6 arrays (B, T_pad, H|K) when ``use_tabs``; the decide loop
+        then only slices them, so it runs no prices and no argsorts at
+        all.  When ``use_tabs`` is False (the common first-decision
+        path), tabs are (1, 1, 1) dummies and the loop builds each
+        visited tile's tables inline from the cached price tables —
+        argsorts only on visited tiles, which the early exit keeps far
+        below T_pad.
     rows_init/valid_tiles: ``use_cache`` row cache — (B, T_pad, M) rows at
         the current prices plus a (B, n_tiles) tile-validity mask; a tile
         is recomputed unless it is valid for EVERY lane.  Scalars when
         ``use_cache`` is False.
     T: static — the real (unpadded) horizon.
     d1: static — DP columns (padded D_total + 1).
+    mono: static — monotone min-plus dispatch level: 0 = chain only,
+        1 = staircase-plateau + chain, 2 = also the divide-and-conquer
+        branch (``REPRO_MONOTONE_DNC``).  Levels > 0 require a single
+        lane; the branch is chosen ONCE PER TILE (per-slot dispatch costs
+        more than it saves) and every branch produces bit-identical DP
+        values (see ``kernels.minplus.monotone``).
 
     Returns (best_t i32 (-1 = reject), payoff, total_cost, d_left i32,
     d_slots (B, T_pad) i32, rows (B, T_pad, M) — the refreshed row cache —
-    k0, k_end i32: the visited tile range [k0, k_end)).
+    k0, k_end i32: the visited tile range [k0, k_end), paths (3,) i32 —
+    per-branch processed-tile counts [dnc, plateau, chain]).
     """
-    g, v, wcaps, scaps, U1, U2, L1, L2, pmin = sd
+    g, v, wcaps, scaps, U1, U2, L1, L2, pmin, p_pad, q_pad = sd
     resbw, WZ, u, usmax, meta, lb = jd
     B = resbw.shape[0]
     T_pad = u.shape[1]
@@ -279,30 +407,56 @@ def _decide_tiled_core(sd, jd, rows_init, valid_tiles, *, T: int, d1: int,
     wbw, psbw = resbw[:, 2 * R], resbw[:, 2 * R + 1]
     W, Z = WZ[:, 0], WZ[:, 1]                                    # (B, M) i32
     a, nchunks, d_tot = meta[:, 0], meta[:, 1], meta[:, 2]
+    dcap = meta[:, 3]
+    tw_scost, tw_ccap, tw_ccost, ts_scost, ts_ccap, ts_ccost = tabs
+    H = g.shape[1]
+    K = v.shape[1]
+    if mono:
+        assert B == 1, "monotone dispatch is single-lane only"
+    r_max = max(16, M // 4)
 
-    # dual price bases p = L1 (U1/L1)^(g/c), q = L2 (U2/L2)^(v/c) (eq. 22/25)
-    ratio1 = jnp.maximum(U1 / L1, 1.0 + 1e-9)
-    ratio2 = jnp.maximum(U2 / L2, 1.0 + 1e-9)
-    cw = jnp.maximum(wcaps, 1e-12)
-    cs = jnp.maximum(scaps, 1e-12)
     Wf = W.astype(dt)
     deploy_target = jnp.minimum(Z, W).astype(dt)                 # (B, M)
     feas_n = (W <= nchunks[:, None])[:, None, :]                 # (B, 1, M)
     ms = jnp.arange(M)
 
     def rows_for_tile(t0):
-        """COST_t rows for slots [t0, t0+TILE), all lanes: (B, TILE, M)."""
+        """COST_t rows for slots [t0, t0+TILE), all lanes: (B, TILE, M).
+
+        ``use_tabs``: assembled from the cached sorted tables (greedy
+        prefix lookups only — the prices and argsorts happened in the
+        table build).  Otherwise the tile's prefix tables are built here
+        from slices of the version-cached price tables, with the SAME
+        ``_prefix_tables_b`` formulas — the two modes are bit-identical
+        (argsort + cumsum touch each slot independently)."""
         zero = jnp.zeros_like(t0)
-        g_t = jax.lax.dynamic_slice(
-            g, (t0, zero, zero), (TILE,) + g.shape[1:])
-        v_t = jax.lax.dynamic_slice(
-            v, (t0, zero, zero), (TILE,) + v.shape[1:])
-        p = L1 * _price_pow(ratio1[None, None, :], g_t / cw[None])
-        q = L2 * _price_pow(ratio2[None, None, :], v_t / cs[None])
-        w_scost, w_ccap, w_ccost = _prefix_tables_b(
-            p, wcaps[None] - g_t, wres)
-        s_scost, s_ccap, s_ccost = _prefix_tables_b(
-            q, scaps[None] - v_t, sres)
+        if use_tabs:
+            w_scost = jax.lax.dynamic_slice(
+                tw_scost, (zero, t0, zero), (B, TILE, H))
+            w_ccap = jax.lax.dynamic_slice(
+                tw_ccap, (zero, t0, zero), (B, TILE, H))
+            w_ccost = jax.lax.dynamic_slice(
+                tw_ccost, (zero, t0, zero), (B, TILE, H))
+            s_scost = jax.lax.dynamic_slice(
+                ts_scost, (zero, t0, zero), (B, TILE, K))
+            s_ccap = jax.lax.dynamic_slice(
+                ts_ccap, (zero, t0, zero), (B, TILE, K))
+            s_ccost = jax.lax.dynamic_slice(
+                ts_ccost, (zero, t0, zero), (B, TILE, K))
+        else:
+            nr = p_pad.shape[2]
+            p_t = jax.lax.dynamic_slice(
+                p_pad, (t0, zero, zero), (TILE, H, nr))
+            q_t = jax.lax.dynamic_slice(
+                q_pad, (t0, zero, zero), (TILE, K, nr))
+            g_t = jax.lax.dynamic_slice(
+                g, (t0, zero, zero), (TILE, H, nr))
+            v_t = jax.lax.dynamic_slice(
+                v, (t0, zero, zero), (TILE, K, nr))
+            w_scost, w_ccap, w_ccost = _prefix_tables_b(
+                p_t, wcaps[None] - g_t, wres)
+            s_scost, s_ccap, s_ccost = _prefix_tables_b(
+                q_t, scaps[None] - v_t, sres)
         Wt = jnp.broadcast_to(Wf[:, None, :], (B, TILE, M))
         w_costs = _greedy_cost_b(w_ccap, w_ccost, w_scost, Wt)
         pool = s_ccap[..., -1:]                                  # (B, TILE, 1)
@@ -328,29 +482,44 @@ def _decide_tiled_core(sd, jd, rows_init, valid_tiles, *, T: int, d1: int,
     t_start = k0 * TILE
 
     # Live early-exit cost floor.  ``lb`` from the host is the price-free
-    # base workload * min_d(W(d)/d) (times _LB_MARGIN); every worker a
-    # schedule deploys in slot s costs >= sum_r wres_r * min_h p[s,h,r],
-    # so ANY schedule's total cost is >= base * min over the job's
-    # feasible slots of that floor — the static L1 bound with the
-    # *actual* current prices in place of the price floor, exact for the
-    # same reason and far tighter once the cluster fills up.  ``pmin``
+    # per-chunk-pass base min_d(W(d)/d) (times _LB_MARGIN); every worker
+    # a schedule deploys in slot s costs >= sum_r wres_r * min_h
+    # p[s,h,r] =: wslot[s], so placing d chunk-passes in slot s costs
+    # >= d * base * wslot[s].  A schedule can place at most dcap
+    # chunk-passes per slot, so ANY schedule's total cost is >= base
+    # times the greedy spread of d_tot over the CHEAPEST feasible slots
+    # (dcap each, remainder on the last) — minimizing sum_s d_s *
+    # wslot[s] subject to 0 <= d_s <= dcap, sum d_s = d_tot puts dcap on
+    # the cheapest slots, so the spread is a true minimum over feasible
+    # splits.  This reduces to the old single-cheapest-slot floor when
+    # dcap >= d_tot and is far tighter for multi-slot workloads: rejects
+    # exit the tile loop after a prefix of the horizon (often before the
+    # first tile) instead of sweeping the DP to the deadline.  ``pmin``
     # (the per-slot minimum worker price, (T_pad, R)) is computed once
     # per state version in ``_pad_state``, not per launch.
     wslot = jnp.einsum("tr,br->bt", pmin, wres)
     ts_all = jnp.arange(T_pad, dtype=jnp.int32)
     feas_t = (ts_all[None, :] >= a[:, None]) & (ts_all < T)[None, :]
-    fmin = jnp.min(jnp.where(feas_t, wslot, jnp.inf), axis=1)    # (B,)
-    lb = jnp.where(lb > 0, lb * fmin, 0.0)
+    wsort = jnp.sort(jnp.where(feas_t, wslot, jnp.inf), axis=1)  # (B, T_pad)
+    dcap_f = jnp.maximum(dcap, 1).astype(dt)
+    take = jnp.clip(d_tot[:, None].astype(dt)
+                    - ts_all[None, :].astype(dt) * dcap_f[:, None],
+                    0.0, dcap_f[:, None])
+    # infeasible-window tail: missing slots contribute 0, keeping the
+    # floor a valid (weaker) lower bound; the DP itself rejects such jobs
+    floor_sum = jnp.sum(
+        take * jnp.where(jnp.isfinite(wsort), wsort, 0.0), axis=1)
+    lb = jnp.where(lb > 0, lb * floor_sum, 0.0)
 
     def cond(c):
-        k, _, best, _, _, _ = c
+        k, _, best, _, _, _, _ = c
         t_next = jnp.clip(k * TILE, 0, T_pad - 1)
         um = jax.lax.dynamic_slice_in_dim(usmax, t_next, 1, axis=1)[:, 0]
         active = um > best + _PAY_EPS + lb
         return (k < n_tiles) & jnp.any(active)
 
     def body(c):
-        k, prev, best, best_t, cost_buf, rows_buf = c
+        k, prev, best, best_t, paths, cost_buf, rows_buf = c
         t0 = k * TILE
         zero = jnp.zeros_like(t0)
         if use_cache:
@@ -366,12 +535,52 @@ def _decide_tiled_core(sd, jd, rows_init, valid_tiles, *, T: int, d1: int,
         u_tile = jax.lax.dynamic_slice(u, (zero, t0), (B, TILE))
         ts_tile = t0 + jnp.arange(TILE, dtype=jnp.int32)
 
+        # Monotone min-plus dispatch, decided ONCE for the whole tile:
+        # every slot row in the tile must qualify, because a per-slot
+        # branch costs more in dispatch than the fast path saves.  The
+        # plateau gate (run_count <= r_max, no NaN / -inf) is exactly the
+        # soundness condition of ``plateau_step_unrolled``; identity rows
+        # of dead slots have 2 runs and never block it.
+        if mono:
+            rt = rows_tile[0]
+            clean = jnp.all((rt == rt) & (rt > -jnp.inf))
+            plat_ok = clean & jnp.all(jax.vmap(run_count)(rt) <= r_max)
+            if mono >= 2:
+                conv_ok = clean & jnp.all(jax.vmap(convex_certificate)(rt))
+                branch = jnp.where(
+                    conv_ok, PATH_DNC,
+                    jnp.where(plat_ok, PATH_PLATEAU, PATH_CHAIN))
+            else:
+                branch = jnp.where(plat_ok, PATH_PLATEAU, PATH_CHAIN)
+        else:
+            branch = jnp.int32(PATH_CHAIN)
+        paths = paths.at[branch].add(1)
+
         def slot(carry, x):
             prev, best, best_t = carry
             row, u_t, t = x
 
             def live(_):
-                new = minplus_chain_step(row, prev)
+                if mono >= 2:
+                    def _dnc():
+                        out, ovf = monotone_dnc_step(row[0], prev[0])
+                        return jax.lax.cond(
+                            ovf,
+                            lambda: minplus_chain_step(row, prev),
+                            lambda: out[None])
+                    new = jax.lax.switch(branch, [
+                        _dnc,
+                        lambda: plateau_step_unrolled(
+                            row[0], prev[0], r_max)[None],
+                        lambda: minplus_chain_step(row, prev)])
+                elif mono:
+                    new = jax.lax.cond(
+                        branch == PATH_PLATEAU,
+                        lambda: plateau_step_unrolled(
+                            row[0], prev[0], r_max)[None],
+                        lambda: minplus_chain_step(row, prev))
+                else:
+                    new = minplus_chain_step(row, prev)
                 costD = jnp.take_along_axis(new, d_tot[:, None],
                                             axis=1)[:, 0]
                 pay = jnp.where(jnp.isfinite(costD) & (t >= a) & (t < T),
@@ -399,20 +608,23 @@ def _decide_tiled_core(sd, jd, rows_init, valid_tiles, *, T: int, d1: int,
             cost_buf, jnp.swapaxes(cols, 0, 1), (zero, t0, zero))
         rows_buf = jax.lax.dynamic_update_slice(
             rows_buf, rows_tile, (zero, t0, zero))
-        return k + 1, prev, best, best_t, cost_buf, rows_buf
+        return k + 1, prev, best, best_t, paths, cost_buf, rows_buf
 
-    k_end, _, best, best_t, cost_buf, rows_buf = jax.lax.while_loop(
+    k_end, _, best, best_t, paths, cost_buf, rows_buf = jax.lax.while_loop(
         cond, body,
         (k0, init_col, jnp.zeros((B,), dt), jnp.full((B,), -1, jnp.int32),
-         cost_buf0, rows_buf0))
-    return best_t, best, rows_buf, cost_buf, k0, k_end
+         jnp.zeros((3,), jnp.int32), cost_buf0, rows_buf0))
+    return best_t, best, rows_buf, cost_buf, k0, k_end, paths
 
 
-@functools.partial(jax.jit, static_argnames=("T", "d1", "use_cache"))
-def _decide_tiled(sd, jd, rows_init, valid_tiles, T: int, d1: int,
-                  use_cache: bool):
-    return _decide_tiled_core(sd, jd, rows_init, valid_tiles, T=T, d1=d1,
-                              use_cache=use_cache)
+@functools.partial(jax.jit,
+                   static_argnames=("T", "d1", "use_cache", "mono",
+                                    "use_tabs"))
+def _decide_tiled(sd, jd, tabs, rows_init, valid_tiles, T: int, d1: int,
+                  use_cache: bool, mono: int, use_tabs: bool):
+    return _decide_tiled_core(sd, jd, tabs, rows_init, valid_tiles, T=T,
+                              d1=d1, use_cache=use_cache, mono=mono,
+                              use_tabs=use_tabs)
 
 
 @jax.jit
@@ -421,11 +633,17 @@ def _backtrack(rows_lane: jax.Array, cost_lane: jax.Array, best_t, d_tot,
     """Split recovery for ONE accepted lane, from the decision loop's
     stored row/cost tables (device-resident; rejects never pay this).
 
-    Walks t from the horizon down to 0, recomputing each slot's split as
-    the FIRST j with rows[t, j] + cost_{t-1}[d_rem - j] within
-    ``_SPLIT_TOL`` of the minimum — an exact argmin would make the split
-    (and so the committed placements) a function of launch-shape ulp
-    noise; see the ``_SPLIT_TOL`` note.  ``t_start`` is the first slot
+    Walks t DOWN from ``best_t`` (later slots place nothing by
+    construction), recomputing each slot's split as the FIRST j with
+    rows[t, j] + cost_{t-1}[d_rem - j] within ``_SPLIT_TOL`` of the
+    minimum — an exact argmin would make the split (and so the committed
+    placements) a function of launch-shape ulp noise; see the
+    ``_SPLIT_TOL`` note.  Stops as soon as the remaining workload hits
+    zero: every earlier slot's only in-band candidate is then j = 0
+    (idx = -j < 0 is masked to inf for j > 0 and vals[0] = 0 + prev[0]),
+    so skipping them is bit-identical to the full scan the loop
+    replaces — and a typical accept backtracks a short suffix of the
+    horizon instead of all T_pad slots.  ``t_start`` is the first slot
     the decision loop processed (earlier slots carry the DP identity).
     Returns (total_cost, d_left, d_slots (T_pad,) i32)."""
     T_pad, M = rows_lane.shape
@@ -433,27 +651,29 @@ def _backtrack(rows_lane: jax.Array, cost_lane: jax.Array, best_t, d_tot,
     dt = cost_lane.dtype
     init_col = jnp.full((d1,), jnp.inf, dt).at[0].set(0.0)
     js = jnp.arange(M)
-    ts = jnp.arange(T_pad, dtype=jnp.int32)
 
-    def _back(d_rem, t):
-        def live(_):
-            row = jax.lax.dynamic_slice_in_dim(rows_lane, t, 1, axis=0)[0]
-            prev = jax.lax.dynamic_slice_in_dim(
-                cost_lane, jnp.maximum(t - 1, 0), 1, axis=0)[0]
-            prev = jnp.where(t <= t_start, init_col, prev)
-            idx = d_rem - js
-            vals = jnp.where(idx >= 0, row + prev[jnp.clip(idx, 0, d1 - 1)],
-                             jnp.inf)
-            m = jnp.min(vals)
-            band = vals <= m * (1.0 + _SPLIT_TOL)
-            return jnp.argmax(band).astype(jnp.int32)
-        # slots past the chosen finish place nothing — skip their row/col
-        # loads entirely (identical to computing and forcing d_here = 0)
-        d_here = jax.lax.cond(t <= best_t, live,
-                              lambda _: jnp.int32(0), None)
-        return d_rem - d_here, d_here
+    def cond(c):
+        t, d_rem, _ = c
+        return (t >= 0) & (d_rem > 0)
 
-    d_left, d_slots = jax.lax.scan(_back, d_tot, ts, reverse=True)
+    def body(c):
+        t, d_rem, d_slots = c
+        row = jax.lax.dynamic_slice_in_dim(rows_lane, t, 1, axis=0)[0]
+        prev = jax.lax.dynamic_slice_in_dim(
+            cost_lane, jnp.maximum(t - 1, 0), 1, axis=0)[0]
+        prev = jnp.where(t <= t_start, init_col, prev)
+        idx = d_rem - js
+        vals = jnp.where(idx >= 0, row + prev[jnp.clip(idx, 0, d1 - 1)],
+                         jnp.inf)
+        m = jnp.min(vals)
+        band = vals <= m * (1.0 + _SPLIT_TOL)
+        d_here = jnp.argmax(band).astype(jnp.int32)
+        return t - 1, d_rem - d_here, d_slots.at[t].set(d_here)
+
+    _, d_left, d_slots = jax.lax.while_loop(
+        cond, body,
+        (jnp.clip(best_t, -1, T_pad - 1), d_tot,
+         jnp.zeros((T_pad,), jnp.int32)))
     bt = jnp.clip(best_t, 0, T_pad - 1)
     col = jax.lax.dynamic_slice_in_dim(cost_lane, bt, 1, axis=0)[0]
     total_cost = col[jnp.minimum(d_tot, d1 - 1)]
@@ -616,12 +836,23 @@ class RowCache:
     *fresh* (no commit/release has moved prices inside them since).  The
     engine recomputes exactly the invalid tiles (``use_cache`` path of
     ``_decide_tiled``); :meth:`sync` invalidates against the price
-    state's dirty-slot log (``PriceState.dirty_spans_since``)."""
+    state's dirty-slot log (``PriceState.dirty_spans_since``).
+
+    ``tables`` is the job's sorted-order/cumsum table set (6 arrays
+    (T_pad, H|K) from ``_sorted_fill_lanes``) at ``tables_version``.  It
+    is NOT maintained by :meth:`sync`: ``_decide_jobs`` patches exactly
+    the slots ``PriceState.patch_spans(tables_version)`` reports dirty
+    (``_sorted_fill``) right before each launch, so re-solves pay an
+    O(dirty) sort bill instead of re-sorting the horizon."""
     rows: Optional[jax.Array]       # (T_pad, m_pad) device-resident
     valid: np.ndarray               # (n_tiles,) bool, host
     version: int
     m_pad: int
     d1: int
+    # 6 x (T_pad, S) device-resident, or a lazy ``_LaneTabs`` view into
+    # the stacked launch build (materialized via ``_tabs_get`` on reuse)
+    tables: Optional[object] = None
+    tables_version: int = -1
 
     @classmethod
     def empty(cls, state: PriceState, job: Job) -> Optional["RowCache"]:
@@ -675,38 +906,60 @@ def _state_arrays(state: PriceState, dtype):
     return state.device_state(dtype)
 
 
+def _price_tables(g, v, wcaps, scaps, U1, U2, L1, L2):
+    """Job-independent dual price tables p (T', H, R), q (T', K, R) —
+    the exact per-tile formula ``rows_for_tile`` used to evaluate inline
+    (same elementwise ops, so slices of these are bit-identical)."""
+    ratio1 = jnp.maximum(U1 / L1, 1.0 + 1e-9)
+    ratio2 = jnp.maximum(U2 / L2, 1.0 + 1e-9)
+    p = L1 * _price_pow(ratio1[None, None, :],
+                        g / jnp.maximum(wcaps, 1e-12)[None])
+    q = L2 * _price_pow(ratio2[None, None, :],
+                        v / jnp.maximum(scaps, 1e-12)[None])
+    return p, q
+
+
 @functools.partial(jax.jit, static_argnames=("T_pad",))
-def _pad_state(g, v, wcaps, U1, L1, T_pad: int):
-    """Tile-pad the allocation tensors and precompute the live-floor
+def _pad_state(g, v, wcaps, scaps, U1, U2, L1, L2, T_pad: int):
+    """Tile-pad the allocation tensors and precompute everything about
+    the state the decide launch re-derived per tile: the live-floor
     minimum worker price ``pmin`` (module docstring: every deployed
     worker in slot s costs >= sum_r wres_r * min_h p[s,h,r]; with
     ratio >= 1, min_h ratio^(g/c) == ratio^(min_h g/c), so the floor
-    needs only (T_pad, R) pows)."""
+    needs only (T_pad, R) pows) and the full job-independent price
+    tables ``p``/``q`` — the exp/log transcendentals that used to
+    dominate the row-build stage now run once per state version instead
+    of once per visited tile per decision."""
     T = g.shape[0]
     g = jnp.pad(g, ((0, T_pad - T), (0, 0), (0, 0)))
     v = jnp.pad(v, ((0, T_pad - T), (0, 0), (0, 0)))
     ratio1 = jnp.maximum(U1 / L1, 1.0 + 1e-9)
     umin = jnp.min(g / jnp.maximum(wcaps, 1e-12)[None], axis=1)
     pmin = L1 * _price_pow(ratio1[None, :], umin)
-    return g, v, pmin
+    p, q = _price_tables(g, v, wcaps, scaps, U1, U2, L1, L2)
+    return g, v, pmin, p, q
 
 
 @functools.partial(jax.jit, static_argnames=("span",))
-def _pad_patch(g_pad, v_pad, pmin, g, v, wcaps, U1, L1, t0, span: int):
+def _pad_patch(g_pad, v_pad, pmin, p_pad, q_pad, g, v, wcaps, scaps,
+               U1, U2, L1, L2, t0, span: int):
     """Refresh one dirty slot span of the padded-state cache in place:
-    re-slice ``g``/``v`` and recompute the ``pmin`` floor rows with the
-    exact ``_pad_state`` formula, so the patched tensors are bit-identical
-    to a from-scratch pad at the new state version."""
+    re-slice ``g``/``v`` and recompute the ``pmin`` floor and price-table
+    rows with the exact ``_pad_state`` formulas, so the patched tensors
+    are bit-identical to a from-scratch pad at the new state version."""
     zero = jnp.zeros_like(t0)
     g_s = jax.lax.dynamic_slice(g, (t0, zero, zero), (span,) + g.shape[1:])
     v_s = jax.lax.dynamic_slice(v, (t0, zero, zero), (span,) + v.shape[1:])
     ratio1 = jnp.maximum(U1 / L1, 1.0 + 1e-9)
     umin = jnp.min(g_s / jnp.maximum(wcaps, 1e-12)[None], axis=1)
     pmin_s = L1 * _price_pow(ratio1[None, :], umin)
+    p_s, q_s = _price_tables(g_s, v_s, wcaps, scaps, U1, U2, L1, L2)
     g_pad = jax.lax.dynamic_update_slice(g_pad, g_s, (t0, zero, zero))
     v_pad = jax.lax.dynamic_update_slice(v_pad, v_s, (t0, zero, zero))
     pmin = jax.lax.dynamic_update_slice(pmin, pmin_s, (t0, zero))
-    return g_pad, v_pad, pmin
+    p_pad = jax.lax.dynamic_update_slice(p_pad, p_s, (t0, zero, zero))
+    q_pad = jax.lax.dynamic_update_slice(q_pad, q_s, (t0, zero, zero))
+    return g_pad, v_pad, pmin, p_pad, q_pad
 
 
 _pad_cache: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
@@ -737,21 +990,24 @@ def _padded_state(state: PriceState, dtype, T_pad: int):
         spans = state.dirty_spans_since(hit[0][0])
         if spans is not None and len(spans) <= _PATCH_MAX_SPANS:
             g_pad, v_pad, pmin = hit[1][0], hit[1][1], hit[1][8]
+            p_pad, q_pad = hit[1][9], hit[1][10]
             for s0, s1 in spans:
                 span = _bucket(max(s1 - s0, 1), floor=8, step=64)
                 if span > T:
                     break
                 start = min(max(int(s0), 0), T - span)
-                g_pad, v_pad, pmin = _pad_patch(
-                    g_pad, v_pad, pmin, g, v, wcaps, U1, L1,
-                    jnp.int32(start), span)
+                g_pad, v_pad, pmin, p_pad, q_pad = _pad_patch(
+                    g_pad, v_pad, pmin, p_pad, q_pad, g, v, wcaps, scaps,
+                    U1, U2, L1, L2, jnp.int32(start), span)
             else:
                 hit = (key, (g_pad, v_pad, wcaps, scaps, U1, U2, L1, L2,
-                             pmin))
+                             pmin, p_pad, q_pad))
                 _pad_cache[state] = hit
                 return hit[1]
-    g_pad, v_pad, pmin = _pad_state(g, v, wcaps, U1, L1, T_pad=T_pad)
-    hit = (key, (g_pad, v_pad, wcaps, scaps, U1, U2, L1, L2, pmin))
+    g_pad, v_pad, pmin, p_pad, q_pad = _pad_state(
+        g, v, wcaps, scaps, U1, U2, L1, L2, T_pad=T_pad)
+    hit = (key, (g_pad, v_pad, wcaps, scaps, U1, U2, L1, L2, pmin,
+                 p_pad, q_pad))
     _pad_cache[state] = hit
     return hit[1]
 
@@ -768,18 +1024,21 @@ def _utility_curve(job: Job, T: int, T_pad: int) -> np.ndarray:
 
 
 def _cost_lower_bound(job: Job, state: PriceState, W: np.ndarray) -> float:
-    """Price-free base of the cost lower bound: workload * min_d W(d)/d.
+    """Price-free per-chunk-pass base of the cost lower bound:
+    min_d W(d)/d.
 
-    Any split's total worker-slots is >= workload * min_d W(d)/d, so ANY
-    schedule's cost is >= this base times the cheapest single-worker slot
-    cost over the job's feasible window — the device side of
-    ``_decide_tiled_core`` multiplies in that live price floor (which is
-    itself >= L1 * sum(worker_res), the old static bound).  Scaled by
-    ``_LB_MARGIN`` so engine float64 rounding stays above the bound."""
+    Any split's worker-slots for d chunk-passes in one slot is
+    >= d * min_d W(d)/d, so ANY schedule's cost is >= this base times a
+    workload-weighted sum of live per-slot price floors — the device
+    side of ``_decide_tiled_core`` multiplies in a greedy spread over
+    the cheapest feasible slots (each capped at dcap chunk-passes),
+    which is >= the old single-cheapest-slot floor and reduces to it
+    when one slot can hold the whole workload.  Scaled by ``_LB_MARGIN``
+    so engine float64 rounding stays above the bound."""
     if len(W) < 2:
         return 0.0
     per_unit = float(np.min(W[1:] / np.arange(1, len(W), dtype=np.float64)))
-    return _LB_MARGIN * job.workload * per_unit
+    return _LB_MARGIN * per_unit
 
 
 def _job_arrays_tiled(job: Job, state: PriceState, T: int, T_pad: int,
@@ -798,7 +1057,8 @@ def _job_arrays_tiled(job: Job, state: PriceState, T: int, T_pad: int,
     lb = _cost_lower_bound(job, state, W)
     resbw = np.concatenate([job.worker_res, job.ps_res,
                             [job.worker_bw, job.ps_bw]])
-    meta = np.array([job.arrival, job.num_chunks, job.workload], np.int32)
+    meta = np.array([job.arrival, job.num_chunks, job.workload, dcap],
+                    np.int32)
     return (resbw.astype(np.float64), WZ, u, usmax, meta, np.float64(lb)), (W, Z)
 
 
@@ -810,7 +1070,7 @@ def _reject_lane(T: int, T_pad: int, m_pad: int):
     resbw[-2:] = 1.0
     WZ = np.zeros((2, m_pad), np.int32)
     WZ[0] = np.int32(1) << 30
-    meta = np.array([T, -1, 1], np.int32)
+    meta = np.array([T, -1, 1, 1], np.int32)
     z = np.zeros(T_pad)
     return (resbw, WZ, z, z, meta, np.float64(0.0)), (WZ[0, :1], WZ[1, :1])
 
@@ -849,9 +1109,15 @@ def _x64_context(precision: str):
     """
     import contextlib
     from jax.experimental import enable_x64
-    if precision == "x64":
-        return enable_x64(True)
-    if precision == "auto" and jax.default_backend() == "cpu":
+    if precision == "x64" or (precision == "auto"
+                              and jax.default_backend() == "cpu"):
+        # already-enabled is a no-op: entering enable_x64 flips the
+        # thread-local config even when the value is unchanged, and every
+        # flip knocks jit calls off the C fast path (~ms of python
+        # dispatch per call).  The sim drivers hold one enable_x64 open
+        # across the whole run so per-decision entries land here.
+        if jax.config.jax_enable_x64:
+            return contextlib.nullcontext()
         return enable_x64(True)
     return contextlib.nullcontext()
 
@@ -888,10 +1154,14 @@ def _materialize(pend: _Pending, state: PriceState, sd, dtype
     job, best_t = pend.job, pend.best_t
     if best_t < 0:
         return None
-    total_cost, d_left, d_slots = _backtrack(
+    profiling = _profiling()
+    if profiling:
+        t_bt = time.perf_counter()
+    total_cost, d_left, d_slots = jax.device_get(_backtrack(
         pend.rows_full[pend.lane], pend.cost_full[pend.lane],
-        jnp.int32(best_t), jnp.int32(job.workload), jnp.int32(pend.t_start))
-    d_slots = np.asarray(d_slots)
+        jnp.int32(best_t), jnp.int32(job.workload), jnp.int32(pend.t_start)))
+    if profiling:
+        _profile_acc["backtrack"] += time.perf_counter() - t_bt
     pend.cost = float(total_cost)
     # mirrors _extract's backtrack assert: an accepted schedule must place
     # the whole workload (guards e.g. mixed-precision runs)
@@ -916,13 +1186,15 @@ def _materialize(pend: _Pending, state: PriceState, sd, dtype
     Zc = pend.Z[d_act].astype(np.float64)
     Wc[len(ts_active):] = 0.0
     Zc[len(ts_active):] = 0.0
-    y, z = _place_slots(sd, jnp.asarray(
+    if profiling:
+        t_pl = time.perf_counter()
+    y, z = jax.device_get(_place_slots(sd, jnp.asarray(
         np.concatenate([job.worker_res, job.ps_res,
                         [job.worker_bw, job.ps_bw]]), dtype),
         jnp.asarray(Wc, dtype), jnp.asarray(Zc, dtype),
-        jnp.asarray(ts), wa)
-    y = np.asarray(y)
-    z = np.asarray(z)
+        jnp.asarray(ts), wa))
+    if profiling:
+        _profile_acc["placement"] += time.perf_counter() - t_pl
     H, K = state.cluster.H, state.cluster.K
     workers, ps = {}, {}
     for k, t in enumerate(ts_active):
@@ -967,6 +1239,120 @@ def _empty_cache(b_pad: int, T_pad: int, n_tiles: int, m_pad: int,
             jnp.zeros((b_pad, n_tiles), bool))
 
 
+# per-branch processed-tile totals across decide launches (the fallback
+# counter of the monotone dispatch; see monotone_counters_snapshot)
+_monotone_counters = {"dnc": 0, "plateau": 0, "chain": 0}
+
+
+def monotone_counters_reset() -> None:
+    for k in _monotone_counters:
+        _monotone_counters[k] = 0
+
+
+def monotone_counters_snapshot() -> dict:
+    """Tiles processed per min-plus branch since the last reset: ``dnc``
+    (divide-and-conquer row-minima), ``plateau`` (staircase run
+    compression), ``chain`` (quadratic banded fallback).  All three are
+    bit-identical; the split records how often the monotone paths fired
+    vs fell back."""
+    return dict(_monotone_counters)
+
+
+class _LaneTabs:
+    """Deferred per-lane view into a stacked table set.
+
+    A fresh ``_sorted_fill_lanes`` launch returns six ``(B, T_pad, S)``
+    arrays; slicing every lane's 6-tuple out of them eagerly costs six
+    device ``__getitem__`` dispatches per lane, and in the streaming
+    engine nearly every launch is fresh while the slices are consumed
+    only if that job is later re-solved.  This holds (stack, lane) and
+    materializes the 6-tuple on first :meth:`get`."""
+
+    __slots__ = ("stack", "lane", "_tabs")
+
+    def __init__(self, stack: tuple, lane: int):
+        self.stack = stack
+        self.lane = lane
+        self._tabs: Optional[tuple] = None
+
+    def get(self) -> tuple:
+        if self._tabs is None:
+            bi = self.lane
+            self._tabs = tuple(t[bi] for t in self.stack)
+            self.stack = None
+        return self._tabs
+
+
+def _tabs_get(tabs) -> tuple:
+    """Materialize a RowCache ``tables`` entry (concrete or _LaneTabs)."""
+    return tabs.get() if isinstance(tabs, _LaneTabs) else tabs
+
+
+def _lane_tables(chunk, caches, state, psd, lanes, b_pad, T, dtype):
+    """Sorted-order/cumsum tables for every lane of one launch.
+
+    Serves each lane from its RowCache when fresh, patches it through
+    ``_sorted_fill`` when ``PriceState.patch_spans`` can name the dirty
+    slots (O(dirty) sort cost on the re-solve path), and rebuilds from
+    the cached price tables otherwise (one fused ``_sorted_fill_lanes``
+    launch).  Tables only exist at all below the ``_table_max``
+    footprint gate — above it the launch keeps the inline per-tile path
+    and this returns dummies.  Returns (tabs — 6 launch operands,
+    lane_tabs — per-lane entries (6-tuple, ``_LaneTabs``, or None) for
+    cache write-back, use_tabs — whether the launch slices ``tabs``)."""
+    g_pad, v_pad, wcaps, scaps = psd[0], psd[1], psd[2], psd[3]
+    p_pad, q_pad = psd[9], psd[10]
+    T_pad = g_pad.shape[0]
+    if T_pad * max(g_pad.shape[1], v_pad.shape[1]) > _table_max():
+        return _dummy_tabs(jnp.dtype(dtype).name), [None] * b_pad, False
+    lane_tabs: List[Optional[object]] = [None] * b_pad
+    for bi, (i, _) in enumerate(chunk):
+        cache = caches.get(i) if caches else None
+        if cache is None or cache.tables is None:
+            continue
+        if cache.tables_version == state.version:
+            lane_tabs[bi] = cache.tables
+            continue
+        spans = state.patch_spans(cache.tables_version,
+                                  limit=_PATCH_MAX_SPANS)
+        if spans is None:
+            continue
+        tabs_l = _tabs_get(cache.tables)
+        resbw = jnp.asarray(lanes[bi][0], dtype)
+        for s0, s1 in spans:
+            span = _bucket(max(s1 - s0, 1), floor=8, step=64)
+            if span > T:
+                tabs_l = None
+                break
+            start = min(max(int(s0), 0), T - span)
+            tabs_l = _sorted_fill(tabs_l, p_pad, q_pad, g_pad, v_pad,
+                                  wcaps, scaps, resbw, jnp.int32(start),
+                                  span)
+        lane_tabs[bi] = tabs_l
+    if all(t is None for t in lane_tabs):
+        resbw_all = jnp.asarray(np.stack([la[0] for la in lanes]), dtype)
+        full = _sorted_fill_lanes(p_pad, q_pad, g_pad, v_pad, wcaps,
+                                  scaps, resbw_all)
+        return full, [_LaneTabs(full, bi) for bi in range(b_pad)], True
+    for bi in range(b_pad):
+        if lane_tabs[bi] is None:
+            resbw = jnp.asarray(lanes[bi][0], dtype)
+            one = _sorted_fill_lanes(p_pad, q_pad, g_pad, v_pad, wcaps,
+                                     scaps, resbw[None])
+            lane_tabs[bi] = _LaneTabs(one, 0)
+    if b_pad == 1:
+        lt = lane_tabs[0]
+        if isinstance(lt, _LaneTabs) and lt.stack is not None \
+                and lt.lane == 0 and lt.stack[0].shape[0] == 1:
+            tabs = lt.stack       # reuse the stacked build directly
+        else:
+            tabs = tuple(t[None] for t in _tabs_get(lt))
+    else:
+        mats = [_tabs_get(lt) for lt in lane_tabs]
+        tabs = tuple(jnp.stack([m[k] for m in mats]) for k in range(6))
+    return tabs, lane_tabs, True
+
+
 def _decide_jobs(jobs: Sequence[Tuple[int, Job]], state: PriceState, dtype,
                  m_pad: int, d1: int,
                  caches: Optional[dict] = None) -> List[_Pending]:
@@ -975,7 +1361,8 @@ def _decide_jobs(jobs: Sequence[Tuple[int, Job]], state: PriceState, dtype,
     T = state.horizon
     T_pad = _pad_tiles(T)
     n_tiles = T_pad // TILE
-    sd = _padded_state(state, dtype, T_pad)
+    psd = _padded_state(state, dtype, T_pad)
+    sd = psd
     out: List[_Pending] = []
     for c0 in range(0, len(jobs), _MAX_LANES):
         chunk = jobs[c0:c0 + _MAX_LANES]
@@ -1015,19 +1402,56 @@ def _decide_jobs(jobs: Sequence[Tuple[int, Job]], state: PriceState, dtype,
         else:
             rows_init, valid_tiles = _empty_cache(
                 b_pad, T_pad, n_tiles, m_pad, jnp.dtype(dtype).name)
-        best_t, payoff, rows_buf, cost_buf, k0, k_end = \
-            _decide_tiled(sd, jd, rows_init, valid_tiles, T=T, d1=d1,
-                          use_cache=True)
-        best_t = np.asarray(best_t)
-        payoff = np.asarray(payoff)
+        profiling = _profiling()
+        if profiling:
+            jax.block_until_ready((psd, jd, rows_init, valid_tiles))
+            t_tabs = time.perf_counter()
+        tabs, lane_tabs, use_tabs = _lane_tables(chunk, caches, state,
+                                                 psd, lanes, b_pad, T,
+                                                 dtype)
+        if profiling:
+            jax.block_until_ready(tabs)
+            t_launch = time.perf_counter()
+            _profile_acc["row_build"] += t_launch - t_tabs
+        mono = 0
+        if b_pad == 1 and m_pad <= _mono_band():
+            mono = 2 if _mono_dnc() else 1
+        best_t, payoff, rows_buf, cost_buf, k0, k_end, paths = \
+            _decide_tiled(sd, jd, tabs, rows_init, valid_tiles, T=T,
+                          d1=d1, use_cache=True, mono=mono,
+                          use_tabs=use_tabs)
+        if profiling:
+            jax.block_until_ready((best_t, rows_buf, cost_buf))
+            total = time.perf_counter() - t_launch
+            # DP-only re-run: every tile served from the row cache the
+            # first launch just refreshed.  The early-exit loop visits
+            # the same tiles (same carries), so the delta is the row
+            # build.  See ``decide_profile_snapshot``.
+            t_dp = time.perf_counter()
+            jax.block_until_ready(_decide_tiled(
+                sd, jd, tabs, rows_buf, jnp.ones_like(valid_tiles), T=T,
+                d1=d1, use_cache=True, mono=mono, use_tabs=use_tabs)[:4])
+            dp_only = time.perf_counter() - t_dp
+            _profile_acc["dp_sweep"] += dp_only
+            _profile_acc["row_build"] += max(total - dp_only, 0.0)
+            _profile_acc["decisions"] += len(chunk)
+        best_t, payoff, k0, k_end, pth = jax.device_get(
+            (best_t, payoff, k0, k_end, paths))
         k0, k_end = int(k0), int(k_end)
+        _monotone_counters["dnc"] += int(pth[0])
+        _monotone_counters["plateau"] += int(pth[1])
+        _monotone_counters["chain"] += int(pth[2])
         for bi, (i, job) in enumerate(chunk):
             valid = np.zeros(n_tiles, bool)
             if use_cache and caches.get(i) is not None:
                 valid |= caches[i].valid
             valid[k0:k_end] = True
             cache = RowCache(rows=rows_buf[bi], valid=valid,
-                             version=state.version, m_pad=m_pad, d1=d1)
+                             version=state.version, m_pad=m_pad, d1=d1,
+                             tables=lane_tabs[bi],
+                             tables_version=(state.version
+                                             if lane_tabs[bi] is not None
+                                             else -1))
             out.append(_Pending(
                 job=job, best_t=int(best_t[bi]), payoff=float(payoff[bi]),
                 rows_full=rows_buf, cost_full=cost_buf, lane=bi,
@@ -1043,10 +1467,27 @@ def _pow2_bucket(n: int, floor: int) -> int:
     return b
 
 
+def _band_bucket(n: int) -> int:
+    """Band-width (m_pad) compile bucket: 64, 128, then multiples of 128.
+
+    The DP slot scan is O(m_pad) per column, so the old power-of-two
+    buckets made a dcap-296 job sweep a 512-wide band — 1.7x the work —
+    where 384 suffices.  Padded columns carry the infeasible sentinel
+    (W = 2^30 -> +inf rows), so narrowing the pad only removes all-inf
+    min-plus candidates and DP values are bit-identical across buckets.
+    128-steps above 128 keep the bucket count (and XLA compile count) as
+    coarse as the pow2 scheme at the shapes the benchmarks see."""
+    if n <= 64:
+        return 64
+    if n <= 128:
+        return 128
+    return ((n + 127) // 128) * 128
+
+
 def _shape_bucket(job: Job) -> Optional[Tuple[int, int]]:
     """Padded (m_pad, d1) compile bucket for a job's DP tables.
 
-    Deliberately coarse — powers of two with high floors — because every
+    Deliberately coarse — band buckets with high floors — because every
     distinct (m_pad, d1, lanes) triple is a separate XLA compilation of
     the decision loop, and compile time dominates wall clock at scale.
     The d1 floor covers the auto-quantized workload range (engine quantum
@@ -1054,7 +1495,7 @@ def _shape_bucket(job: Job) -> Optional[Tuple[int, int]]:
     dcap = min(job.max_chunks_per_slot, job.workload)
     if dcap == 0:
         return None
-    return (_pow2_bucket(dcap + 1, 64), _pow2_bucket(job.workload + 1, 1280))
+    return (_band_bucket(dcap + 1), _pow2_bucket(job.workload + 1, 1280))
 
 
 def best_schedule_fused(job: Job, state: PriceState, *,
@@ -1093,6 +1534,8 @@ def best_schedule_fused(job: Job, state: PriceState, *,
             row_cache.rows = pend.cache.rows
             row_cache.valid = pend.cache.valid
             row_cache.version = pend.cache.version
+            row_cache.tables = pend.cache.tables
+            row_cache.tables_version = pend.cache.tables_version
         sd = _state_arrays(state, dtype)
         return _materialize(pend, state, sd, dtype)
 

@@ -16,7 +16,7 @@ All return ``None`` when no schedule has positive payoff (job rejected).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
@@ -292,6 +292,35 @@ def cost_t_rows(job: Job, state: PriceState, p: np.ndarray, q: np.ndarray,
     else:
         rows[slots < a] = INF
     return rows
+
+
+def cost_row_flags(rows: np.ndarray, plateau_max: Optional[int] = None
+                   ) -> Dict[str, np.ndarray]:
+    """Structure flags for a block of COST_t rows — which min-plus path
+    each row is eligible for (see ``kernels/minplus/monotone.py``).
+
+    Returns per-row arrays: ``convex`` (exact-arithmetic convexity
+    certificate — the soundness condition for the SMAWK-style D&C),
+    ``runs`` (maximal bitwise-equal run count — the plateau path's cost
+    measure), and ``path`` (the PATH_DNC / PATH_PLATEAU / PATH_CHAIN
+    code the dispatcher would pick).  Real COST_t rows are staircases —
+    greedy fill composed with ``W(d) = ceil(alpha d)`` — so ``convex``
+    is almost never set and ``runs`` is what decides the fast path.
+    """
+    from repro.kernels.minplus.monotone import (
+        PATH_CHAIN, PATH_DNC, PATH_PLATEAU, _PLATEAU_FRACTION,
+        convex_certificate_np, run_count_np)
+    rows = np.asarray(rows)
+    if plateau_max is None:
+        plateau_max = max(rows.shape[-1] // _PLATEAU_FRACTION, 1)
+    convex = convex_certificate_np(rows)
+    runs = run_count_np(rows)
+    with np.errstate(invalid="ignore"):
+        clean = np.all((rows == rows) & (rows > -np.inf), axis=-1)
+    path = np.where(convex, PATH_DNC,
+                    np.where(clean & (runs <= plateau_max),
+                             PATH_PLATEAU, PATH_CHAIN)).astype(np.int32)
+    return {"convex": convex, "runs": runs, "path": path}
 
 
 # ---------------------------------------------------------------------------

@@ -152,3 +152,89 @@ def minplus_sweep_pallas(rows: jax.Array, d_total: int, *,
         interpret=interpret,
     )(rowsp)
     return out[:, :d1], arg[:, :d1]
+
+
+# ---------------------------------------------------------------------------
+# Run-compressed (plateau) slot: the Pallas variant of the monotone path.
+# Real COST_t rows are staircases (see kernels/minplus/monotone.py), so the
+# row collapses into L bitwise-equal runs; each run's best candidate is its
+# constant plus a window minimum of the carry, served from a power-of-two
+# doubling table in VMEM scratch — O((D + DC) * (L + log DC)) VPU work
+# instead of the chain's O(D * DC), bit-exact for any row (monotonicity of
+# rounding: fl(c + min prev) == min fl(c + prev) for a constant c).
+# ---------------------------------------------------------------------------
+
+def _minplus_plateau_kernel(row_ref, prevpad_ref, out_ref, tab_ref, *,
+                            dc1p: int, d1p: int, kmax: int, r_max: int):
+    """row: (1, dc1p); prevpad: (1, dc1p + d1p) left-inf-padded carry;
+    out: (1, d1p); tab scratch: (kmax, dc1p + d1p) doubling table with
+    tab[k][i] = min prevpad[i : i + 2^k]."""
+    row = row_ref[0, :]
+    tab_ref[0, :] = prevpad_ref[0, :]
+    for k in range(1, kmax):
+        s = 1 << (k - 1)
+        lvl = tab_ref[k - 1, :]
+        shifted = jnp.concatenate(
+            [lvl[s:], jnp.full((s,), jnp.inf, jnp.float32)])
+        tab_ref[k, :] = jnp.minimum(lvl, shifted)
+
+    js = jax.lax.broadcasted_iota(jnp.int32, (1, dc1p), 1)[0]
+    neq = jnp.concatenate(
+        [jnp.zeros((1,), jnp.bool_), row[1:] != row[:-1]])
+    rid = jnp.cumsum(neq.astype(jnp.int32))
+    n_runs = rid[dc1p - 1] + 1
+
+    def run(w, best):
+        mask = rid == w
+        s_w = jnp.min(jnp.where(mask, js, dc1p))
+        e_w = jnp.max(jnp.where(mask, js, -1))
+        c_w = jnp.min(jnp.where(mask, row, jnp.inf))
+        kw = 31 - jax.lax.clz(jnp.maximum(e_w - s_w + 1, 1))
+        # window min of prevpad[d + dc1p - e_w : d + dc1p - s_w + 1] as
+        # two (overlapping) power-of-two slices of level kw
+        lo = jax.lax.dynamic_slice(
+            tab_ref[...], (kw, dc1p - e_w), (1, d1p))[0]
+        hi = jax.lax.dynamic_slice(
+            tab_ref[...], (kw, dc1p - s_w - (1 << kw) + 1), (1, d1p))[0]
+        cand = c_w + jnp.minimum(lo, hi)
+        return jnp.minimum(best, jnp.where(w < n_runs, cand, jnp.inf))
+
+    out_ref[0, :] = jax.lax.fori_loop(
+        0, r_max, run, jnp.full((d1p,), jnp.inf, jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("r_max", "interpret"))
+def minplus_plateau_pallas(row: jax.Array, prev: jax.Array, *,
+                           r_max: int = 16, interpret: bool = True):
+    """row: (DC+1,) float32 (+inf infeasible); prev: (D+1,).  Returns
+    ``new (D+1,)`` — cost-only, no argmin (the engine backtracks from
+    stored DP columns, not per-slot args).  ONLY sound when ``row`` has
+    at most ``r_max`` maximal runs of bitwise-equal values; the caller
+    gates on :func:`repro.kernels.minplus.monotone.run_count`.  Lane
+    padding appends one +inf run, which is accounted for internally."""
+    d1 = prev.shape[0]
+    dc1 = row.shape[0]
+    dc1p = ((dc1 + 127) // 128) * 128
+    d1p = ((d1 + 127) // 128) * 128
+    rowp = jnp.full((1, dc1p), jnp.inf, jnp.float32)
+    rowp = jax.lax.dynamic_update_slice(
+        rowp, row.astype(jnp.float32)[None, :], (0, 0))
+    prevpad = jnp.full((1, dc1p + d1p), jnp.inf, jnp.float32)
+    prevpad = jax.lax.dynamic_update_slice(
+        prevpad, prev.astype(jnp.float32)[None, :], (0, dc1p))
+    kmax = (dc1p - 1).bit_length() + 1 if dc1p > 1 else 1
+    r_eff = r_max + (1 if dc1p > dc1 else 0)
+    out, = pl.pallas_call(
+        functools.partial(_minplus_plateau_kernel, dc1p=dc1p, d1p=d1p,
+                          kmax=kmax, r_max=r_eff),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((1, dc1p), lambda i: (0, 0)),
+            pl.BlockSpec((1, dc1p + d1p), lambda i: (0, 0)),
+        ],
+        out_specs=[pl.BlockSpec((1, d1p), lambda i: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((1, d1p), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((kmax, dc1p + d1p), jnp.float32)],
+        interpret=interpret,
+    )(rowp, prevpad)
+    return out[0, :d1]

@@ -1,0 +1,450 @@
+"""Monotone (SMAWK-style) and run-compressed min-plus DP slot kernels.
+
+``minplus_chain_step`` evaluates every candidate ``row[j] + prev[d - j]``
+— O(DC * D) work per slot.  The candidate matrix ``A[d][i] =
+prev[i] + row[d - i]`` is a (banded, extended-real) Monge matrix whenever
+``row`` is convex: the ``prev`` terms cancel in the quadrangle
+inequality, so the leftmost argmin per row is nondecreasing in ``d`` and
+the row minima are a totally-monotone problem solvable by SMAWK-style
+divide and conquer in O((D + DC) log D) candidate evaluations
+(:func:`monotone_dnc_step`).
+
+Two properties make the fast paths safe to substitute bit-for-bit:
+
+* **Exact convexity certificate.**  Rounding is monotone, so the D&C
+  bound propagation is only sound when the *real-arithmetic* values of
+  the FP row are convex — an ulp-level violation can shift a rounded
+  argmin outside the scanned range.  :func:`convex_certificate`
+  therefore decides ``row[j] + row[j+2] - 2*row[j+1] >= 0`` EXACTLY
+  with error-free TwoSum expansions (Knuth/Shewchuk), never with a
+  rounded comparison.  Anything uncertifiable falls back.
+* **Dual-split bounds.**  A rounded argmin can sit strictly left of the
+  exact leftmost argmin, so the D&C recursion propagates the RIGHTMOST
+  rounded argmin as the left child's upper bound and the LEFTMOST as
+  the right child's lower bound; either range then always contains an
+  exact argmin, and ``min`` of the rounded candidates over any range
+  containing an exact argmin equals the chain's value bit-for-bit.
+
+Real COST_t rows from the paper's Alg. 2 are *staircases* — greedy
+fill cost composed with ``W(d) = ceil(alpha * d)`` — which are NOT
+convex (each step lands a negative second difference), but they
+compress into few bitwise-equal runs.  :func:`plateau_step` exploits
+that structure directly: ``row[j]`` is a single constant ``c_w`` per
+run, so ``min_{j in run} fl(c_w + prev[d-j]) = fl(c_w + min_j
+prev[d-j])`` by monotonicity of rounding, and the per-run window
+minimum comes from a power-of-two doubling table of the padded carry
+(two contiguous slices per run — no gathers).  O((D + DC) * (L + log))
+for L runs, bit-exact for ANY row.
+
+:func:`monotone_step` dispatches: certified-convex rows take the D&C,
+run-compressible rows the plateau scan, everything else the chain —
+and the choice is observable (path codes) so the engine can count
+fallbacks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .tiled import minplus_chain_step
+
+# dispatcher path codes (returned by monotone_step_with_path)
+PATH_DNC = 0
+PATH_PLATEAU = 1
+PATH_CHAIN = 2
+
+# default run-count gate: the plateau scan costs ~2 fused passes per run
+# plus the doubling-table build, the chain one pass per band tap; below
+# a third of the band the plateau wins on CPU XLA (see the ``minplus``
+# micro-bench section)
+_PLATEAU_FRACTION = 3
+
+
+# ---------------------------------------------------------------------------
+# Exact convexity certificate
+# ---------------------------------------------------------------------------
+
+def _two_sum(a, b):
+    """Error-free transform: returns (s, e) with s = fl(a+b), s+e = a+b
+    exactly (Knuth's TwoSum, branch-free, valid in any IEEE precision)."""
+    s = a + b
+    a1 = s - b
+    b1 = s - a1
+    return s, (a - a1) + (b - b1)
+
+
+def _nonneg_sum3(x, y, z):
+    """Exact ``x + y + z >= 0`` for finite floats, elementwise.
+
+    Grows the expansion [x] by y then z (Shewchuk's grow-expansion):
+    the three output components are nonoverlapping with the last the
+    largest, so the sign of the exact sum is the sign of the first
+    nonzero component from the top.  Overflow to inf poisons the
+    residuals with NaNs, whose comparisons are all False — i.e. the
+    certificate conservatively fails.
+    """
+    s, e = _two_sum(x, y)
+    q1, h0 = _two_sum(z, e)
+    q2, h1 = _two_sum(q1, s)
+    return jnp.where(q2 != 0, q2 > 0, jnp.where(h1 != 0, h1 > 0, h0 >= 0))
+
+
+def convex_certificate(row: jax.Array) -> jax.Array:
+    """True iff ``row`` (..., DC+1) is certifiably convex in EXACT
+    arithmetic over its FP values: a finite prefix (inf only as a
+    suffix, no NaN / -inf anywhere) whose exact second differences are
+    all nonnegative.  This is the soundness condition for
+    :func:`monotone_dnc_step` — a rounded >= would admit ulp-level
+    concavities that break the Monge argmin monotonicity."""
+    f = jnp.isfinite(row)
+    clean = jnp.all((row == row) & (row > -jnp.inf), axis=-1)
+    suffix_ok = jnp.all(f[..., 1:] <= f[..., :-1], axis=-1)
+    if row.shape[-1] < 3:
+        return clean & suffix_ok
+    x, c, y = row[..., :-2], row[..., 1:-1], row[..., 2:]
+    tri = _nonneg_sum3(x, y, -2.0 * c)
+    # only triples fully inside the finite prefix constrain convexity
+    # (given suffix_ok, isfinite(y) implies x and c are finite too)
+    tri_ok = jnp.all(jnp.where(jnp.isfinite(y), tri, True), axis=-1)
+    return clean & suffix_ok & tri_ok
+
+
+def run_count(row: jax.Array) -> jax.Array:
+    """Number of maximal runs of bitwise-equal consecutive values."""
+    if row.shape[-1] < 2:
+        return jnp.ones(row.shape[:-1], jnp.int32)
+    neq = row[..., 1:] != row[..., :-1]
+    return 1 + jnp.sum(neq, axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Plateau (run-compressed) path
+# ---------------------------------------------------------------------------
+
+def _ilog2(n: jax.Array) -> jax.Array:
+    """floor(log2(n)) for traced positive int32."""
+    return 31 - jax.lax.clz(n.astype(jnp.int32))
+
+
+def plateau_step(row: jax.Array, prev: jax.Array) -> jax.Array:
+    """Run-compressed min-plus slot: bit-exact for any (DC+1,) ``row``
+    and (D+1,) ``prev`` free of NaN/-inf; cost scales with the number
+    of runs, not the band width.
+
+    Within a run ``row[j]`` is one constant, so the run's best
+    candidate is ``fl(c_w + min_{j in run} prev[d - j])`` — a window
+    minimum of the left-inf-padded carry served by a power-of-two
+    doubling table with two contiguous dynamic slices per run.
+    """
+    dc1 = row.shape[0]
+    d1 = prev.shape[0]
+    dt = prev.dtype
+    js = jnp.arange(dc1, dtype=jnp.int32)
+    if dc1 > 1:
+        neq = row[1:] != row[:-1]
+        rid = jnp.concatenate(
+            [jnp.zeros((1,), jnp.int32), jnp.cumsum(neq).astype(jnp.int32)])
+        n_runs = rid[-1] + 1
+    else:
+        rid = jnp.zeros((1,), jnp.int32)
+        n_runs = jnp.int32(1)
+    starts = jnp.full((dc1,), dc1 - 1, jnp.int32).at[rid].min(js)
+    ends = jnp.zeros((dc1,), jnp.int32).at[rid].max(js)
+
+    # doubling table over the padded carry: tab[k][i] = min prev_pad[i:i+2^k]
+    width = dc1 + d1
+    prev_pad = jnp.concatenate([jnp.full((dc1,), jnp.inf, dt), prev])
+    kmax = (dc1 - 1).bit_length() + 1 if dc1 > 1 else 1
+    tabs = [prev_pad]
+    for k in range(1, kmax):
+        s = 1 << (k - 1)
+        nxt = jnp.minimum(tabs[-1][:width - s], tabs[-1][s:])
+        tabs.append(jnp.concatenate([nxt, jnp.full((s,), jnp.inf, dt)]))
+    tab = jnp.concatenate(tabs)                   # (kmax * width,)
+
+    def run(w, new):
+        s_w = starts[w]
+        e_w = ends[w]
+        c_w = row[s_w]
+        kw = _ilog2(e_w - s_w + 1)
+        base = kw * width + dc1
+        lo = jax.lax.dynamic_slice(tab, (base - e_w,), (d1,))
+        hi = jax.lax.dynamic_slice(
+            tab, (base - s_w - jnp.left_shift(1, kw) + 1,), (d1,))
+        return jnp.minimum(new, c_w + jnp.minimum(lo, hi))
+
+    return jax.lax.fori_loop(
+        0, n_runs, run, jnp.full((d1,), jnp.inf, dt))
+
+
+def plateau_step_unrolled(row: jax.Array, prev: jax.Array,
+                          r_max: int) -> jax.Array:
+    """:func:`plateau_step` with the run loop statically unrolled to
+    ``r_max`` iterations — the engine's in-scan variant, where a
+    ``fori_loop``'s ~10 us/iteration dispatch overhead on CPU XLA would
+    eat the win.  ONLY sound when ``row`` has at most ``r_max`` runs
+    (and no NaN / -inf): the per-tile gate in ``core.schedule_jax``
+    checks exactly that before routing here.  Unroll slots beyond the
+    actual run count contribute +inf (their garbage window reads are
+    masked before the min), so any run count <= ``r_max`` is bit-exact.
+    """
+    dc1 = row.shape[0]
+    d1 = prev.shape[0]
+    dt = prev.dtype
+    js = jnp.arange(dc1, dtype=jnp.int32)
+    if dc1 > 1:
+        neq = row[1:] != row[:-1]
+        rid = jnp.concatenate(
+            [jnp.zeros((1,), jnp.int32), jnp.cumsum(neq).astype(jnp.int32)])
+        n_runs = rid[-1] + 1
+    else:
+        rid = jnp.zeros((1,), jnp.int32)
+        n_runs = jnp.int32(1)
+    rid_c = jnp.clip(rid, 0, r_max - 1)          # identity when sound
+    starts = jnp.full((r_max,), dc1 - 1, jnp.int32).at[rid_c].min(js)
+    ends = jnp.zeros((r_max,), jnp.int32).at[rid_c].max(js)
+
+    width = dc1 + d1
+    prev_pad = jnp.concatenate([jnp.full((dc1,), jnp.inf, dt), prev])
+    kmax = (dc1 - 1).bit_length() + 1 if dc1 > 1 else 1
+    tabs = [prev_pad]
+    for k in range(1, kmax):
+        s = 1 << (k - 1)
+        nxt = jnp.minimum(tabs[-1][:width - s], tabs[-1][s:])
+        tabs.append(jnp.concatenate([nxt, jnp.full((s,), jnp.inf, dt)]))
+    tab = jnp.concatenate(tabs)                   # (kmax * width,)
+
+    new = jnp.full((d1,), jnp.inf, dt)
+    for w in range(r_max):
+        s_w = starts[w]
+        e_w = ends[w]
+        c_w = row[s_w]
+        kw = _ilog2(e_w - s_w + 1)
+        base = kw * width + dc1
+        lo = jax.lax.dynamic_slice(tab, (base - e_w,), (d1,))
+        hi = jax.lax.dynamic_slice(
+            tab, (base - s_w - jnp.left_shift(1, kw) + 1,), (d1,))
+        cand = c_w + jnp.minimum(lo, hi)
+        new = jnp.minimum(new, jnp.where(w < n_runs, cand, jnp.inf))
+    return new
+
+
+# ---------------------------------------------------------------------------
+# Convex divide-and-conquer (SMAWK-style) path
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _dnc_levels(d1: int):
+    """Static binary-recursion structure over [0, d1): per level, the
+    segment midpoints (each d is a midpoint at exactly one level), each
+    cell's segment id at that level, and left/right-of-mid masks."""
+    segs = [(0, d1)]
+    levels = []
+    while segs:
+        mids = []
+        segid = np.zeros(d1, np.int32)
+        left = np.zeros(d1, bool)
+        right = np.zeros(d1, bool)
+        nxt = []
+        for si, (s, e) in enumerate(segs):
+            mid = (s + e) // 2
+            mids.append(mid)
+            segid[s:mid] = si
+            left[s:mid] = True
+            segid[mid + 1:e] = si
+            right[mid + 1:e] = True
+            if s < mid:
+                nxt.append((s, mid))
+            if mid + 1 < e:
+                nxt.append((mid + 1, e))
+        levels.append((np.asarray(mids, np.int32), segid, left, right))
+        segs = nxt
+    return tuple(levels)
+
+
+def monotone_dnc_step(row: jax.Array, prev: jax.Array):
+    """Row minima of the banded Monge matrix ``A[d][i] = prev[i] +
+    row[d - i]`` by level-synchronous divide and conquer.  Returns
+    ``(new, overflow)``; ``new`` equals the chain bit-for-bit whenever
+    ``row`` passes :func:`convex_certificate` and ``overflow`` is
+    False.  ``overflow`` flags a (tie-driven) candidate-buffer spill —
+    the caller must then discard ``new`` and use the chain.
+
+    Each level scans, for every midpoint ``d``, the candidate range
+    ``[max(lo_d, d - m', 0), min(hi_d, d, P)]`` (``m'``/``P``: last
+    finite index of row/prev — candidates outside are +inf and rows
+    beyond ``P + m'`` are skipped at zero cost), then tightens the
+    children's bounds with the dual-split rule from the module
+    docstring.  All-inf midpoints propagate their unshrunk range: the
+    monotonicity theorem only covers rows with a finite minimum.
+    """
+    from jax.ops import segment_max, segment_min
+
+    dc1 = row.shape[0]
+    d1 = prev.shape[0]
+    dt = prev.dtype
+    mprime = jnp.max(jnp.where(jnp.isfinite(row),
+                               jnp.arange(dc1, dtype=jnp.int32), -1))
+    pmax = jnp.max(jnp.where(jnp.isfinite(prev),
+                             jnp.arange(d1, dtype=jnp.int32), -1))
+    lo_b = jnp.zeros((d1,), jnp.int32)
+    hi_b = jnp.full((d1,), d1 - 1, jnp.int32)
+    new = jnp.full((d1,), jnp.inf, dt)
+    overflow = jnp.bool_(False)
+
+    for mids_np, segid_np, left_np, right_np in _dnc_levels(d1):
+        n_seg = len(mids_np)
+        cap = d1 + n_seg + 64
+        mids = jnp.asarray(mids_np)
+        lo_m = jnp.maximum(jnp.maximum(lo_b[mids], mids - mprime), 0)
+        hi_m = jnp.minimum(jnp.minimum(hi_b[mids], mids), pmax)
+        w = jnp.maximum(hi_m - lo_m + 1, 0)
+        off = jnp.cumsum(w) - w                          # exclusive prefix
+        total = off[-1] + w[-1]
+        overflow = overflow | (total > cap)
+        pos = jnp.arange(cap, dtype=jnp.int32)
+        seg = jnp.clip(jnp.searchsorted(off, pos, side="right").astype(
+            jnp.int32) - 1, 0, n_seg - 1)
+        i_idx = lo_m[seg] + pos - off[seg]
+        valid = (pos < total) & (i_idx >= lo_m[seg]) & (i_idx <= hi_m[seg])
+        i_c = jnp.clip(i_idx, 0, d1 - 1)
+        j_c = jnp.clip(mids[seg] - i_c, 0, dc1 - 1)
+        vals = jnp.where(valid, row[j_c] + prev[i_c],
+                         jnp.asarray(jnp.inf, dt))
+        segmin = segment_min(vals, seg, num_segments=n_seg,
+                             indices_are_sorted=True)
+        new = new.at[mids].set(segmin)
+        ismin = valid & (vals == segmin[seg])
+        arg_l = segment_min(jnp.where(ismin, i_c, d1), seg,
+                            num_segments=n_seg, indices_are_sorted=True)
+        arg_r = segment_max(jnp.where(ismin, i_c, -1), seg,
+                            num_segments=n_seg, indices_are_sorted=True)
+        has = (w > 0) & jnp.isfinite(segmin)
+        arg_l = jnp.where(has, arg_l, lo_m).astype(jnp.int32)
+        arg_r = jnp.where(has, arg_r, hi_m).astype(jnp.int32)
+        segid = jnp.asarray(segid_np)
+        hi_b = jnp.where(jnp.asarray(left_np),
+                         jnp.minimum(hi_b, arg_r[segid]), hi_b)
+        lo_b = jnp.where(jnp.asarray(right_np),
+                         jnp.maximum(lo_b, arg_l[segid]), lo_b)
+    return new, overflow
+
+
+# ---------------------------------------------------------------------------
+# Dispatcher
+# ---------------------------------------------------------------------------
+
+def monotone_step_with_path(row: jax.Array, prev: jax.Array, *,
+                            plateau_max: int | None = None):
+    """One DP slot ``new[d] = min_j row[j] + prev[d - j]`` with the
+    structure-aware dispatch: certified-convex rows -> D&C, rows with
+    at most ``plateau_max`` runs -> plateau scan, else -> chain.
+    Returns ``(new, path)`` with ``path`` one of PATH_DNC /
+    PATH_PLATEAU / PATH_CHAIN (the path actually used — a D&C buffer
+    spill reports PATH_CHAIN).  Bit-exact vs ``minplus_chain_step`` on
+    every path for any inputs."""
+    dc1 = row.shape[0]
+    if plateau_max is None:
+        plateau_max = max(dc1 // _PLATEAU_FRACTION, 1)
+    clean = jnp.all((row == row) & (row > -jnp.inf)) & \
+        jnp.all((prev == prev) & (prev > -jnp.inf))
+    convex = convex_certificate(row) & clean
+    plat = clean & (run_count(row) <= plateau_max)
+
+    def chain(_):
+        return minplus_chain_step(row[None], prev[None])[0], jnp.int32(
+            PATH_CHAIN)
+
+    def dnc(_):
+        new, ovf = monotone_dnc_step(row, prev)
+        return jax.lax.cond(
+            ovf, chain, lambda _: (new, jnp.int32(PATH_DNC)), None)
+
+    def plateau(_):
+        return plateau_step(row, prev), jnp.int32(PATH_PLATEAU)
+
+    branch = jnp.where(convex, 0, jnp.where(plat, 1, 2))
+    return jax.lax.switch(branch, [dnc, plateau, chain], None)
+
+
+def monotone_step(row: jax.Array, prev: jax.Array, *,
+                  plateau_max: int | None = None) -> jax.Array:
+    """Value-only form of :func:`monotone_step_with_path`."""
+    return monotone_step_with_path(row, prev, plateau_max=plateau_max)[0]
+
+
+def monotone_sweep(rows: jax.Array, d_total: int) -> jax.Array:
+    """Cost-only T-slot DP sweep through the monotone dispatcher;
+    bit-identical to ``minplus_sweep_cost`` on any input."""
+    d1 = d_total + 1
+    init = jnp.full((d1,), jnp.inf, rows.dtype).at[0].set(0.0)
+
+    def slot(prev, row):
+        new = monotone_step(row, prev)
+        return new, new
+
+    _, costs = jax.lax.scan(slot, init, rows)
+    return costs
+
+
+# ---------------------------------------------------------------------------
+# Numpy oracles (dispatch decisions + flags for the host COST-row path)
+# ---------------------------------------------------------------------------
+
+def _two_sum_np(a, b):
+    """Host-side :func:`_two_sum` (same exact arithmetic)."""
+    s = a + b
+    a1 = s - b
+    b1 = s - a1
+    return s, (a - a1) + (b - b1)
+
+
+def _nonneg_sum3_np(x, y, z):
+    with np.errstate(invalid="ignore"):
+        s, e = _two_sum_np(x, y)
+        q1, h0 = _two_sum_np(z, e)
+        q2, h1 = _two_sum_np(q1, s)
+    return np.where(q2 != 0, q2 > 0, np.where(h1 != 0, h1 > 0, h0 >= 0))
+
+
+def convex_certificate_np(rows: np.ndarray) -> np.ndarray:
+    """Host-side :func:`convex_certificate` (same exact arithmetic),
+    vectorized over leading axes of (..., DC+1) COST rows."""
+    rows = np.asarray(rows)
+    f = np.isfinite(rows)
+    with np.errstate(invalid="ignore"):
+        clean = np.all((rows == rows) & (rows > -np.inf), axis=-1)
+    suffix_ok = np.all(f[..., 1:] <= f[..., :-1], axis=-1)
+    if rows.shape[-1] < 3:
+        return clean & suffix_ok
+    x, c, y = rows[..., :-2], rows[..., 1:-1], rows[..., 2:]
+    tri = _nonneg_sum3_np(x, y, -2.0 * c)
+    tri_ok = np.all(np.where(np.isfinite(y), tri, True), axis=-1)
+    return clean & suffix_ok & tri_ok
+
+
+def run_count_np(rows: np.ndarray) -> np.ndarray:
+    rows = np.asarray(rows)
+    if rows.shape[-1] < 2:
+        return np.ones(rows.shape[:-1], np.int32)
+    return (1 + np.sum(rows[..., 1:] != rows[..., :-1], axis=-1)).astype(
+        np.int32)
+
+
+def monotone_path_ref(row: np.ndarray, plateau_max: int | None = None) -> int:
+    """Numpy oracle for the dispatch decision (ignoring D&C overflow):
+    which path :func:`monotone_step_with_path` selects for ``row``."""
+    row = np.asarray(row)
+    dc1 = row.shape[-1]
+    if plateau_max is None:
+        plateau_max = max(dc1 // _PLATEAU_FRACTION, 1)
+    if bool(convex_certificate_np(row)):
+        return PATH_DNC
+    with np.errstate(invalid="ignore"):
+        clean = bool(np.all((row == row) & (row > -np.inf)))
+    if clean and int(run_count_np(row)) <= plateau_max:
+        return PATH_PLATEAU
+    return PATH_CHAIN

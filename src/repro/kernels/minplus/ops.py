@@ -4,7 +4,9 @@ from __future__ import annotations
 
 import jax
 
-from .kernel import minplus_pallas, minplus_sweep_pallas
+from .kernel import (minplus_pallas, minplus_plateau_pallas,
+                     minplus_sweep_pallas)
+from .monotone import monotone_step, run_count_np
 from .ref import minplus_ref, minplus_sweep_ref
 
 
@@ -22,3 +24,24 @@ def minplus_sweep(rows: jax.Array, d_total: int, use_pallas: bool = True):
         return minplus_sweep_ref(rows, d_total)
     interpret = jax.default_backend() != "tpu"
     return minplus_sweep_pallas(rows, d_total, interpret=interpret)
+
+
+def minplus_monotone(row: jax.Array, prev: jax.Array,
+                     use_pallas: bool = True, r_max: int = 16):
+    """Structure-aware min-plus slot ``new[d] = min_j row[j] + prev[d-j]``
+    (cost-only — no argmin).
+
+    Non-Pallas: the full jnp dispatcher from ``monotone.py``
+    (certified-convex D&C / run-compressed plateau / chain fallback).
+    Pallas: the run-compressed plateau kernel when the row compresses
+    into at most ``r_max`` runs (checked host-side — this entry is
+    eager, like a decision-time call), else the chain kernel.  Every
+    path is bit-identical to ``minplus(...)``'s cost output."""
+    if not use_pallas:
+        return monotone_step(row, prev)
+    interpret = jax.default_backend() != "tpu"
+    import numpy as np
+    if int(run_count_np(np.asarray(row))) <= r_max:
+        return minplus_plateau_pallas(row, prev, r_max=r_max,
+                                      interpret=interpret)
+    return minplus_pallas(row, prev, interpret=interpret)[0]

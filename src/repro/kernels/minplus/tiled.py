@@ -105,14 +105,21 @@ def minplus_sweep_tiled(rows: jax.Array, d_total: int, *, tile: int = TILE,
     the DP carry is unchanged there, which is how the engine encodes
     pre-arrival slots — so the result rows from ``start`` on equal
     ``minplus_sweep_cost``'s; earlier rows are returned as +inf (they are
-    never inspected).  ``T`` must be a multiple of ``tile``.
+    never inspected).  A trailing partial tile is padded with identity
+    rows inside the sweep (the carry passes through them unchanged), so
+    any horizon length works.
     """
     T, dc1 = rows.shape
-    assert T % tile == 0, f"horizon {T} not a multiple of tile {tile}"
-    n_tiles = T // tile
+    rem = T % tile
+    if rem:
+        ident = jnp.full((tile - rem, dc1), jnp.inf, rows.dtype
+                         ).at[:, 0].set(0.0)
+        rows = jnp.concatenate([rows, ident], axis=0)
+    T_pad = rows.shape[0]
+    n_tiles = T_pad // tile
     d1 = d_total + 1
     init = jnp.full((1, d1), jnp.inf, rows.dtype).at[0, 0].set(0.0)
-    cost = jnp.full((T, d1), jnp.inf, rows.dtype)
+    cost = jnp.full((T_pad, d1), jnp.inf, rows.dtype)
     k0 = jnp.asarray(start, jnp.int32) // tile
 
     def body(carry):
@@ -126,4 +133,4 @@ def minplus_sweep_tiled(rows: jax.Array, d_total: int, *, tile: int = TILE,
 
     _, _, cost = jax.lax.while_loop(
         lambda c: c[0] < n_tiles, body, (k0, init, cost))
-    return cost
+    return cost[:T]

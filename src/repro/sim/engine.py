@@ -426,6 +426,27 @@ def _oasis_decision_point(osched: OASiS, cluster: ClusterSpec, job: Job,
         live_frac=live_frac, preempted=preempted)
 
 
+def _x64_run(impl: str, decide: bool):
+    """One x64 context held across a whole jax-engine run (CPU only).
+
+    Every ``enable_x64`` entry/exit inside ``best_schedule_fused`` flips
+    the thread-local config, and each flip knocks subsequent jit calls
+    off their C fast path — milliseconds of python dispatch per
+    decision.  Holding one context open makes the per-decision entries
+    no-ops (``_x64_context`` short-circuits when x64 is already on)
+    without changing any computed value.  Skipped in stepwise
+    (``decide``) mode: those generators suspend into caller policy code
+    that must not inherit the flag."""
+    import contextlib
+    if impl != "jax" or decide:
+        return contextlib.nullcontext()
+    import jax
+    if jax.default_backend() != "cpu" or jax.config.jax_enable_x64:
+        return contextlib.nullcontext()
+    from jax.experimental import enable_x64
+    return enable_x64(True)
+
+
 def _drive_oasis(cluster: ClusterSpec, jobs: Sequence[Job],
                  params: Optional[PriceParams], impl: str, check: bool,
                  quantum: Optional[int],
@@ -434,6 +455,21 @@ def _drive_oasis(cluster: ClusterSpec, jobs: Sequence[Job],
                  fleet: Optional[FleetTrace] = None,
                  ckpt_interval: int = CKPT_INTERVAL
                  ) -> Generator[DecisionPoint, object, SimResult]:
+    with _x64_run(impl, decide):
+        result = yield from _drive_oasis_gen(
+            cluster, jobs, params, impl, check, quantum, cancellations,
+            throughput, decide, fleet=fleet, ckpt_interval=ckpt_interval)
+    return result
+
+
+def _drive_oasis_gen(cluster: ClusterSpec, jobs: Sequence[Job],
+                     params: Optional[PriceParams], impl: str, check: bool,
+                     quantum: Optional[int],
+                     cancellations: Optional[Dict[int, int]],
+                     throughput: Optional[ThroughputFn], decide: bool,
+                     fleet: Optional[FleetTrace] = None,
+                     ckpt_interval: int = CKPT_INTERVAL
+                     ) -> Generator[DecisionPoint, object, SimResult]:
     T = cluster.T
     jmap = {j.jid: j for j in jobs}
     by_slot, cancel_slot = _group_events(jobs, cancellations, T)
@@ -1023,6 +1059,20 @@ def _drive_oasis_stream(cluster: ClusterSpec, jobs: Iterable[Job],
                         fleet: Optional[FleetTrace] = None,
                         ckpt_interval: int = CKPT_INTERVAL
                         ) -> Generator[DecisionPoint, object, SimResult]:
+    with _x64_run(impl, decide):
+        result = yield from _drive_oasis_stream_gen(
+            cluster, jobs, params, impl, window, check, quantum, decide,
+            fleet=fleet, ckpt_interval=ckpt_interval)
+    return result
+
+
+def _drive_oasis_stream_gen(cluster: ClusterSpec, jobs: Iterable[Job],
+                            params: PriceParams, impl: str, window: int,
+                            check: bool, quantum: Optional[int],
+                            decide: bool,
+                            fleet: Optional[FleetTrace] = None,
+                            ckpt_interval: int = CKPT_INTERVAL
+                            ) -> Generator[DecisionPoint, object, SimResult]:
     osched = OASiS(cluster, params, impl=impl, window=window)
     state = osched.state
     jmap: Dict[int, Job] = {}

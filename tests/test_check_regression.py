@@ -157,6 +157,49 @@ def test_quick_flag_mismatch_refuses():
     assert check(base, fresh, ratio=2.0, allow_config_mismatch=True) == 0
 
 
+def _with_minplus(doc, quick, chain_p50=0.006):
+    doc["minplus"] = {"quick": quick,
+                      "chain_dc64": {"p50": chain_p50},
+                      "plateau_stair_dc64": {"p50": 0.002}}
+    return doc
+
+
+def test_minplus_leaves_gated():
+    base = _with_minplus(_doc(), quick=False)
+    paths = dict(_leaves(base))
+    assert paths["minplus.chain_dc64.p50"] == 0.006
+    assert paths["minplus.plateau_stair_dc64.p50"] == 0.002
+    worse = _with_minplus(_doc(), quick=False, chain_p50=0.1)  # 16x slower
+    assert check(base, worse, ratio=2.0) == 1
+    assert check(base, _with_minplus(_doc(), quick=False), ratio=2.0) == 0
+
+
+def test_minplus_quick_mismatch_refuses():
+    """The minplus micro-bench measures different shapes in --quick mode:
+    diffing quick against full must refuse (exit 2), not silently
+    compare different workloads."""
+    base = _with_minplus(_doc(), quick=False)
+    fresh = _with_minplus(_doc(), quick=True)
+    assert check(base, fresh, ratio=2.0) == 2
+    assert check(fresh, base, ratio=2.0) == 2              # and vice versa
+    assert check(base, fresh, ratio=2.0, allow_config_mismatch=True) == 0
+
+
+def test_decision_stages_subrecord_never_gated():
+    """The per-stage profiling sub-record rides inside decision sections
+    as diagnostics: it must produce no gated leaves and regressing it
+    must not fire the gate."""
+    base, fresh = _doc(), _doc()
+    base["sim_scale"]["decision"]["stages"] = {
+        "row_build": 1.0, "dp_sweep": 2.0, "backtrack": 0.1,
+        "placement": 0.1, "decisions": 100.0}
+    fresh["sim_scale"]["decision"]["stages"] = {
+        "row_build": 900.0, "dp_sweep": 900.0, "backtrack": 900.0,
+        "placement": 900.0, "decisions": 100.0}
+    assert not any("stages" in p for p in dict(_leaves(base)))
+    assert check(base, fresh, ratio=2.0) == 0
+
+
 def test_scale_dims_mismatch_refuses():
     base, fresh = _doc(), _doc(scale_T=150, quick_scale=True)
     assert check(base, fresh, ratio=2.0) == 2

@@ -119,6 +119,9 @@ def test_model_chunked_ssd_matches_kernel():
 @pytest.mark.parametrize("T,dc1,d1,start", [
     (64, 7, 21, 0), (128, 9, 33, 37), (192, 33, 129, 64),
     (128, 600, 800, 5),            # wide band: block-scan chain path
+    (50, 7, 21, 0),                # rolling serving window: T % tile != 0
+    (100, 9, 33, 12),              # partial trailing tile + dynamic start
+    (129, 5, 17, 64),              # one slot past a tile boundary
 ])
 @pytest.mark.parametrize("inf_frac", [0.0, 0.4])
 def test_minplus_sweep_tiled_matches_cost(T, dc1, d1, start, inf_frac):

@@ -174,6 +174,91 @@ def test_row_cache_reuses_valid_tiles():
     assert np.array_equal(cache.valid[1:], valid_before[1:])
 
 
+def _table_roundtrip(seed: int, n_rounds: int = 4, n_ops: int = 3,
+                     drop_residency: bool = False):
+    """Order-cache property: the sorted-order/cumsum tables the engine
+    leaves in ``RowCache.tables`` — span-patched via ``_sorted_fill`` on
+    re-solves, or served stale-free from a fresh build — must equal a
+    from-scratch ``_sorted_fill_lanes`` re-sort at the current state
+    version, bit for bit, after ANY interleaving of commit/release/
+    advance.  ``drop_residency=True`` touches the host-mutable ``state.g``
+    between rounds so ``patch_spans`` turns unknowable and the rebuild
+    (rather than patch) path is the one under test."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import schedule_jax as S
+
+    T = 24
+    cluster = make_cluster(T=T, H=3, K=3)
+    jobs = make_jobs(6, T=T, seed=seed % 997, small=True)
+    params = price_params_from_jobs(jobs, cluster)
+    state = PriceState(cluster, params)
+    job = jobs[0]
+    cache = S.RowCache.empty(state, job)
+    if cache is None:
+        pytest.skip("degenerate job")
+    rng = np.random.default_rng(seed)
+    committed = []
+    with S._x64_context("auto"):
+        dtype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+        for rounds in range(n_rounds):
+            cache.sync(state)
+            S.best_schedule_fused(job, state, row_cache=cache)
+            if cache.tables is None:
+                pytest.skip("order-cache footprint gate off at this shape")
+            assert cache.tables_version == state.version, (seed, rounds)
+            got = tuple(np.asarray(t) for t in S._tabs_get(cache.tables))
+            # from-scratch reference at the CURRENT state: one fused
+            # full-table build over this job's lane
+            T_now = state.horizon
+            T_pad = S._pad_tiles(T_now)
+            m_pad, _ = S._shape_bucket(job)
+            psd = S._padded_state(state, dtype, T_pad)
+            la, _ = S._job_arrays_tiled(job, state, T_now, T_pad, m_pad,
+                                        dtype)
+            resbw = jnp.asarray(la[0], dtype)
+            full = S._sorted_fill_lanes(psd[9], psd[10], psd[0], psd[1],
+                                        psd[2], psd[3], resbw[None])
+            want = tuple(np.asarray(t[0]) for t in full)
+            for k, (g_t, w_t) in enumerate(zip(got, want)):
+                assert np.array_equal(g_t, w_t), (seed, rounds, k)
+            _apply_random_ops(rng, state, jobs, committed, n_ops,
+                              allow_advance=rounds == n_rounds - 2)
+            if drop_residency:
+                _ = state.g      # host access: spans unknowable -> rebuild
+
+
+@pytest.mark.parametrize("seed", range(3))
+@pytest.mark.parametrize("drop_residency", [False, True])
+def test_order_cache_tables_randomized(seed, drop_residency):
+    """Patched sorted-order/cumsum tables == full re-sorts (both the
+    device span-patch path and the residency-drop rebuild path)."""
+    _table_roundtrip(200 + seed, drop_residency=drop_residency)
+
+
+def test_order_cache_gate_off_keeps_inline_path(monkeypatch):
+    """Above the REPRO_ORDER_CACHE_MAX footprint the engine must not
+    build tables at all (the decide loop keeps the inline per-tile
+    argsorts) — and decisions stay bit-identical either way."""
+    from repro.core.schedule_jax import RowCache, best_schedule_fused
+    T = 24
+    cluster = make_cluster(T=T, H=3, K=3)
+    jobs = make_jobs(6, T=T, seed=7, small=True)
+    params = price_params_from_jobs(jobs, cluster)
+    state = PriceState(cluster, params)
+    job = jobs[0]
+    cache = RowCache.empty(state, job)
+    if cache is None:
+        pytest.skip("degenerate job")
+    want = best_schedule_fused(job, state)
+    monkeypatch.setenv("REPRO_ORDER_CACHE_MAX", "1")
+    got = best_schedule_fused(job, state, row_cache=cache)
+    assert cache.tables is None and cache.tables_version == -1
+    assert (got is None) == (want is None)
+    if want is not None:
+        assert got.cost == want.cost and got.finish == want.finish
+
+
 # -- hypothesis variant ------------------------------------------------------
 
 try:
@@ -190,3 +275,13 @@ if HAVE_HYPOTHESIS:
            n_ops=st.integers(1, 5))
     def test_host_row_cache_hypothesis(seed, window, n_rounds, n_ops):
         _host_roundtrip(seed, window, n_rounds=n_rounds, n_ops=n_ops)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2 ** 16),
+           n_rounds=st.integers(1, 5),
+           n_ops=st.integers(1, 4),
+           drop_residency=st.booleans())
+    def test_order_cache_tables_hypothesis(seed, n_rounds, n_ops,
+                                           drop_residency):
+        _table_roundtrip(seed, n_rounds=n_rounds, n_ops=n_ops,
+                         drop_residency=drop_residency)
