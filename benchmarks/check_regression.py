@@ -32,6 +32,12 @@ Compared leaves:
   scheduler keeps a ``ratio``-times smaller share of its churn-free
   utility than the baseline recorded.  ``churn_quick`` is the CI smoke
   — never gated (see ``CHURN_SECTIONS``)
+* ``obs.derived.*`` — the flight-recorder probe's deterministic
+  efficiency figures (schema v5): ``early_exit_frac`` and
+  ``device_uploads`` gate lower-is-better, ``row_cache_hit_rate``
+  inverted; a drift here is a semantic efficiency regression (the
+  row cache stopped hitting, the early exit stopped firing, full-table
+  uploads reappeared) even when wall clocks stay within ratio
 
 A section is only ever compared against a like-configured baseline
 (``quick`` flag for the decision sections; T/H/K/n_jobs dims for the
@@ -77,6 +83,21 @@ SERVING_SECTIONS = ("serving",)
 # drop here is a semantic robustness regression, not runner weather.
 CHURN_SECTIONS = ("churn",)
 
+# gated flight-recorder sections (schema v5): the obs probe's derived
+# efficiency figures are deterministic counter ratios, so like churn
+# retention a drift is semantic — the row cache stopped hitting, the
+# early exit stopped firing, or full-table uploads reappeared on the
+# commit path.  ``early_exit_frac`` / ``device_uploads`` are
+# lower-is-better leaves; ``row_cache_hit_rate`` is higher-is-better
+# (inverted like the throughputs).  ``preempted`` and the raw counter
+# snapshot are informational — preemption counts track the churn
+# workload, not an efficiency property.
+OBS_SECTIONS = ("obs",)
+
+# the gated derived leaves of the obs section, by direction
+OBS_LEAVES = ("early_exit_frac", "device_uploads")
+OBS_RATE_LEAVES = ("row_cache_hit_rate",)
+
 
 def _leaves(doc: dict) -> Iterator[Tuple[str, float]]:
     """Yield (path, value) for every gated numeric leaf in ``doc``."""
@@ -103,6 +124,11 @@ def _leaves(doc: dict) -> Iterator[Tuple[str, float]]:
     for case, stats in sorted(mp.items()):
         if isinstance(stats, dict) and stats.get("p50") is not None:
             yield f"minplus.{case}.p50", float(stats["p50"])
+    for section in OBS_SECTIONS:
+        derived = doc.get(section, {}).get("derived", {})
+        for name in OBS_LEAVES:
+            if name in derived:
+                yield f"{section}.derived.{name}", float(derived[name])
 
 
 def _rate_leaves(doc: dict) -> Iterator[Tuple[str, float]]:
@@ -119,6 +145,11 @@ def _rate_leaves(doc: dict) -> Iterator[Tuple[str, float]]:
                 continue
             for variant, ret in sorted(per_variant.items()):
                 yield f"{section}.retention.{sched}.{variant}", float(ret)
+    for section in OBS_SECTIONS:
+        derived = doc.get(section, {}).get("derived", {})
+        for name in OBS_RATE_LEAVES:
+            if name in derived:
+                yield f"{section}.derived.{name}", float(derived[name])
 
 
 def _section_quick(doc: dict, section: str):
@@ -151,6 +182,8 @@ def _config_mismatches(base: dict, fresh: dict) -> Dict[str, str]:
                                "quick") for section in SERVING_SECTIONS})
     dim_sets.update({section: ("T", "H", "K", "n_jobs", "levels", "quick")
                      for section in CHURN_SECTIONS})
+    dim_sets.update({section: ("T", "H", "K", "n_jobs", "quick")
+                     for section in OBS_SECTIONS})
     for section, dims in dim_sets.items():
         bs, fs = base.get(section, {}), fresh.get(section, {})
         if bs and fs and any(bs.get(d) != fs.get(d) for d in dims):

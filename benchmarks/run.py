@@ -34,7 +34,14 @@ plus preemption counters; churned runs execute with capacity checks
 on); ``churn_quick`` is its CI-smoke shrink.  ``minplus`` records the
 structure-aware DP slot kernel micro-bench (chain vs monotone dispatch
 vs plateau across band widths, convex and adversarial rows); its
-per-case p50s are regression-gated.  Under ``REPRO_DECIDE_PROFILE=1``
+per-case p50s are regression-gated.  ``obs`` (schema v5) runs a seeded
+OASiS-on-jax episode plus a reactive episode under fleet churn with the
+``repro.obs`` flight recorder installed and records the counter
+snapshot plus derived health figures (row-cache hit rate, early-exit
+tile fraction, device uploads, preemptions) — the derived leaves are
+regression-gated so a silent efficiency loss (cache stops hitting,
+early exit stops firing, uploads reappear on the commit path) fails CI
+even when wall clocks stay within ratio.  Under ``REPRO_DECIDE_PROFILE=1``
 the ``simscale``/``serving`` sections additionally record the fused
 engine's per-stage wall clock (row build / DP sweep / backtrack /
 placement) as a ``decision.stages`` sub-record — diagnostic only
@@ -62,7 +69,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 SECTIONS = ("fig3", "fig4", "fig5", "fig6", "latency", "decision",
             "simspeed", "scale", "simscale", "simscale_quick", "serving",
             "serving_quick", "churn", "churn_quick", "scenarios", "rl",
-            "kernels", "minplus")
+            "kernels", "minplus", "obs")
 
 
 def _is_num(x) -> bool:
@@ -77,10 +84,11 @@ def _num_dict(sec: str, name: str, d, problems) -> None:
 
 
 def validate_tracked(payload: dict) -> list:
-    """Structural validation of a bench_decision payload (v2/v3/v4; v3
-    added the ``serving``/``serving_quick`` sections, v4 adds
-    ``churn``/``churn_quick`` — readers stay backward-compatible with
-    committed v2/v3 baselines).
+    """Structural validation of a bench_decision payload (v2..v5; v3
+    added the ``serving``/``serving_quick`` sections, v4 added
+    ``churn``/``churn_quick``, v5 adds the flight-recorder ``obs``
+    section — readers stay backward-compatible with committed v2..v4
+    baselines).
 
     Returns a list of problems (empty = valid).  ``_merge_json`` refuses
     to write an invalid file: a malformed section used to be caught only
@@ -88,21 +96,23 @@ def validate_tracked(payload: dict) -> list:
     time the broken file was already committed as the baseline.
 
     >>> from benchmarks.run import validate_tracked
-    >>> validate_tracked({"schema": "bench_decision/v4"})
+    >>> validate_tracked({"schema": "bench_decision/v5"})
     []
-    >>> validate_tracked({"schema": "bench_decision/v4",
+    >>> validate_tracked({"schema": "bench_decision/v5",
     ...                   "decision_seconds": {"jax": {"p50": 0.01}}})
     ['decision_seconds.jax: needs finite p50/p95/mean']
     """
     problems = []
     if payload.get("schema") not in ("bench_decision/v2",
                                      "bench_decision/v3",
-                                     "bench_decision/v4"):
-        problems.append(f"schema: expected 'bench_decision/v2'..'v4', "
+                                     "bench_decision/v4",
+                                     "bench_decision/v5"):
+        problems.append(f"schema: expected 'bench_decision/v2'..'v5', "
                         f"got {payload.get('schema')!r}")
     known = {"schema", "platform", "python", "decision_seconds", "sim_v2",
              "sim_scale", "sim_scale_quick", "sim_scale_100x", "serving",
-             "serving_quick", "churn", "churn_quick", "rl", "minplus"}
+             "serving_quick", "churn", "churn_quick", "rl", "minplus",
+             "obs"}
     for sec in sorted(set(payload) - known):
         problems.append(f"{sec}: unknown section (known: {sorted(known)})")
 
@@ -198,6 +208,15 @@ def validate_tracked(payload: dict) -> list:
                 continue
             for sched, per_variant in per_sched.items():
                 _num_dict(sec, f"{name}.{sched}", per_variant, problems)
+    ob = _section("obs")
+    if ob is not None:
+        for dim in ("T", "H", "K", "n_jobs"):
+            if not isinstance(ob.get(dim), int):
+                problems.append(f"obs.{dim}: expected int")
+        if not isinstance(ob.get("quick"), bool):
+            problems.append("obs.quick: expected bool")
+        _num_dict("obs", "counters", ob.get("counters"), problems)
+        _num_dict("obs", "derived", ob.get("derived"), problems)
     mp = _section("minplus")
     if mp is not None:
         for case, stats in mp.items():
@@ -243,8 +262,8 @@ def _merge_json(path: str, updates: dict) -> None:
     payload.pop("quick", None)                  # v1 leftover
     payload.update(updates)
     payload.update({
-        # always write the current version; reads accept v2/v3 baselines
-        "schema": "bench_decision/v4",
+        # always write the current version; reads accept v2..v4 baselines
+        "schema": "bench_decision/v5",
         "platform": platform.platform(),
         "python": platform.python_version(),
     })
@@ -337,6 +356,68 @@ def _minplus_micro(quick: bool = False):
                             f"{p50 * 1e6:.0f},")
             tracked[f"{name}_dc{dc1 - 1}"] = {"p50": p50}
     return rows_out, tracked
+
+
+def _obs_probe(quick: bool = False):
+    """Flight-recorder probe: one seeded OASiS episode on the fused jax
+    engine plus one reactive episode under deterministic fleet churn,
+    both run with a ``repro.obs`` recorder installed.
+
+    Returns (CSV rows, tracked record).  The record carries the raw
+    counter snapshot and four derived health figures:
+
+    * ``row_cache_hit_rate``   — burst re-solve tiles served from the
+      per-job ``RowCache`` (higher is better; gated inverted)
+    * ``early_exit_frac``      — DP tiles actually visited / horizon
+      tiles (lower is better: the monotone early-exit is working)
+    * ``device_uploads``       — full-table host->device uploads on the
+      commit path (lower is better: the slot-window add path holds)
+    * ``preempted``            — checkpoint/restart preemptions under
+      the seeded churn trace (deterministic; drift means the churn
+      engine changed behaviour)
+
+    All figures are deterministic in the seeds, so unlike the wall-clock
+    leaves a drift here is semantic, not runner weather.
+    """
+    from repro import obs as obslib
+    from repro.sim import engine
+    from repro.sim.fleet import make_fleet_trace
+    from repro.sim.workload import make_cluster, make_jobs
+
+    # full mode needs T >= 3 TILE-slot blocks (TILE=64): with a 2-tile
+    # horizon every commit dirties the visited tile and the row-cache
+    # hit rate is identically zero — no signal to gate
+    T, HK, n_jobs = (48, 6, 24) if quick else (192, 10, 64)
+    cluster = make_cluster(T=T, H=HK, K=HK)
+    jobs = make_jobs(n_jobs, T=T, seed=0, small=True)
+    ob = obslib.Obs()
+    t0 = time.perf_counter()
+    engine.run(cluster, jobs, scheduler="oasis", impl="jax", obs=ob)
+    # MTBF/MTTR scaled to the horizon so both modes see failures land on
+    # RUNNING jobs (the scoreboard churn_trace at these dims fails
+    # servers between the short jobs — zero preemptions, no signal)
+    fleet = make_fleet_trace(cluster, seed=1, mtbf=T / 1.6, mttr=T / 12)
+    engine.run(cluster, jobs, scheduler="dorm", fleet=fleet, obs=ob)
+    wall = time.perf_counter() - t0
+    c = dict(ob.metrics.snapshot()["counters"])
+    tiles_total = c.get("decide.cache_tiles_total", 0.0)
+    tiles_horizon = c.get("decide.tiles_horizon", 0.0)
+    derived = {
+        "row_cache_hit_rate": (c.get("decide.cache_tiles_valid", 0.0)
+                               / tiles_total) if tiles_total else 0.0,
+        "early_exit_frac": (c.get("decide.tiles_visited", 0.0)
+                            / tiles_horizon) if tiles_horizon else 1.0,
+        "device_uploads": c.get("price.device_uploads", 0.0),
+        "preempted": c.get("engine.preemptions", 0.0),
+    }
+    tracked = {"T": T, "H": HK, "K": HK, "n_jobs": n_jobs,
+               "quick": bool(quick), "counters": c, "derived": derived}
+    rows = [f"obs_probe[jobs={n_jobs};T={T}],{wall * 1e6:.0f},"
+            f"cache_hit={derived['row_cache_hit_rate']:.3f};"
+            f"early_exit={derived['early_exit_frac']:.3f};"
+            f"uploads={derived['device_uploads']:.0f};"
+            f"preempted={derived['preempted']:.0f}"]
+    return rows, tracked
 
 
 def _setup_jax_cache() -> None:
@@ -468,6 +549,12 @@ def main() -> None:
         mp_rows, mp_tracked = _minplus_micro(quick=args.quick)
         rows += mp_rows
         tracked["minplus"] = mp_tracked
+    if "obs" in which:
+        # flight-recorder probe: deterministic efficiency counters
+        # (row-cache hit rate, early-exit depth, uploads, preemptions)
+        ob_rows, ob_tracked = _obs_probe(quick=args.quick)
+        rows += ob_rows
+        tracked["obs"] = ob_tracked
     if args.json and tracked:
         _merge_json(args.json, tracked)
     if "scenarios" in which:

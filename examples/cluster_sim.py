@@ -45,6 +45,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
+from repro import obs as obslib
 from repro.sim import make_cluster, make_jobs, simulate
 from repro.sim.scenarios import ALL_SCHEDULERS, SCENARIOS, run_scenario
 
@@ -134,9 +135,10 @@ def run_one_scenario(args):
         print("\n== utility retention under fleet churn "
               "(churned / churn-free; higher is better) ==")
         for r in churned:
+            lf = f" live={r.live_frac:.2f}" if r.live_frac is not None else ""
             print(f"{r.scheduler:6s} {r.variant:14s} ret={r.retention:6.3f} "
-                  f"preempted={r.preempted:3d} dropped={r.preempt_dropped:3d}  "
-                  f"{bar(r.retention, 1.0, width=24)}")
+                  f"preempted={r.preempted:3d} dropped={r.preempt_dropped:3d}"
+                  f"{lf}  {bar(r.retention, 1.0, width=24)}")
     streamed = [r for r in rows if r.decisions_per_sec is not None]
     if streamed:
         print("\n== sustained throughput (streamed trace) ==")
@@ -173,6 +175,11 @@ def main():
                          "fused engine (row build / DP sweep / backtrack "
                          "/ placement) and print the breakdown; roughly "
                          "doubles decision latency")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record the run with the flight recorder "
+                         "(repro.obs) and write a Chrome-trace / Perfetto "
+                         "JSON with the metrics snapshot embedded — open "
+                         "it at https://ui.perfetto.dev")
     args = ap.parse_args()
     if args.profile:
         os.environ["REPRO_DECIDE_PROFILE"] = "1"
@@ -185,10 +192,18 @@ def main():
     if args.scheduler == "learned" and not args.policy_ckpt:
         ap.error("--scheduler learned requires --policy-ckpt "
                  "(a repro.rl.train checkpoint directory)")
+    ob = obslib.enable() if args.trace else None
     if args.scenario:
         run_one_scenario(args)
     else:
         run_figs(args)
+    if ob is not None:
+        n = ob.export_chrome(args.trace)
+        snap = ob.metrics.snapshot()
+        print(f"\n== flight recorder ==\n{n} trace events -> {args.trace} "
+              f"({len(snap['counters'])} counters, "
+              f"{len(snap['histograms'])} histograms embedded)")
+        obslib.disable()
     if args.profile:
         print_decide_profile()
 

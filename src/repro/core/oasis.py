@@ -16,6 +16,7 @@ import numpy as np
 from .pricing import PriceParams, PriceState
 from .subroutine import best_schedule, best_schedule_ref
 from .types import ClusterSpec, Job, Schedule
+from .. import obs as _obs
 
 
 class OASiS:
@@ -81,15 +82,20 @@ class OASiS:
         so an external decider (the rl/ env's admission gate) can veto or
         confirm the commitment."""
         t0 = time.perf_counter()
-        if self.impl == "ref":
-            sched = best_schedule_ref(job, self.state)
-        elif self.impl == "jax":
-            sched = best_schedule(job, self.state, use_jax=True)
-        elif self.impl == "loop":
-            sched = best_schedule(job, self.state, rows_impl="loop")
-        else:
-            sched = best_schedule(job, self.state)
-        self.decision_seconds.append(time.perf_counter() - t0)
+        with _obs.span("decide", jid=job.jid, impl=self.impl):
+            if self.impl == "ref":
+                sched = best_schedule_ref(job, self.state)
+            elif self.impl == "jax":
+                sched = best_schedule(job, self.state, use_jax=True)
+            elif self.impl == "loop":
+                sched = best_schedule(job, self.state, rows_impl="loop")
+            else:
+                sched = best_schedule(job, self.state)
+        dt = time.perf_counter() - t0
+        self.decision_seconds.append(dt)
+        if _obs.ENABLED:
+            _obs.inc("decide.decisions")
+            _obs.observe("decide.seconds", dt)
         return sched
 
     def on_arrival(self, job: Job) -> Optional[Schedule]:
@@ -126,8 +132,9 @@ class OASiS:
         from .schedule_jax import (_materialize, _state_arrays, _x64_context,
                                    best_schedule_fused, decide_burst)
         times: List[float] = []
-        pends = decide_burst([jobs[i] for i in order], self.state,
-                             timings=times)
+        with _obs.span("decide_burst", n=len(jobs), impl=self.impl):
+            pends = decide_burst([jobs[i] for i in order], self.state,
+                                 timings=times)
         prices_moved = False
         with _x64_context("auto"):
             dtype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
@@ -150,14 +157,19 @@ class OASiS:
                 else:
                     # prices moved: incremental re-solve over cached rows
                     t0 = time.perf_counter()
-                    pend.cache.sync(self.state)
-                    sched = best_schedule_fused(jobs[i], self.state,
-                                                row_cache=pend.cache)
+                    with _obs.span("decide.row_cache_sync",
+                                   jid=jobs[i].jid):
+                        pend.cache.sync(self.state)
+                    with _obs.span("decide.resolve", jid=jobs[i].jid):
+                        sched = best_schedule_fused(jobs[i], self.state,
+                                                    row_cache=pend.cache)
                     # the speculative batch share spent on this job is real
                     # per-decision cost too — don't under-report latency
                     self.decision_seconds.append(
                         time.perf_counter() - t0 + times[pos])
                     out[i] = self._resolve(jobs[i], sched)
+        if _obs.ENABLED:
+            _obs.inc("decide.decisions", len(jobs))
         return out
 
     def _resolve(self, job: Job, sched: Optional[Schedule]

@@ -56,6 +56,7 @@ from typing import Optional, Sequence
 import numpy as np
 
 from .types import ClusterSpec, Job, R
+from .. import obs as _obs
 
 
 @dataclasses.dataclass(frozen=True)
@@ -326,6 +327,9 @@ class PriceState:
             return
         if shift < 0:
             raise ValueError(f"advance({now}) before origin {self.origin}")
+        if _obs.ENABLED:
+            _obs.inc("price.window_advances")
+            _obs.inc("price.window_slots_retired", shift)
         W = self._g_host.shape[0]
         k = min(shift, W)
         self.retired_gpu_slots += float(self._g_host[:k, :, 0].sum())
@@ -478,12 +482,18 @@ class PriceState:
         self._dev = tuple(dev)
 
     def commit(self, job: Job, workers: dict, ps: dict) -> None:
-        self._apply(workers, ps, job.worker_res, job.ps_res, 1.0)
+        with _obs.span("price.commit", jid=job.jid):
+            self._apply(workers, ps, job.worker_res, job.ps_res, 1.0)
+        if _obs.ENABLED:
+            _obs.inc("price.commits")
 
     def release(self, job: Job, workers: dict, ps: dict) -> None:
         """Inverse of commit — used when a running job is preempted/killed
         (fault handling), not part of the paper's committed schedules."""
-        self._apply(workers, ps, job.worker_res, job.ps_res, -1.0)
+        with _obs.span("price.release", jid=job.jid):
+            self._apply(workers, ps, job.worker_res, job.ps_res, -1.0)
+        if _obs.ENABLED:
+            _obs.inc("price.releases")
 
     # -- fleet churn (sim/fleet.py): capacity-aware headroom ----------------
     def _server_pool(self, pool: str):
@@ -518,6 +528,8 @@ class PriceState:
         delta = np.zeros((win, host.shape[1], R))
         delta[t0 - w0:, server, :] = amt
         self._apply_deltas([(pool_i, host, w0, delta)], negative=False)
+        if _obs.ENABLED:
+            _obs.inc("price.server_blocks")
         return float(amt[:, 0].sum())
 
     def unblock_server(self, pool: str, server: int, t0: int = 0) -> float:
@@ -538,6 +550,8 @@ class PriceState:
         delta = np.zeros((win, host.shape[1], R))
         delta[t0 - w0:, server, :] = -amt
         self._apply_deltas([(pool_i, host, w0, delta)], negative=True)
+        if _obs.ENABLED:
+            _obs.inc("price.server_unblocks")
         return float(amt[:, 0].sum())
 
     def dirty_spans_since(self, version: int):
@@ -627,6 +641,8 @@ class PriceState:
         if v.shape[1] == 0:
             v = np.zeros((self.horizon, 1, R))
         self.device_uploads += 1
+        if _obs.ENABLED:
+            _obs.inc("price.device_uploads")
         # jnp.array (not asarray): jax CPU conversion can be zero-copy for
         # aligned buffers, and an aliased residency would silently track
         # (and double-count) subsequent host-mirror writes

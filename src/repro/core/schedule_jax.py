@@ -65,6 +65,7 @@ from ..kernels.minplus.ref import minplus_sweep_cost, minplus_sweep_ref
 from ..kernels.minplus.tiled import TILE, minplus_chain_step
 from .pricing import PriceState, size_bucket as _bucket
 from .types import Job, R, Schedule
+from .. import obs as _obs
 
 # Stand-in for "unbounded" per-server instance capacity (job has no demand
 # on some resource): big enough to never bind, small enough that prefix sums
@@ -885,9 +886,13 @@ class RowCache:
             spans = state.dirty_spans_since(self.version)
             if spans is None:
                 self.invalidate_all()
+                if _obs.ENABLED:
+                    _obs.inc("decide.row_cache_full_invalidations")
             else:
                 self.invalidate_spans(spans)
             self.version = state.version
+            if _obs.ENABLED:
+                _obs.inc("decide.row_cache_syncs")
         return self
 
 
@@ -984,6 +989,8 @@ def _padded_state(state: PriceState, dtype, T_pad: int):
     key = (state.version, T_pad, jnp.dtype(dtype).name)
     hit = _pad_cache.get(state)
     if hit is not None and hit[0] == key:
+        if _obs.ENABLED:
+            _obs.inc("decide.pad_hit")
         return hit[1]
     T = g.shape[0]
     if hit is not None and hit[0][1:] == key[1:]:
@@ -1003,7 +1010,11 @@ def _padded_state(state: PriceState, dtype, T_pad: int):
                 hit = (key, (g_pad, v_pad, wcaps, scaps, U1, U2, L1, L2,
                              pmin, p_pad, q_pad))
                 _pad_cache[state] = hit
+                if _obs.ENABLED:
+                    _obs.inc("decide.pad_patch")
                 return hit[1]
+    if _obs.ENABLED:
+        _obs.inc("decide.pad_full")
     g_pad, v_pad, pmin, p_pad, q_pad = _pad_state(
         g, v, wcaps, scaps, U1, U2, L1, L2, T_pad=T_pad)
     hit = (key, (g_pad, v_pad, wcaps, scaps, U1, U2, L1, L2, pmin,
@@ -1157,9 +1168,11 @@ def _materialize(pend: _Pending, state: PriceState, sd, dtype
     profiling = _profiling()
     if profiling:
         t_bt = time.perf_counter()
-    total_cost, d_left, d_slots = jax.device_get(_backtrack(
-        pend.rows_full[pend.lane], pend.cost_full[pend.lane],
-        jnp.int32(best_t), jnp.int32(job.workload), jnp.int32(pend.t_start)))
+    with _obs.span("decide.backtrack", jid=job.jid):
+        total_cost, d_left, d_slots = jax.device_get(_backtrack(
+            pend.rows_full[pend.lane], pend.cost_full[pend.lane],
+            jnp.int32(best_t), jnp.int32(job.workload),
+            jnp.int32(pend.t_start)))
     if profiling:
         _profile_acc["backtrack"] += time.perf_counter() - t_bt
     pend.cost = float(total_cost)
@@ -1188,11 +1201,12 @@ def _materialize(pend: _Pending, state: PriceState, sd, dtype
     Zc[len(ts_active):] = 0.0
     if profiling:
         t_pl = time.perf_counter()
-    y, z = jax.device_get(_place_slots(sd, jnp.asarray(
-        np.concatenate([job.worker_res, job.ps_res,
-                        [job.worker_bw, job.ps_bw]]), dtype),
-        jnp.asarray(Wc, dtype), jnp.asarray(Zc, dtype),
-        jnp.asarray(ts), wa))
+    with _obs.span("decide.placement", jid=job.jid, slots=len(ts_active)):
+        y, z = jax.device_get(_place_slots(sd, jnp.asarray(
+            np.concatenate([job.worker_res, job.ps_res,
+                            [job.worker_bw, job.ps_bw]]), dtype),
+            jnp.asarray(Wc, dtype), jnp.asarray(Zc, dtype),
+            jnp.asarray(ts), wa))
     if profiling:
         _profile_acc["placement"] += time.perf_counter() - t_pl
     H, K = state.cluster.H, state.cluster.K
@@ -1242,6 +1256,11 @@ def _empty_cache(b_pad: int, T_pad: int, n_tiles: int, m_pad: int,
 # per-branch processed-tile totals across decide launches (the fallback
 # counter of the monotone dispatch; see monotone_counters_snapshot)
 _monotone_counters = {"dnc": 0, "plateau": 0, "chain": 0}
+
+# (b_pad, T_pad, m_pad, d1, mono, use_tabs, dtype) tuples already
+# launched this process: a first sighting means XLA is about to compile
+# a new variant, surfaced as a ``jit_cold_compile`` trace event
+_launch_keys_seen: set = set()
 
 
 def monotone_counters_reset() -> None:
@@ -1399,7 +1418,14 @@ def _decide_jobs(jobs: Sequence[Tuple[int, Job]], state: PriceState, dtype,
                          else base[bi] for bi in range(b_pad)]
             rows_init = jnp.stack(stackable)
             valid_tiles = jnp.asarray(valid0)
+            if _obs.ENABLED:
+                _obs.inc("decide.cache_tiles_valid",
+                         int(valid0[:len(chunk)].sum()))
+                _obs.inc("decide.cache_tiles_total", len(chunk) * n_tiles)
         else:
+            # cache-less launches stay out of the cache_tiles_* counters:
+            # the tracked hit rate measures how much of a RE-SOLVE the
+            # row cache saved, not how often the cache path ran at all
             rows_init, valid_tiles = _empty_cache(
                 b_pad, T_pad, n_tiles, m_pad, jnp.dtype(dtype).name)
         profiling = _profiling()
@@ -1416,6 +1442,18 @@ def _decide_jobs(jobs: Sequence[Tuple[int, Job]], state: PriceState, dtype,
         mono = 0
         if b_pad == 1 and m_pad <= _mono_band():
             mono = 2 if _mono_dnc() else 1
+        launch_key = (b_pad, T_pad, m_pad, d1, mono, use_tabs,
+                      jnp.dtype(dtype).name)
+        if launch_key not in _launch_keys_seen:
+            _launch_keys_seen.add(launch_key)
+            if _obs.ENABLED:
+                _obs.inc("decide.jit_cold_launches")
+                _obs.event("jit_cold_compile", b_pad=b_pad, T_pad=T_pad,
+                           m_pad=m_pad, d1=d1, mono=mono,
+                           use_tabs=use_tabs)
+        dp_span = _obs.span("decide.dp_sweep", lanes=len(chunk),
+                            T_pad=T_pad, m_pad=m_pad)
+        dp_span.__enter__()
         best_t, payoff, rows_buf, cost_buf, k0, k_end, paths = \
             _decide_tiled(sd, jd, tabs, rows_init, valid_tiles, T=T,
                           d1=d1, use_cache=True, mono=mono,
@@ -1438,6 +1476,14 @@ def _decide_jobs(jobs: Sequence[Tuple[int, Job]], state: PriceState, dtype,
         best_t, payoff, k0, k_end, pth = jax.device_get(
             (best_t, payoff, k0, k_end, paths))
         k0, k_end = int(k0), int(k_end)
+        dp_span.set(tiles_visited=k_end - k0, n_tiles=n_tiles)
+        dp_span.__exit__(None, None, None)
+        if _obs.ENABLED:
+            _obs.inc("decide.launches")
+            _obs.inc("decide.tiles_visited", k_end - k0)
+            _obs.inc("decide.tiles_horizon", n_tiles)
+            _obs.observe("decide.early_exit_frac",
+                         (k_end - k0) / max(n_tiles, 1))
         _monotone_counters["dnc"] += int(pth[0])
         _monotone_counters["plateau"] += int(pth[1])
         _monotone_counters["chain"] += int(pth[2])

@@ -81,6 +81,7 @@ from ..core.oasis import OASiS
 from ..core.pricing import PriceParams, price_params_from_jobs
 from ..core.types import ClusterSpec, Job, Schedule, SigmoidUtility
 from .fleet import DOWN_LOSSY, UP, FleetState, FleetTrace
+from .. import obs as _obslib
 
 ThroughputFn = Callable[[Job, int, int], float]
 
@@ -110,6 +111,9 @@ class SimResult:
     # re-admit (OASiS drops them; reactive baselines re-queue, never drop)
     preempted: int = 0
     preempt_dropped: int = 0
+    # worker-pool GPU fraction still alive at the end of the run (1.0 on
+    # churn-free runs — see FleetState.live_frac)
+    live_frac: float = 1.0
     arrivals: Dict[int, int] = dataclasses.field(default_factory=dict)
     # streaming runs only: host bytes of the price-state's rolling window
     # (the peak-RSS proxy the serving benchmark records); None episodic,
@@ -133,6 +137,7 @@ class SimResult:
             "canceled": self.canceled,
             "preempted": self.preempted,
             "preempt_dropped": self.preempt_dropped,
+            "live_frac": float(self.live_frac),
             "accept_rate": self.accepted / n,
             "completion_rate": self.completed / n,
             "total_utility": float(self.total_utility),
@@ -346,7 +351,8 @@ def run(cluster: ClusterSpec, jobs: Sequence[Job], scheduler: str = "oasis",
         throughput: Optional[ThroughputFn] = None,
         fleet: Optional[FleetTrace] = None,
         ckpt_interval: int = CKPT_INTERVAL,
-        policy: Optional[Callable[[DecisionPoint], object]] = None
+        policy: Optional[Callable[[DecisionPoint], object]] = None,
+        obs: Optional["_obslib.Obs"] = None
         ) -> SimResult:
     """Drive ``scheduler`` through the trace event-by-event.
 
@@ -355,6 +361,9 @@ def run(cluster: ClusterSpec, jobs: Sequence[Job], scheduler: str = "oasis",
     ``scheduler="learned"``) answers each per-arrival decision point —
     see :func:`decisions`; without one the scheduler decides for itself
     on the exact pre-existing code path (no generator yields).
+    ``obs`` installs a flight recorder (``repro.obs.Obs``) for the
+    duration of the run — spans and counters land in it and tracing is
+    torn back down on return; ``None`` (the default) records nothing.
 
     Example — the same four-job trace under a reactive baseline and
     OASiS (price params derived from the trace when not given)::
@@ -375,35 +384,37 @@ def run(cluster: ClusterSpec, jobs: Sequence[Job], scheduler: str = "oasis",
             "scheduler='learned' needs a policy — pass engine.run(..., "
             "policy=...) (see repro.rl.policy.LearnedDecider) or train one "
             "via repro.rl.train")
-    if policy is None:
-        if scheduler == "oasis":
-            return _exhaust(_drive_oasis(cluster, jobs, params, impl, check,
-                                         quantum, cancellations, throughput,
-                                         decide=False, fleet=fleet,
-                                         ckpt_interval=ckpt_interval))
-        return _exhaust(_drive_reactive(cluster, jobs, scheduler,
-                                        fixed_workers, check, quantum,
-                                        cancellations, throughput,
-                                        decide=False, fleet=fleet,
-                                        ckpt_interval=ckpt_interval))
-    gen = decisions(cluster, jobs, scheduler=scheduler, params=params,
-                    impl=impl, fixed_workers=fixed_workers, check=check,
-                    quantum=quantum, cancellations=cancellations,
-                    throughput=throughput, fleet=fleet,
-                    ckpt_interval=ckpt_interval)
-    policy_seconds: List[float] = []
-    try:
-        dp = next(gen)
-        while True:
-            t0 = time.perf_counter()
-            action = policy(dp)
-            policy_seconds.append(time.perf_counter() - t0)
-            dp = gen.send(action)
-    except StopIteration as e:
-        result = e.value
-        if not result.decision_seconds:     # reactive paths record none
-            result.decision_seconds = policy_seconds
-        return result
+    with _obslib.activate(obs):
+        if policy is None:
+            if scheduler == "oasis":
+                return _exhaust(_drive_oasis(cluster, jobs, params, impl,
+                                             check, quantum, cancellations,
+                                             throughput, decide=False,
+                                             fleet=fleet,
+                                             ckpt_interval=ckpt_interval))
+            return _exhaust(_drive_reactive(cluster, jobs, scheduler,
+                                            fixed_workers, check, quantum,
+                                            cancellations, throughput,
+                                            decide=False, fleet=fleet,
+                                            ckpt_interval=ckpt_interval))
+        gen = decisions(cluster, jobs, scheduler=scheduler, params=params,
+                        impl=impl, fixed_workers=fixed_workers, check=check,
+                        quantum=quantum, cancellations=cancellations,
+                        throughput=throughput, fleet=fleet,
+                        ckpt_interval=ckpt_interval)
+        policy_seconds: List[float] = []
+        try:
+            dp = next(gen)
+            while True:
+                t0 = time.perf_counter()
+                action = policy(dp)
+                policy_seconds.append(time.perf_counter() - t0)
+                dp = gen.send(action)
+        except StopIteration as e:
+            result = e.value
+            if not result.decision_seconds:  # reactive decide-paths: none
+                result.decision_seconds = policy_seconds
+            return result
 
 
 # ---------------------------------------------------------------------------
@@ -498,6 +509,8 @@ def _drive_oasis_gen(cluster: ClusterSpec, jobs: Sequence[Job],
     for t in sorted(slots):
         if churn:
             trans = fs.step(t)
+            _cs = _obslib.span("churn_step", t=t, transitions=len(trans))
+            _cs.__enter__()
             # recoveries first: restored headroom is visible to this
             # slot's re-admissions and arrivals
             for pool, srv, kind in trans:
@@ -524,6 +537,8 @@ def _drive_oasis_gen(cluster: ClusterSpec, jobs: Sequence[Job],
                 osched.state.release(jcur, tail_w, tail_z)
                 osched.total_utility -= sched.utility
                 n_preempted += 1
+                if _obslib.ENABLED:
+                    _obslib.inc("engine.preemptions")
                 # checkpoint boundary: lossy failures roll back to the
                 # last global ckpt_interval multiple, graceful drains
                 # checkpoint at drain start (no work lost)
@@ -552,6 +567,8 @@ def _drive_oasis_gen(cluster: ClusterSpec, jobs: Sequence[Job],
             for pool, srv, kind in trans:
                 if kind != UP:
                     blocked_gpu += osched.state.block_server(pool, srv, t)
+            _cs.set(victims=len(victims), readmits=len(readmit))
+            _cs.__exit__(None, None, None)
             for job_r in readmit:
                 ljobs[job_r.jid] = job_r
                 if decide:
@@ -567,6 +584,8 @@ def _drive_oasis_gen(cluster: ClusterSpec, jobs: Sequence[Job],
                     sched = osched.on_arrival(job_r)
                 if sched is None:
                     n_dropped += 1
+                    if _obslib.ENABLED:
+                        _obslib.inc("engine.preempt_dropped")
         for jid in cancel_slot.get(t, ()):
             sched = osched.accepted.get(jid)
             if sched is None or sched.finish < t or jid in canceled:
@@ -582,6 +601,8 @@ def _drive_oasis_gen(cluster: ClusterSpec, jobs: Sequence[Job],
         if churn:
             for job in batch:
                 ljobs[job.jid] = job
+        if _obslib.ENABLED and batch:
+            _obslib.inc("engine.arrivals", len(batch))
         if decide:
             # stepwise: propose at current prices, let the decider gate
             # the commitment.  Sequential per-job decisions are exactly
@@ -595,8 +616,9 @@ def _drive_oasis_gen(cluster: ClusterSpec, jobs: Sequence[Job],
                     live_frac=fs.live_frac if churn else 1.0)
                 nw, _ = _as_counts(action)
                 osched._resolve(job, cand if nw > 0 else None)
-        else:
-            osched.on_arrivals(batch)
+        elif batch:
+            with _obslib.span("arrival_burst", t=t, n=len(batch)):
+                osched.on_arrivals(batch)
         if check:
             # whole-state comparison on the price-state's own books — no
             # per-schedule Python walk and no device→host churn on the
@@ -656,6 +678,7 @@ def _drive_oasis_gen(cluster: ClusterSpec, jobs: Sequence[Job],
                      utilization=utilization,
                      canceled=len(canceled),
                      preempted=n_preempted, preempt_dropped=n_dropped,
+                     live_frac=fs.live_frac if churn else 1.0,
                      arrivals={j.jid: j.arrival for j in jobs
                                if j.arrival < T})
 
@@ -731,6 +754,11 @@ def _drive_reactive(cluster: ClusterSpec, jobs: Sequence[Job], scheduler: str,
     ckpt_rem: Dict[int, float] = {}
     ck = max(int(ckpt_interval), 1)
     n_preempted = 0
+    # reactive per-event replan wall clocks (the repacks) — the
+    # apples-to-apples counterpart of OASiS's decision_seconds.  In
+    # stepwise (decide) mode the list stays empty so ``run`` can fill it
+    # with the caller policy's inference latency instead.
+    decision_seconds: List[float] = []
 
     # ``dirty`` gating: the scheduler tells us whether the last event can
     # change its next repack (arrivals and repack-relevant completions
@@ -763,6 +791,9 @@ def _drive_reactive(cluster: ClusterSpec, jobs: Sequence[Job], scheduler: str,
         if churn:
             trans = fs.step(t)
             if trans:
+                _cs = _obslib.span("churn_step", t=t,
+                                   transitions=len(trans))
+                _cs.__enter__()
                 for pool, srv, kind in trans:
                     if kind == UP:
                         continue
@@ -783,11 +814,16 @@ def _drive_reactive(cluster: ClusterSpec, jobs: Sequence[Job], scheduler: str,
                         rsched.preempt(jid, t)
                         cur_alloc.pop(jid, None)
                         n_preempted += 1
+                        if _obslib.ENABLED:
+                            _obslib.inc("engine.preemptions")
                 # repack over the survivors: victims stay enrolled, so
                 # the scheduler's own queue/resume order re-places them
                 rsched.set_capacity(fs.worker_caps, fs.ps_caps)
                 stale = True
+                _cs.__exit__(None, None, None)
         arrivals_now = by_slot.pop(t, ())
+        if _obslib.ENABLED and arrivals_now:
+            _obslib.inc("engine.arrivals", len(arrivals_now))
         if decide and arrivals_now:
             # one usage snapshot for the whole arrival burst: admissions
             # do not change the previous allocation until the repack,
@@ -818,7 +854,8 @@ def _drive_reactive(cluster: ClusterSpec, jobs: Sequence[Job], scheduler: str,
                 remaining[job.jid] = job.total_work_slots
             else:
                 n_rejected += 1
-        for jid in cancel_slot.get(t, ()):
+        cancels_now = cancel_slot.get(t, ())
+        for jid in cancels_now:
             if jid in remaining:                # admitted, still running
                 rsched.on_completion(jid, t)    # drop from pool, no utility
                 del remaining[jid]
@@ -828,7 +865,12 @@ def _drive_reactive(cluster: ClusterSpec, jobs: Sequence[Job], scheduler: str,
                     ckpt_rem.pop(jid, None)
                 stale = True
         if rsched.dirty:
-            cur_alloc = dict(rsched.step(t))
+            t0_rp = time.perf_counter()
+            with _obslib.span("repack", t=t, scheduler=scheduler,
+                              n_live=len(remaining)):
+                cur_alloc = dict(rsched.step(t))
+            if not decide:
+                decision_seconds.append(time.perf_counter() - t0_rp)
             rsched.dirty = False
             stale = True
             if check:       # a pruned reuse stays feasible by construction
@@ -837,12 +879,19 @@ def _drive_reactive(cluster: ClusterSpec, jobs: Sequence[Job], scheduler: str,
                                  fs.worker_caps, fs.ps_caps)
                 else:
                     _check_alloc(cluster, jmap, cur_alloc)
+        elif _obslib.ENABLED and (arrivals_now or cancels_now
+                                  or (churn and trans)):
+            # an event landed but the scheduler proved the last repack
+            # still optimal — the engine skipped a full replan
+            _obslib.inc("repack.dirty_skips")
         if stale:
             ids = list(cur_alloc)
             counts = np.array([float(cur_alloc[j][0].sum()) for j in ids])
             plan_gpu = float(counts @ np.array(
                 [jmap[j].worker_res[0] for j in ids])) if ids else 0.0
             stale = False
+        _ff = _obslib.span("ffwd", t=t, n_live=len(ids))
+        _ff.__enter__()
         next_ev = events[ei] if ei < len(events) else T
         horizon = min(next_ev, T) - t
 
@@ -911,13 +960,20 @@ def _drive_reactive(cluster: ClusterSpec, jobs: Sequence[Job], scheduler: str,
                 ckpt_rem.pop(jid, None)
             stale = True
         t += span
+        _ff.set(slots=span, completed=len(done_now))
+        _ff.__exit__(None, None, None)
+        if _obslib.ENABLED:
+            _obslib.inc("engine.ffwd_slots", span)
+            if done_now:
+                _obslib.inc("engine.completions", len(done_now))
     return SimResult(name=scheduler, total_utility=total_utility,
                      accepted=len(admitted), completed=len(completion),
                      n_jobs=len(jobs), completion=completion,
                      target_gap=_target_gaps(jmap, completion),
-                     decision_seconds=[],
+                     decision_seconds=decision_seconds,
                      utilization=util_sum / T if T else 0.0,
                      canceled=len(canceled), preempted=n_preempted,
+                     live_frac=fs.live_frac if churn else 1.0,
                      arrivals={j.jid: j.arrival for j in src.values()
                                if j.arrival < T})
 
@@ -988,7 +1044,8 @@ def run_stream(cluster: ClusterSpec, jobs: Iterable[Job],
                quantum: Optional[int] = None, warmup_sample: int = 256,
                fleet: Optional[FleetTrace] = None,
                ckpt_interval: int = CKPT_INTERVAL,
-               policy: Optional[Callable[[DecisionPoint], object]] = None
+               policy: Optional[Callable[[DecisionPoint], object]] = None,
+               obs: Optional["_obslib.Obs"] = None
                ) -> SimResult:
     """Drive ``scheduler`` over an open-ended arrival stream.
 
@@ -1018,39 +1075,39 @@ def run_stream(cluster: ClusterSpec, jobs: Iterable[Job],
             "scheduler='learned' needs a policy — pass engine.run_stream("
             "..., policy=...) (see repro.rl.policy.LearnedDecider) or "
             "train one via repro.rl.train")
-    if policy is None:
-        if scheduler == "oasis":
-            if params is None:
-                it = iter(jobs)
-                sample = list(itertools.islice(it, warmup_sample))
-                params = stream_price_params(sample, cluster, window)
-                jobs = itertools.chain(sample, it)
-            return _exhaust(_drive_oasis_stream(cluster, jobs, params, impl,
-                                                window, check, quantum,
-                                                decide=False, fleet=fleet,
-                                                ckpt_interval=ckpt_interval))
-        return _exhaust(_drive_reactive_stream(cluster, jobs, scheduler,
-                                               fixed_workers, check, quantum,
-                                               decide=False, fleet=fleet,
-                                               ckpt_interval=ckpt_interval))
-    gen = stream_decisions(cluster, jobs, scheduler=scheduler, params=params,
-                           impl=impl, window=window,
-                           fixed_workers=fixed_workers, check=check,
-                           quantum=quantum, warmup_sample=warmup_sample,
-                           fleet=fleet, ckpt_interval=ckpt_interval)
-    policy_seconds: List[float] = []
-    try:
-        dp = next(gen)
-        while True:
-            t0 = time.perf_counter()
-            action = policy(dp)
-            policy_seconds.append(time.perf_counter() - t0)
-            dp = gen.send(action)
-    except StopIteration as e:
-        result = e.value
-        if not result.decision_seconds:
-            result.decision_seconds = policy_seconds
-        return result
+    with _obslib.activate(obs):
+        if policy is None:
+            if scheduler == "oasis":
+                if params is None:
+                    it = iter(jobs)
+                    sample = list(itertools.islice(it, warmup_sample))
+                    params = stream_price_params(sample, cluster, window)
+                    jobs = itertools.chain(sample, it)
+                return _exhaust(_drive_oasis_stream(
+                    cluster, jobs, params, impl, window, check, quantum,
+                    decide=False, fleet=fleet,
+                    ckpt_interval=ckpt_interval))
+            return _exhaust(_drive_reactive_stream(
+                cluster, jobs, scheduler, fixed_workers, check, quantum,
+                decide=False, fleet=fleet, ckpt_interval=ckpt_interval))
+        gen = stream_decisions(cluster, jobs, scheduler=scheduler,
+                               params=params, impl=impl, window=window,
+                               fixed_workers=fixed_workers, check=check,
+                               quantum=quantum, warmup_sample=warmup_sample,
+                               fleet=fleet, ckpt_interval=ckpt_interval)
+        policy_seconds: List[float] = []
+        try:
+            dp = next(gen)
+            while True:
+                t0 = time.perf_counter()
+                action = policy(dp)
+                policy_seconds.append(time.perf_counter() - t0)
+                dp = gen.send(action)
+        except StopIteration as e:
+            result = e.value
+            if not result.decision_seconds:
+                result.decision_seconds = policy_seconds
+            return result
 
 
 def _drive_oasis_stream(cluster: ClusterSpec, jobs: Iterable[Job],
@@ -1112,7 +1169,8 @@ def _drive_oasis_stream_gen(cluster: ClusterSpec, jobs: Iterable[Job],
             while nxt is not None and int(nxt.arrival) == t:
                 batch.append(nxt)
                 nxt = next(it, None)
-        state.advance(t)
+        with _obslib.span("stream_advance", t=t):
+            state.advance(t)
         for jid in [j for j, fin in active.items() if fin < t]:
             del active[jid]
             osched.accepted.pop(jid, None)
@@ -1126,6 +1184,8 @@ def _drive_oasis_stream_gen(cluster: ClusterSpec, jobs: Iterable[Job],
         if churn and tf is not None and tf == t:
             fi += 1
             trans = fs.step(t)
+            _cs = _obslib.span("churn_step", t=t, transitions=len(trans))
+            _cs.__enter__()
             for pool, srv, kind in trans:
                 if kind == UP:
                     blocked_gpu -= state.unblock_server(pool, srv, 0)
@@ -1159,6 +1219,8 @@ def _drive_oasis_stream_gen(cluster: ClusterSpec, jobs: Iterable[Job],
                 state.release(jcur, tail_w, tail_z)
                 osched.total_utility -= sched.utility
                 n_preempted += 1
+                if _obslib.ENABLED:
+                    _obslib.inc("engine.preemptions")
                 del active[jid]
                 cb = (t // ck) * ck if kind == DOWN_LOSSY else t
                 delivered = sum(float(y.sum())
@@ -1181,6 +1243,8 @@ def _drive_oasis_stream_gen(cluster: ClusterSpec, jobs: Iterable[Job],
             for pool, srv, kind in trans:
                 if kind != UP:
                     blocked_gpu += state.block_server(pool, srv, 0)
+            _cs.set(victims=len(victims), readmits=len(readmit))
+            _cs.__exit__(None, None, None)
             for jid, loc in readmit:
                 ljobs[jid] = loc
                 if decide:
@@ -1209,6 +1273,8 @@ def _drive_oasis_stream_gen(cluster: ClusterSpec, jobs: Iterable[Job],
                     # the shrunken fleet can't fit it: the job departs
                     # with no utility (subtracted above)
                     n_dropped += 1
+                    if _obslib.ENABLED:
+                        _obslib.inc("engine.preempt_dropped")
                     n_accepted -= 1
                     n_rejected += 1
                     completion.pop(jid, None)
@@ -1222,6 +1288,8 @@ def _drive_oasis_stream_gen(cluster: ClusterSpec, jobs: Iterable[Job],
             jmap[j.jid] = j
             arrivals[j.jid] = int(j.arrival)
         n_jobs += len(batch)
+        if _obslib.ENABLED and batch:
+            _obslib.inc("engine.arrivals", len(batch))
         if decide:
             for job, loc in zip(batch, local):
                 cand = osched.propose(loc)
@@ -1246,9 +1314,10 @@ def _drive_oasis_stream_gen(cluster: ClusterSpec, jobs: Iterable[Job],
                         admit_origin[job.jid] = t
                 else:
                     n_rejected += 1
-        else:
-            for job, loc, sched in zip(batch, local,
-                                       osched.on_arrivals(local)):
+        elif batch:
+            with _obslib.span("arrival_burst", t=t, n=len(batch)):
+                scheds = osched.on_arrivals(local)
+            for job, loc, sched in zip(batch, local, scheds):
                 if sched is not None:
                     n_accepted += 1
                     active[job.jid] = t + sched.finish
@@ -1276,6 +1345,7 @@ def _drive_oasis_stream_gen(cluster: ClusterSpec, jobs: Iterable[Job],
                      decision_seconds=osched.decision_seconds,
                      utilization=gpu_slots / (total_gpu * t_end),
                      preempted=n_preempted, preempt_dropped=n_dropped,
+                     live_frac=fs.live_frac if churn else 1.0,
                      arrivals=arrivals, window_bytes=state.window_bytes)
 
 
@@ -1310,6 +1380,9 @@ def _drive_reactive_stream(cluster: ClusterSpec, jobs: Iterable[Job],
     ckpt_rem: Dict[int, float] = {}
     ck = max(int(ckpt_interval), 1)
     n_preempted = 0
+    # per-event repack wall clocks (see _drive_reactive); empty in
+    # stepwise mode so the policy's latency takes the slot instead
+    decision_seconds: List[float] = []
 
     it = iter(jobs)
     nxt = next(it, None)
@@ -1318,24 +1391,27 @@ def _drive_reactive_stream(cluster: ClusterSpec, jobs: Iterable[Job],
         if churn:
             changed = False
             while fi < len(fe) and fe[fi] <= t:
-                for pool, srv, kind in fs.step(fe[fi]):
-                    if kind == UP:
-                        continue
-                    if pool == "worker":
-                        vs = [jid for jid, (y, _) in cur_alloc.items()
-                              if y[srv] > 0]
-                    else:
-                        vs = [jid for jid, (_, z) in cur_alloc.items()
-                              if z is not None and z[srv] > 0]
-                    for jid in vs:
-                        if kind == DOWN_LOSSY:
-                            remaining[jid] = ckpt_rem.get(
-                                jid, jmap[jid].total_work_slots)
+                with _obslib.span("churn_step", t=fe[fi]):
+                    for pool, srv, kind in fs.step(fe[fi]):
+                        if kind == UP:
+                            continue
+                        if pool == "worker":
+                            vs = [jid for jid, (y, _) in cur_alloc.items()
+                                  if y[srv] > 0]
                         else:
-                            ckpt_rem[jid] = remaining[jid]
-                        rsched.preempt(jid, t)
-                        cur_alloc.pop(jid, None)
-                        n_preempted += 1
+                            vs = [jid for jid, (_, z) in cur_alloc.items()
+                                  if z is not None and z[srv] > 0]
+                        for jid in vs:
+                            if kind == DOWN_LOSSY:
+                                remaining[jid] = ckpt_rem.get(
+                                    jid, jmap[jid].total_work_slots)
+                            else:
+                                ckpt_rem[jid] = remaining[jid]
+                            rsched.preempt(jid, t)
+                            cur_alloc.pop(jid, None)
+                            n_preempted += 1
+                            if _obslib.ENABLED:
+                                _obslib.inc("engine.preemptions")
                 changed = True
                 fi += 1
             if changed:
@@ -1345,6 +1421,8 @@ def _drive_reactive_stream(cluster: ClusterSpec, jobs: Iterable[Job],
         while nxt is not None and int(nxt.arrival) <= t:
             burst.append(_with_quantum(nxt, quantum))
             nxt = next(it, None)
+        if _obslib.ENABLED and burst:
+            _obslib.inc("engine.arrivals", len(burst))
         if decide and burst:
             usage = _pool_usage(cur_alloc, jmap, cluster)
         for job in burst:
@@ -1374,7 +1452,12 @@ def _drive_reactive_stream(cluster: ClusterSpec, jobs: Iterable[Job],
             else:
                 n_rejected += 1
         if rsched.dirty:
-            cur_alloc = dict(rsched.step(t))
+            t0_rp = time.perf_counter()
+            with _obslib.span("repack", t=t, scheduler=scheduler,
+                              n_live=len(remaining)):
+                cur_alloc = dict(rsched.step(t))
+            if not decide:
+                decision_seconds.append(time.perf_counter() - t0_rp)
             rsched.dirty = False
             stale = True
             if check:
@@ -1383,6 +1466,8 @@ def _drive_reactive_stream(cluster: ClusterSpec, jobs: Iterable[Job],
                                  fs.worker_caps, fs.ps_caps)
                 else:
                     _check_alloc(cluster, jmap, cur_alloc)
+        elif _obslib.ENABLED and (burst or (churn and changed)):
+            _obslib.inc("repack.dirty_skips")
         if stale:
             ids = list(cur_alloc)
             counts = np.array([float(cur_alloc[j][0].sum()) for j in ids])
@@ -1433,11 +1518,16 @@ def _drive_reactive_stream(cluster: ClusterSpec, jobs: Iterable[Job],
                 ckpt_rem.pop(jid, None)
             stale = True
         t += span
+        if _obslib.ENABLED:
+            _obslib.inc("engine.ffwd_slots", span)
+            if done_now:
+                _obslib.inc("engine.completions", len(done_now))
     return SimResult(name=scheduler, total_utility=total_utility,
                      accepted=len(admitted), completed=len(completion),
                      n_jobs=n_jobs, completion=completion,
                      target_gap=_target_gaps(jmap, completion),
-                     decision_seconds=[],
+                     decision_seconds=decision_seconds,
                      utilization=util_sum / max(t, 1),
                      preempted=n_preempted,
+                     live_frac=fs.live_frac if churn else 1.0,
                      arrivals=arrivals, window_bytes=0)

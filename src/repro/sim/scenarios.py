@@ -188,11 +188,13 @@ class ScenarioResult:
     window_bytes: Optional[int] = None
     n_jobs: Optional[int] = None
     # churn-scenario extras: utility retention vs. the same scheduler's
-    # churn-free run (higher is better; 1.0 = unhurt) and the preemption
-    # counters from the fleet-churn engine
+    # churn-free run (higher is better; 1.0 = unhurt), the preemption
+    # counters from the fleet-churn engine, and the end-of-run surviving
+    # worker-GPU fraction (SimResult.live_frac)
     retention: Optional[float] = None
     preempted: Optional[int] = None
     preempt_dropped: Optional[int] = None
+    live_frac: Optional[float] = None
 
 
 def _row(scenario: str, variant: str, r: engine.SimResult,
@@ -447,7 +449,8 @@ def run_churn(seed: int = 0, quick: bool = False,
             ret = r.total_utility / anchor if anchor > 0 else 1.0
             rows.append(dataclasses.replace(
                 row, retention=ret, preempted=r.preempted,
-                preempt_dropped=r.preempt_dropped))
+                preempt_dropped=r.preempt_dropped,
+                live_frac=r.live_frac))
     return rows
 
 

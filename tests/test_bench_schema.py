@@ -1,4 +1,4 @@
-"""benchmarks/run.py bench_decision schema validation (v4; v2/v3
+"""benchmarks/run.py bench_decision schema validation (v5; v2..v4
 baselines read compatibly): a malformed section must abort the write
 instead of poisoning the committed baseline (it used to surface only
 later, via check_regression)."""
@@ -11,7 +11,7 @@ from benchmarks.run import _merge_json, validate_tracked
 
 def _payload():
     return {
-        "schema": "bench_decision/v4",
+        "schema": "bench_decision/v5",
         "platform": "test", "python": "3",
         "decision_seconds": {
             "jax": {"p50": 0.01, "p95": 0.02, "mean": 0.012},
@@ -52,6 +52,12 @@ def _payload():
                "utility": {"learned": 500.0, "fifo": 170.0},
                "per_seed": {"learned": {"5": 900.0},
                             "fifo": {"5": 300.0}}},
+        "obs": {"T": 192, "H": 10, "K": 10, "n_jobs": 64, "quick": False,
+                "counters": {"decide.decisions": 64,
+                             "price.device_uploads": 1},
+                "derived": {"row_cache_hit_rate": 0.03,
+                            "early_exit_frac": 0.4,
+                            "device_uploads": 1, "preempted": 2}},
     }
 
 
@@ -60,21 +66,32 @@ def test_valid_payload_passes():
 
 
 def test_v2_schema_still_accepted():
-    """Committed v2 baselines (without the serving/churn sections) must
-    keep validating — the v3/v4 bumps are read-compatible."""
+    """Committed v2 baselines (without the serving/churn/obs sections)
+    must keep validating — the v3..v5 bumps are read-compatible."""
     p = _payload()
     p["schema"] = "bench_decision/v2"
     del p["serving"]
     del p["churn"]
+    del p["obs"]
     assert validate_tracked(p) == []
 
 
 def test_v3_schema_still_accepted():
-    """Committed v3 baselines (without the churn sections) must keep
-    validating — the v4 bump is read-compatible."""
+    """Committed v3 baselines (without the churn/obs sections) must keep
+    validating — the v4/v5 bumps are read-compatible."""
     p = _payload()
     p["schema"] = "bench_decision/v3"
     del p["churn"]
+    del p["obs"]
+    assert validate_tracked(p) == []
+
+
+def test_v4_schema_still_accepted():
+    """Committed v4 baselines (without the obs section) must keep
+    validating — the v5 bump is read-compatible."""
+    p = _payload()
+    p["schema"] = "bench_decision/v4"
+    del p["obs"]
     assert validate_tracked(p) == []
 
 
@@ -151,14 +168,29 @@ def test_churn_section_checked():
     assert validate_tracked(p) == []
 
 
+def test_obs_section_checked():
+    p = _payload()
+    p["obs"]["T"] = "192"
+    assert any("obs.T" in x for x in validate_tracked(p))
+    p = _payload()
+    p["obs"]["quick"] = "no"
+    assert any("obs.quick" in x for x in validate_tracked(p))
+    p = _payload()
+    p["obs"]["counters"]["decide.decisions"] = float("nan")
+    assert any("obs.counters" in x for x in validate_tracked(p))
+    p = _payload()
+    p["obs"]["derived"] = [0.03]
+    assert any("obs.derived" in x for x in validate_tracked(p))
+
+
 def test_corrupted_non_dict_sections_report_instead_of_raising():
     """The baseline file on disk can be arbitrarily corrupted (that is
     the validator's whole job) — a non-dict section must come back as a
     problem, never as an AttributeError."""
     for bad in ("corrupted", [1], 3):
         for sec in ("decision_seconds", "sim_v2", "sim_scale", "serving",
-                    "churn", "rl"):
-            p = {"schema": "bench_decision/v4", sec: bad}
+                    "churn", "rl", "obs"):
+            p = {"schema": "bench_decision/v5", sec: bad}
             assert any(sec in x for x in validate_tracked(p))
     p = _payload()
     p["rl"]["per_seed"] = [1]
@@ -196,23 +228,24 @@ def test_merge_json_merges_and_preserves_sections(tmp_path):
     _merge_json(str(path), {"rl": _payload()["rl"]})
     doc = json.loads(path.read_text())
     assert "sim_scale" in doc and "rl" in doc     # sections accumulate
-    assert doc["schema"] == "bench_decision/v4"
+    assert doc["schema"] == "bench_decision/v5"
 
 
 def test_merge_json_upgrades_old_baselines(tmp_path):
-    """Merging fresh sections into a committed v2/v3 file keeps its
-    sections and rewrites the schema tag as v4."""
+    """Merging fresh sections into a committed v2..v4 file keeps its
+    sections and rewrites the schema tag as v5."""
     path = tmp_path / "bench.json"
     v2 = _payload()
     v2["schema"] = "bench_decision/v2"
     del v2["serving"]
     del v2["churn"]
+    del v2["obs"]
     path.write_text(json.dumps(v2))
     _merge_json(str(path), {"serving": _payload()["serving"]})
     doc = json.loads(path.read_text())
-    assert doc["schema"] == "bench_decision/v4"
+    assert doc["schema"] == "bench_decision/v5"
     assert "sim_scale" in doc and "serving" in doc
-    _merge_json(str(path), {"churn": _payload()["churn"]})
+    _merge_json(str(path), {"obs": _payload()["obs"]})
     doc = json.loads(path.read_text())
-    assert doc["schema"] == "bench_decision/v4"
-    assert "serving" in doc and "churn" in doc
+    assert doc["schema"] == "bench_decision/v5"
+    assert "serving" in doc and "obs" in doc
